@@ -1,0 +1,98 @@
+"""Roofline table builder: reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and renders the EXPERIMENTS.md §Roofline
+table + CSV rows for benchmarks/run.py."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = pathlib.Path("/root/repo/results/dryrun")
+
+
+def load_records(directory: pathlib.Path = DRYRUN_DIR, tag: str = "baseline") -> List[dict]:
+    recs = []
+    for f in sorted(directory.glob(f"*__{tag}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def _fmt_s(x: Optional[float]) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def bandwidth_fraction(r: dict) -> Optional[float]:
+    """For memory-bound steps (decode especially): fraction of per-device HLO
+    byte traffic that is irreducible input state (params + caches). 1.0 would
+    mean every byte moved was a parameter/cache byte."""
+    args = (r.get("memory") or {}).get("argument_bytes")
+    per_dev = (r.get("cost") or {}).get("bytes_accessed")
+    if not args or not per_dev:
+        return None
+    return min(float(args) / float(per_dev), 1.0)
+
+
+def markdown_table(recs: List[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MODEL_FLOPS/HLO | roofline frac | BW frac | per-dev peak mem |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIPPED | — | — | — | "
+                f"{r.get('skip_reason', '')[:40]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {}).get("peak_bytes") or 0
+        bw = bandwidth_fraction(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(t['compute_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"**{t['bottleneck']}** | {t.get('useful_flops_ratio', 0):.2f} | "
+            f"{t.get('roofline_fraction', 0):.3f} | "
+            f"{'-' if bw is None else f'{bw:.2f}'} | {mem / 1e9:.1f}GB |"
+        )
+    return "\n".join(lines)
+
+
+def csv_rows(recs: List[dict]) -> List[tuple]:
+    rows = []
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "ok":
+            t = r["roofline"]
+            dominant = max(t["compute_s"], t["memory_s"], t["collective_s"])
+            rows.append((name, dominant * 1e6,
+                         f"bottleneck={t['bottleneck']} frac={t.get('roofline_fraction', 0):.3f}"))
+        else:
+            rows.append((name, 0.0, r["status"]))
+    return rows
+
+
+def summarize(recs: List[dict]) -> Dict[str, int]:
+    out = {"ok": 0, "error": 0, "skipped": 0}
+    for r in recs:
+        out[r["status"]] = out.get(r["status"], 0) + 1
+    return out
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(markdown_table(recs, "16x16"))
+    print()
+    print(markdown_table(recs, "2x16x16"))
+    print(summarize(recs))

@@ -1,0 +1,65 @@
+"""Benchmark harness — one function per paper table/figure plus the dry-run
+roofline table. Prints ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small observation set, skip CV/MLP (CI mode)")
+    ap.add_argument("--only", default=None, help="run a single benchmark group")
+    args = ap.parse_args()
+
+    from . import paper_experiments as pe
+    from . import roofline
+
+    groups = {
+        "dataset": pe.bench_dataset,
+        "pca": pe.bench_pca,
+        "model_comparison": pe.bench_model_comparison,
+        "feature_importance": pe.bench_feature_importance,
+        "util_impact": pe.bench_util_impact,
+        "etl": pe.bench_etl,
+        "recommendation": pe.bench_recommendation,
+        "extensions": pe.bench_extensions,
+        "kernels": pe.bench_kernels,
+    }
+    if args.only:
+        groups = {args.only: groups[args.only]} if args.only in groups else {}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for gname, fn in groups.items():
+        try:
+            for name, us, derived in fn(args.fast):
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{gname},0,ERROR {type(e).__name__}: {e}", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline rows from the dry-run artifacts (if present)
+    if args.only in (None, "roofline"):
+        try:
+            recs = roofline.load_records()
+            for name, us, derived in roofline.csv_rows(recs):
+                print(f"{name},{us:.1f},{derived}")
+            s = roofline.summarize(recs)
+            print(f"roofline_summary,0,{s}")
+        except Exception as e:  # noqa: BLE001
+            print(f"roofline,0,ERROR {e}")
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

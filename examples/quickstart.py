@@ -1,0 +1,52 @@
+"""Quickstart: the paper's workflow end-to-end in ~1 minute.
+
+1. Benchmark the real storage stack of this machine (fast subset).
+2. Fit the model zoo (JAX GBT = the paper's XGBoost winner).
+3. Predict throughput for unseen configurations and print the top
+   recommendations — the paper's "days of trial-and-error -> minutes".
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (
+    FEATURE_NAMES,
+    ConfigSpace,
+    IOPerformancePredictor,
+    rank_features,
+    recommend,
+)
+from repro.data.dataset import collect_observations, observations_to_columns
+
+
+def main():
+    print("== 1. collecting I/O observations (fast subset) ==")
+    rows = collect_observations(fast=True, cache=None)
+    cols = observations_to_columns(rows)
+    print(f"   {len(rows)} observations, target range "
+          f"{cols['target_throughput'].min():.1f}..{cols['target_throughput'].max():.0f} MB/s")
+
+    print("== 2. fitting the model zoo ==")
+    pred = IOPerformancePredictor(model="xgboost")
+    reports = pred.evaluate_zoo(cols, models=["linear", "random_forest", "xgboost"],
+                                with_cv=False)
+    for name, r in sorted(reports.items(), key=lambda kv: -kv[1].test_r2):
+        print(f"   {name:14s} test R2={r.test_r2:.4f} mean%err={r.mean_pct_err:.1f}")
+
+    print("== 3. feature importance (paper Fig 8) ==")
+    pred.fit(cols)
+    for name, v in rank_features(pred.feature_importances_, FEATURE_NAMES)[:5]:
+        print(f"   {name:28s} {v:.3f}")
+
+    print("== 4. configuration recommendation (paper §5.2) ==")
+    context = {"throughput_mb_s": 500.0, "file_size_mb": 64.0, "iops": 2e4}
+    space = ConfigSpace()
+    top = recommend(pred, context, space, top_k=5)
+    print(f"   scored {len(space.candidates())} candidate configs")
+    for t in top:
+        print(f"   predicted {t['predicted_throughput_mb_s']:8.1f} MB/s  <- "
+              f"batch={t['batch_size']} workers={t['num_workers']} "
+              f"block={t['block_kb']}KB prefetch={t['prefetch_depth']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro.checkpoint — async, atomic, retention-managed checkpointing."""
+
+from .manager import CheckpointManager, load_latest, restore_tree, save_tree  # noqa: F401

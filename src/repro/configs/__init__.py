@@ -1,0 +1,86 @@
+"""repro.configs — architecture registry, shapes, and input-spec builders."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import get_api
+from ..models.config import ModelConfig
+from ..parallel.spec import abstract_params
+from .archs import ARCHS, LONG_CONTEXT_ARCHS, reduced, shape_supported
+from .shapes import SHAPES, ShapeSpec
+
+__all__ = [
+    "ARCHS", "SHAPES", "LONG_CONTEXT_ARCHS",
+    "get_config", "reduced", "shape_supported", "input_specs", "list_cells",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of (arch × shape).
+
+    Returns {"kind", "inputs": dict of ShapeDtypeStructs, "cache": specs or None}.
+    No device allocation happens here.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    api = get_api(cfg)
+
+    def tok(*sh):
+        return jax.ShapeDtypeStruct(sh, i32)
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            inputs = {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+                "tokens": tok(B, cfg.dec_len),
+                "labels": tok(B, cfg.dec_len),
+            }
+        elif cfg.family == "vlm":
+            text = S - cfg.prefix_len
+            inputs = {
+                "prefix_embeds": jax.ShapeDtypeStruct((B, cfg.prefix_len, cfg.d_model), cfg.dtype),
+                "tokens": tok(B, text),
+                "labels": tok(B, text),
+            }
+        else:
+            inputs = {"tokens": tok(B, S), "labels": tok(B, S)}
+        return {"kind": "train", "inputs": inputs, "cache": None}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            inputs = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)}
+        elif cfg.family == "vlm":
+            text = S - cfg.prefix_len
+            inputs = {
+                "prefix_embeds": jax.ShapeDtypeStruct((B, cfg.prefix_len, cfg.d_model), cfg.dtype),
+                "tokens": tok(B, text),
+            }
+        else:
+            inputs = {"tokens": tok(B, S)}
+        return {"kind": "prefill", "inputs": inputs, "cache": None}
+
+    # decode: one new token against a cache of S
+    cache_specs = api.init_cache_specs(cfg, B, S)
+    cache = abstract_params(cache_specs)
+    inputs = {"token": tok(B, 1), "pos": jax.ShapeDtypeStruct((), i32)}
+    return {"kind": "decode", "inputs": inputs, "cache": cache, "cache_specs": cache_specs}
+
+
+def list_cells() -> list:
+    """All 40 (arch × shape) cells with skip annotations."""
+    cells = []
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, why = shape_supported(cfg, sname)
+            cells.append({"arch": aname, "shape": sname, "run": ok, "skip_reason": why})
+    return cells

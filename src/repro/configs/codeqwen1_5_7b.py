@@ -1,0 +1,9 @@
+"""Config module for --arch codeqwen_7b (see archs.py for dims)."""
+from .archs import CODEQWEN_7B as CONFIG  # noqa: F401
+from .archs import reduced
+
+def get_config():
+    return CONFIG
+
+def get_reduced_config():
+    return reduced(CONFIG)

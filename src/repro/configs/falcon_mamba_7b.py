@@ -1,0 +1,9 @@
+"""Config module for --arch falcon_mamba_7b (see archs.py for dims)."""
+from .archs import FALCON_MAMBA_7B as CONFIG  # noqa: F401
+from .archs import reduced
+
+def get_config():
+    return CONFIG
+
+def get_reduced_config():
+    return reduced(CONFIG)

@@ -1,0 +1,9 @@
+"""Config module for --arch gemma3_4b (see archs.py for dims)."""
+from .archs import GEMMA3_4B as CONFIG  # noqa: F401
+from .archs import reduced
+
+def get_config():
+    return CONFIG
+
+def get_reduced_config():
+    return reduced(CONFIG)

@@ -1,0 +1,9 @@
+"""Config module for --arch granite_20b (see archs.py for dims)."""
+from .archs import GRANITE_20B as CONFIG  # noqa: F401
+from .archs import reduced
+
+def get_config():
+    return CONFIG
+
+def get_reduced_config():
+    return reduced(CONFIG)

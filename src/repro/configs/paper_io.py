@@ -1,0 +1,33 @@
+"""The paper's own experiment configuration (§3): dataset layout, model
+hyperparameters, and evaluation protocol — the source of truth used by
+repro.core.predictor.MODEL_ZOO and repro.data.dataset."""
+
+PAPER_CONFIG = {
+    "dataset": {
+        "n_observations": 141,
+        "split": {"io_random": 84, "pipeline": 52, "concurrent": 5},
+        "features": 11,
+        "target": "target_throughput",
+        "target_transform": "log1p",
+    },
+    "protocol": {
+        "test_frac": 0.2, "split_seed": 42, "cv_folds": 5,
+    },
+    "models": {
+        "xgboost": {"n_estimators": 100, "max_depth": 6, "learning_rate": 0.1,
+                    "subsample": 0.8},
+        "random_forest": {"n_estimators": 100, "max_depth": 10,
+                          "min_samples_split": 5},
+        "ridge": {"alpha": 1.0},
+        "lasso": {"alpha": 0.1},
+        "elasticnet": {"alpha": 0.1, "l1_ratio": 0.5},
+        "mlp": {"hidden": (64, 32, 16), "l2": 1e-3, "patience": 10},
+    },
+    "claims": {  # acceptance targets for EXPERIMENTS.md §Paper-validation
+        "xgboost_test_r2": 0.991,
+        "xgboost_mean_pct_err": 11.8,
+        "xgboost_median_pct_err": 8.1,
+        "xgboost_cv": (0.966, 0.016),
+        "linear_r2_band": (0.6, 0.7),
+    },
+}

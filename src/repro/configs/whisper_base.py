@@ -1,0 +1,9 @@
+"""Config module for --arch whisper_base (see archs.py for dims)."""
+from .archs import WHISPER_BASE as CONFIG  # noqa: F401
+from .archs import reduced
+
+def get_config():
+    return CONFIG
+
+def get_reduced_config():
+    return reduced(CONFIG)

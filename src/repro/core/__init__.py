@@ -1,0 +1,38 @@
+"""repro.core — the paper's contribution: predictive I/O performance modeling.
+
+Public API:
+    IOPerformancePredictor  — Fig-10 workflow (fit zoo, predict, report)
+    recommend / OnlineAutotuner — configuration recommendation (paper §5.2)
+    GBTRegressor / RandomForestRegressor / linear models / MLPRegressor
+    FeatureSpec / StandardScaler / PCA / metrics
+"""
+
+from .autotune import ConfigSpace, OnlineAutotuner, recommend  # noqa: F401
+from .classify import CLASSIFIER_ZOO, LogisticRegression, make_classifier  # noqa: F401
+from .ensemble_base import PackedEnsemble, predict_ensemble  # noqa: F401
+from .features import (  # noqa: F401
+    FEATURE_NAMES,
+    PCA,
+    FeatureSpec,
+    StandardScaler,
+    expm1_inverse,
+    log1p_transform,
+)
+from .forest import RandomForestClassifier, RandomForestRegressor, RFConfig  # noqa: F401
+from .gbt import GBTBinaryClassifier, GBTConfig, GBTRegressor  # noqa: F401
+from .importance import permutation_importance, rank_features  # noqa: F401
+from .linear import ElasticNet, Lasso, LinearRegression, Ridge  # noqa: F401
+from .metrics import (  # noqa: F401
+    accuracy,
+    cross_val_r2,
+    f1_binary,
+    kfold_indices,
+    mae,
+    pct_errors,
+    r2_score,
+    rmse,
+    train_test_split,
+)
+from .mlp import MLPConfig, MLPRegressor  # noqa: F401
+from .predictor import MODEL_ZOO, IOPerformancePredictor, ModelReport, make_model  # noqa: F401
+from .uncertainty import ConformalRegressor, StackingRegressor, rf_prediction_interval  # noqa: F401

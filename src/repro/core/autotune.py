@@ -1,0 +1,218 @@
+"""Configuration recommendation + online pipeline autotuning (paper §5.2).
+
+Two layers:
+
+1. ``recommend()`` — the paper's offline use-case: enumerate a candidate grid
+   of pipeline knobs, featurize each candidate, predict log-throughput with a
+   fitted ``IOPerformancePredictor``, return ranked configs.  The prediction
+   over the whole grid is ONE batched JAX ensemble inference (milliseconds for
+   10^5 candidates).
+
+2. ``OnlineAutotuner`` — the framework integration: lives inside the trainer,
+   ingests live pipeline telemetry as new observations, periodically refits,
+   and proposes a reconfiguration whenever the predicted gain over the current
+   config exceeds a threshold. This is the paper's "days -> minutes" loop run
+   continuously at step granularity, and doubles as straggler mitigation (a
+   slow host re-tunes its own pipeline from its own telemetry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .features import FeatureSpec
+from .predictor import IOPerformancePredictor
+
+__all__ = ["ConfigSpace", "recommend", "OnlineAutotuner", "DEFAULT_SPACE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigSpace:
+    """Discrete grid over the tunable pipeline knobs (paper §3.1 parameters)."""
+
+    batch_size: Sequence[int] = (16, 32, 64, 128, 256)
+    num_workers: Sequence[int] = (0, 1, 2, 4, 8)
+    block_kb: Sequence[int] = (4, 16, 64, 256, 1024, 4096)
+    n_threads: Sequence[int] = (1, 2, 4, 8)
+    prefetch_depth: Sequence[int] = (1, 2, 4)  # beyond-paper knob
+
+    def candidates(self) -> List[dict]:
+        keys = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth")
+        grids = [getattr(self, k) for k in keys]
+        return [dict(zip(keys, vals)) for vals in itertools.product(*grids)]
+
+
+DEFAULT_SPACE = ConfigSpace()
+
+
+def _featurize(
+    candidates: List[dict], context: dict, spec: FeatureSpec
+) -> np.ndarray:
+    """Candidate knobs + measured context features -> [n, 11] matrix.
+
+    ``context`` carries the measured features a knob doesn't set (current
+    throughput_mb_s, iops, file_size_mb, ...), mirroring how the paper's
+    feature vector mixes configuration with observed telemetry.
+    """
+    rows = []
+    for c in candidates:
+        merged = dict(context)
+        merged.update(c)
+        rows.append(spec.row(merged))
+    return np.stack(rows, axis=0)
+
+
+def recommend(
+    predictor: IOPerformancePredictor,
+    context: dict,
+    space: ConfigSpace = DEFAULT_SPACE,
+    top_k: int = 5,
+) -> List[dict]:
+    """Ranked top-k configurations by predicted throughput."""
+    cands = space.candidates()
+    X = _featurize(cands, context, predictor.spec)
+    pred = predictor.predict_throughput_batch(X)
+    order = np.argsort(pred)[::-1][:top_k]
+    return [
+        {**cands[i], "predicted_throughput_mb_s": float(pred[i])} for i in order
+    ]
+
+
+@dataclasses.dataclass
+class AutotuneDecision:
+    reconfigure: bool
+    config: Optional[dict]
+    predicted_gain: float
+    current_throughput: float
+
+
+class OnlineAutotuner:
+    """Streaming observation buffer + periodic refit + reconfiguration hints."""
+
+    def __init__(
+        self,
+        spec: Optional[FeatureSpec] = None,
+        space: ConfigSpace = DEFAULT_SPACE,
+        refit_every: int = 20,
+        min_observations: int = 24,
+        gain_threshold: float = 0.10,  # propose only if >=10% predicted speedup
+        model: str = "xgboost",
+        seed: int = 0,
+        min_config_diversity: int = 3,  # explore until this many distinct configs seen
+    ):
+        self.spec = spec or FeatureSpec()
+        self.space = space
+        self.refit_every = refit_every
+        self.min_observations = min_observations
+        self.gain_threshold = gain_threshold
+        self.min_config_diversity = min_config_diversity
+        self.predictor = IOPerformancePredictor(self.spec, model=model, seed=seed)
+        self._rows: List[dict] = []
+        self._since_fit = 0
+        self._fitted = False
+        self._explored: List[tuple] = []
+
+    # Exogenous workload descriptors kept as features for the ONLINE tuner.
+    # Endogenous measurements (throughput_mb_s, samples_per_second,
+    # data_loading_ratio, iops) are *consequences* of the knobs — using them
+    # as features online makes every candidate predict the current measured
+    # value (the identity shortcut), so they are filtered here. The offline
+    # IOPerformancePredictor keeps the paper's full 11-feature set.
+    STATIC_KEYS = ("file_size_mb", "n_samples")
+
+    def _filter_features(self, feats: dict, knobs: Optional[dict] = None) -> dict:
+        keep = set(self._varied_knobs) | set(self.STATIC_KEYS)
+        out = {k: float(v) for k, v in feats.items() if k in keep}
+        if knobs:
+            out.update({k: float(v) for k, v in knobs.items() if k in keep})
+        return out
+
+    # ------------------------------------------------------------------
+    def seed_observations(self, rows: List[dict]):
+        """Warm-start from an offline benchmark sweep (the paper's 141-row
+        dataset): gives the predictor cross-configuration signal before any
+        live telemetry arrives."""
+        self._rows.extend(rows)
+        self._since_fit += len(rows)
+
+    @property
+    def _varied_knobs(self) -> tuple:
+        return tuple(
+            k for k in ("batch_size", "num_workers", "block_kb", "n_threads",
+                        "prefetch_depth")
+            if len(getattr(self.space, k)) > 1
+        )
+
+    def _config_key(self, cfg: dict) -> tuple:
+        return tuple(cfg.get(k) for k in self._varied_knobs)
+
+    def _diversity(self) -> int:
+        return len({self._config_key(r) for r in self._rows})
+
+    def _next_unexplored(self, current: dict) -> Optional[dict]:
+        seen = {self._config_key(r) for r in self._rows} | set(self._explored)
+        seen.add(self._config_key(current))
+        cands = self.space.candidates()
+        # deterministic shuffle: spread exploration across all knobs early
+        order = np.random.default_rng(1234).permutation(len(cands))
+        for i in order:
+            if self._config_key(cands[i]) not in seen:
+                self._explored.append(self._config_key(cands[i]))
+                return cands[i]
+        return None
+
+    @property
+    def n_observations(self) -> int:
+        return len(self._rows)
+
+    def observe(self, features: dict, target_throughput: float):
+        row = self._filter_features(features)
+        row[self.spec.target] = float(target_throughput)
+        self._rows.append(row)
+        self._since_fit += 1
+
+    def _columns(self) -> dict:
+        keys = list(self.spec.names) + [self.spec.target]
+        return {
+            k: np.asarray([r.get(k, 0.0) for r in self._rows], np.float64) for k in keys
+        }
+
+    def maybe_refit(self) -> bool:
+        if len(self._rows) < self.min_observations:
+            return False
+        if self._fitted and self._since_fit < self.refit_every:
+            return False
+        self.predictor.fit(self._columns())
+        self._fitted = True
+        self._since_fit = 0
+        return True
+
+    def decide(self, current_config: dict, context: dict) -> AutotuneDecision:
+        """Given live context telemetry, propose the best predicted config.
+
+        Cold start: until ``min_config_diversity`` distinct configs have been
+        observed the model has no cross-config signal, so we EXPLORE —
+        propose the next unexplored candidate instead of exploiting.
+        """
+        cur = float(context.get("throughput_mb_s", 0.0))
+        if self._diversity() < self.min_config_diversity:
+            cand = self._next_unexplored(current_config)
+            if cand is not None:
+                return AutotuneDecision(True, {**cand, "explore": True}, 0.0, cur)
+        if not self._fitted:
+            return AutotuneDecision(False, None, 0.0, cur)
+        static_ctx = self._filter_features(context)
+        best = recommend(self.predictor, static_ctx, self.space, top_k=1)[0]
+        cur_pred = self.predictor.predict_throughput(
+            self._filter_features(context, knobs=current_config)
+        )
+        base = max(cur_pred, 1e-9)
+        gain = (best["predicted_throughput_mb_s"] - base) / base
+        same = all(best.get(k) == current_config.get(k) for k in current_config)
+        if not same and gain >= self.gain_threshold:
+            return AutotuneDecision(True, best, float(gain), cur)
+        return AutotuneDecision(False, None, float(gain), cur)

@@ -1,0 +1,107 @@
+"""Format/backend recommendation classifiers (paper RQ3, the "three
+classification approaches"): logistic regression (JAX), Random Forest,
+GBT — one-vs-rest for multiclass."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .forest import RandomForestClassifier, RFConfig
+from .gbt import GBTBinaryClassifier, GBTConfig
+
+__all__ = ["LogisticRegression", "OneVsRestClassifier", "CLASSIFIER_ZOO", "make_classifier"]
+
+
+@partial(jax.jit, static_argnames=("n_iter",))
+def _fit_logistic(X, y, l2, lr, n_iter=500):
+    n, d = X.shape
+
+    def loss(wb):
+        w, b = wb
+        z = X @ w + b
+        # stable logistic loss
+        ll = jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+        return ll + l2 * jnp.sum(w * w)
+
+    def body(_, wb):
+        g = jax.grad(loss)(wb)
+        return (wb[0] - lr * g[0], wb[1] - lr * g[1])
+
+    w0 = (jnp.zeros(d, X.dtype), jnp.zeros((), X.dtype))
+    return jax.lax.fori_loop(0, n_iter, body, w0)
+
+
+class LogisticRegression:
+    def __init__(self, l2: float = 1e-3, lr: float = 0.5, n_iter: int = 500):
+        self.l2, self.lr, self.n_iter = l2, lr, n_iter
+        self.w, self.b = None, None
+        self._mu, self._sd = None, None
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float64)
+        self._mu = X.mean(0)
+        sd = X.std(0)
+        self._sd = np.where(sd > 0, sd, 1.0)
+        Xs = jnp.asarray((X - self._mu) / self._sd)
+        self.w, self.b = _fit_logistic(
+            Xs, jnp.asarray(np.asarray(y, np.float64)), self.l2, self.lr, self.n_iter
+        )
+        return self
+
+    def decision_function(self, X):
+        Xs = (np.asarray(X, np.float64) - self._mu) / self._sd
+        return np.asarray(Xs @ np.asarray(self.w) + float(self.b))
+
+    def predict_proba(self, X):
+        return 1.0 / (1.0 + np.exp(-self.decision_function(X)))
+
+    def predict(self, X):
+        return (self.predict_proba(X) >= 0.5).astype(np.int64)
+
+
+class OneVsRestClassifier:
+    def __init__(self, make_binary, n_classes: int):
+        self.make_binary = make_binary
+        self.n_classes = n_classes
+        self.models = []
+
+    def fit(self, X, y):
+        y = np.asarray(y, np.int64)
+        self.models = []
+        for c in range(self.n_classes):
+            m = self.make_binary()
+            m.fit(X, (y == c).astype(np.float64))
+            self.models.append(m)
+        return self
+
+    def predict(self, X):
+        scores = np.stack([m.predict_proba(X) for m in self.models], axis=1)
+        return np.argmax(scores, axis=1)
+
+
+CLASSIFIER_ZOO: Dict[str, object] = {
+    "logistic": lambda n_classes, seed=0: OneVsRestClassifier(
+        lambda: LogisticRegression(), n_classes
+    ),
+    "random_forest": lambda n_classes, seed=0: OneVsRestClassifier(
+        lambda: RandomForestClassifier(
+            RFConfig(n_estimators=50, max_depth=8, seed=seed)
+        ),
+        n_classes,
+    ),
+    "gbt": lambda n_classes, seed=0: OneVsRestClassifier(
+        lambda: GBTBinaryClassifier(
+            GBTConfig(n_estimators=50, max_depth=4, learning_rate=0.2, seed=seed)
+        ),
+        n_classes,
+    ),
+}
+
+
+def make_classifier(name: str, n_classes: int, seed: int = 0):
+    return CLASSIFIER_ZOO[name](n_classes, seed=seed)

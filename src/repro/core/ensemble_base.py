@@ -1,0 +1,122 @@
+"""Shared dense-ensemble representation + JAX inference for GBT and RF.
+
+An ensemble of B trees, each padded to ``max_nodes``, is stored as stacked
+arrays ``[B, max_nodes]``.  Prediction descends all trees in lockstep for
+``max_depth+1`` gather steps — a dense, branch-free tensor program that jit's,
+vmaps and shards cleanly (and backs the Pallas kernel in
+``repro/kernels/gbt_predict.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tree import TreeArrays
+
+__all__ = ["PackedEnsemble", "pack_trees", "predict_ensemble", "predict_ensemble_np"]
+
+
+@dataclasses.dataclass
+class PackedEnsemble:
+    feature: jnp.ndarray  # int32  [B, N]
+    threshold: jnp.ndarray  # float32[B, N]
+    left: jnp.ndarray  # int32  [B, N]
+    right: jnp.ndarray  # int32  [B, N]
+    value: jnp.ndarray  # float32[B, N]
+    max_depth: int
+    base_score: float = 0.0
+    scale: float = 1.0  # learning rate (GBT) or 1/B (RF), folded at predict
+
+    @property
+    def n_trees(self) -> int:
+        return int(self.feature.shape[0])
+
+    def tree_dict(self):
+        return dict(
+            feature=self.feature,
+            threshold=self.threshold,
+            left=self.left,
+            right=self.right,
+            value=self.value,
+        )
+
+
+def pack_trees(
+    trees: Sequence[TreeArrays], max_depth: int, base_score: float, scale: float
+) -> PackedEnsemble:
+    max_nodes = max(t.n_nodes for t in trees)
+    padded = [t.padded(max_nodes) for t in trees]
+    stack = lambda f: jnp.asarray(np.stack([getattr(t, f) for t in padded]))
+    return PackedEnsemble(
+        feature=stack("feature"),
+        threshold=stack("threshold"),
+        left=stack("left"),
+        right=stack("right"),
+        value=stack("value"),
+        max_depth=max_depth,
+        base_score=base_score,
+        scale=scale,
+    )
+
+
+def _descend_one_tree(feature, threshold, left, right, value, x, max_depth):
+    """Descend one tree for one row. x: [D]."""
+
+    def step(_, idx):
+        f = feature[idx]
+        leaf = f < 0
+        fx = x[jnp.maximum(f, 0)]
+        nxt = jnp.where(fx <= threshold[idx], left[idx], right[idx])
+        return jnp.where(leaf, idx, nxt)
+
+    idx = jax.lax.fori_loop(0, max_depth + 1, step, jnp.int32(0))
+    return value[idx]
+
+
+@partial(jax.jit, static_argnames=("max_depth",))
+def _predict_packed(tree_arrays: dict, X: jnp.ndarray, max_depth: int) -> jnp.ndarray:
+    """Sum of per-tree predictions. X: [n, D] -> [n]."""
+    per_tree = jax.vmap(  # over trees
+        lambda f, t, l, r, v: jax.vmap(  # over rows
+            lambda x: _descend_one_tree(f, t, l, r, v, x, max_depth)
+        )(X)
+    )(
+        tree_arrays["feature"],
+        tree_arrays["threshold"],
+        tree_arrays["left"],
+        tree_arrays["right"],
+        tree_arrays["value"],
+    )
+    return per_tree.sum(axis=0)
+
+
+def predict_ensemble(ens: PackedEnsemble, X: jnp.ndarray) -> jnp.ndarray:
+    """base_score + scale * sum_b tree_b(X).  X: [n, D] float32."""
+    X = jnp.asarray(X, jnp.float32)
+    raw = _predict_packed(ens.tree_dict(), X, ens.max_depth)
+    return ens.base_score + ens.scale * raw
+
+
+def predict_ensemble_np(ens: PackedEnsemble, X: np.ndarray) -> np.ndarray:
+    """Pure-numpy oracle, used in tests against the JAX/Pallas paths."""
+    from .tree import TreeArrays, predict_tree_np
+
+    total = np.zeros(X.shape[0], dtype=np.float64)
+    for b in range(ens.n_trees):
+        t = TreeArrays(
+            feature=np.asarray(ens.feature[b]),
+            threshold=np.asarray(ens.threshold[b]),
+            left=np.asarray(ens.left[b]),
+            right=np.asarray(ens.right[b]),
+            value=np.asarray(ens.value[b]),
+            gain=np.zeros_like(np.asarray(ens.value[b])),
+            cover=np.zeros_like(np.asarray(ens.value[b])),
+        )
+        total += predict_tree_np(t, X, ens.max_depth)
+    return ens.base_score + ens.scale * total

@@ -1,0 +1,122 @@
+"""Feature engineering (paper §3.2): the 11-feature spec, log1p target
+transform, StandardScaler, and PCA — all JAX-backed."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FEATURE_NAMES",
+    "FeatureSpec",
+    "log1p_transform",
+    "expm1_inverse",
+    "StandardScaler",
+    "PCA",
+]
+
+# The paper's 11 numeric features (§3.2.1), in canonical column order.
+FEATURE_NAMES = (
+    "block_kb",
+    "file_size_mb",
+    "n_samples",
+    "throughput_mb_s",
+    "iops",
+    "n_threads",
+    "batch_size",
+    "samples_per_second",
+    "data_loading_ratio",
+    "num_workers",
+    "aggregate_throughput_mb_s",
+)
+
+TARGET_NAME = "target_throughput"
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    names: tuple = FEATURE_NAMES
+    target: str = TARGET_NAME
+
+    @property
+    def n_features(self) -> int:
+        return len(self.names)
+
+    def matrix(self, obs: dict) -> np.ndarray:
+        """dict of column arrays -> [n, n_features] float64 matrix."""
+        cols = [np.asarray(obs[name], np.float64) for name in self.names]
+        return np.stack(cols, axis=1)
+
+    def row(self, config: dict, default: float = 0.0) -> np.ndarray:
+        return np.asarray(
+            [float(config.get(name, default)) for name in self.names], np.float64
+        )
+
+
+def log1p_transform(y: np.ndarray) -> np.ndarray:
+    return np.log1p(np.asarray(y, np.float64))
+
+
+def expm1_inverse(y_log: np.ndarray) -> np.ndarray:
+    return np.expm1(np.asarray(y_log, np.float64))
+
+
+class StandardScaler:
+    def __init__(self):
+        self.mean_ = None
+        self.scale_ = None
+
+    def fit(self, X: np.ndarray):
+        X = np.asarray(X, np.float64)
+        self.mean_ = X.mean(axis=0)
+        std = X.std(axis=0)
+        self.scale_ = np.where(std > 0, std, 1.0)
+        return self
+
+    def transform(self, X: np.ndarray) -> np.ndarray:
+        return (np.asarray(X, np.float64) - self.mean_) / self.scale_
+
+    def fit_transform(self, X: np.ndarray) -> np.ndarray:
+        return self.fit(X).transform(X)
+
+    def inverse_transform(self, Xs: np.ndarray) -> np.ndarray:
+        return np.asarray(Xs, np.float64) * self.scale_ + self.mean_
+
+
+class PCA:
+    """PCA via SVD of the centered, standardized-optional matrix (paper §3.2.3)."""
+
+    def __init__(self, n_components: Optional[int] = None):
+        self.n_components = n_components
+        self.components_ = None
+        self.explained_variance_ = None
+        self.explained_variance_ratio_ = None
+        self.mean_ = None
+
+    def fit(self, X: np.ndarray):
+        X = jnp.asarray(np.asarray(X, np.float64))
+        self.mean_ = np.asarray(X.mean(axis=0))
+        Xc = X - X.mean(axis=0)
+        _, s, vt = jnp.linalg.svd(Xc, full_matrices=False)
+        var = np.asarray(s) ** 2 / (X.shape[0] - 1)
+        k = self.n_components or vt.shape[0]
+        self.components_ = np.asarray(vt)[:k]
+        self.explained_variance_ = var[:k]
+        self.explained_variance_ratio_ = var[:k] / var.sum()
+        return self
+
+    def transform(self, X: np.ndarray) -> np.ndarray:
+        return np.asarray((np.asarray(X, np.float64) - self.mean_) @ self.components_.T)
+
+    def fit_transform(self, X):
+        return self.fit(X).transform(X)
+
+    def inverse_transform(self, Z: np.ndarray) -> np.ndarray:
+        return np.asarray(Z) @ self.components_ + self.mean_
+
+    def n_components_for_variance(self, frac: float) -> int:
+        cum = np.cumsum(self.explained_variance_ratio_)
+        return int(np.searchsorted(cum, frac) + 1)

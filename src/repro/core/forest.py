@@ -1,0 +1,104 @@
+"""Random Forest (paper §3.3.2: 100 trees, max_depth=10, min_samples_split=5).
+
+Each tree is fit on a bootstrap sample with sqrt-ish column subsampling using
+the shared histogram builder (g = -(y - y_bar), h = 1, lambda = 0 reduces the
+XGBoost gain to variance reduction; leaf value = node mean offset).
+Prediction averages trees via the shared packed-ensemble JAX program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .ensemble_base import PackedEnsemble, pack_trees, predict_ensemble
+from .tree import TreeBuilderConfig, bin_features, build_tree, compute_bins
+
+__all__ = ["RFConfig", "RandomForestRegressor", "RandomForestClassifier"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RFConfig:
+    n_estimators: int = 100
+    max_depth: int = 10
+    min_samples_split: int = 5
+    colsample: float = 1.0  # paper uses default sklearn (all features for regression)
+    max_bins: int = 64
+    seed: int = 0
+
+
+class RandomForestRegressor:
+    def __init__(self, config: Optional[RFConfig] = None, **kw):
+        self.config = config or RFConfig(**kw)
+        self.ensemble: Optional[PackedEnsemble] = None
+        self.feature_importances_: Optional[np.ndarray] = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        cfg = self.config
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        n, d = X.shape
+        rng = np.random.default_rng(cfg.seed)
+        edges = compute_bins(X, cfg.max_bins)
+        Xb = bin_features(X, edges)
+        tcfg = TreeBuilderConfig(
+            max_depth=cfg.max_depth,
+            min_samples_split=cfg.min_samples_split,
+            min_child_weight=1.0,  # at least one bootstrap row per child
+            reg_lambda=0.0,
+            gamma=0.0,
+            max_bins=cfg.max_bins,
+        )
+        trees = []
+        imp = np.zeros(d)
+        ybar = float(y.mean())
+        for _ in range(cfg.n_estimators):
+            rows = rng.integers(0, n, size=n)  # bootstrap
+            w = np.bincount(rows, minlength=n).astype(np.float64)
+            # weighted residual target: g = -(y - ybar) * w, h = w
+            g = -(y - ybar) * w
+            h = w
+            tree = build_tree(Xb, edges, g, h, tcfg, rng, cfg.colsample)
+            trees.append(tree)
+            split = tree.feature >= 0
+            np.add.at(imp, tree.feature[split], tree.gain[split])
+        tot = imp.sum()
+        self.feature_importances_ = imp / tot if tot > 0 else imp
+        self.ensemble = pack_trees(
+            trees,
+            cfg.max_depth,
+            base_score=ybar,
+            scale=1.0 / cfg.n_estimators,
+        )
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        assert self.ensemble is not None, "fit() first"
+        return np.asarray(predict_ensemble(self.ensemble, np.asarray(X, np.float32)))
+
+
+class RandomForestClassifier:
+    """Binary RF classifier: average of per-tree probability-ish leaves.
+
+    Implemented as RF regression on {0,1} labels with a 0.5 threshold —
+    identical to sklearn's prob-vote for binary trees with pure-ish leaves.
+    """
+
+    def __init__(self, config: Optional[RFConfig] = None, **kw):
+        self._reg = RandomForestRegressor(config, **kw)
+
+    @property
+    def feature_importances_(self):
+        return self._reg.feature_importances_
+
+    def fit(self, X, y):
+        self._reg.fit(X, np.asarray(y, np.float64))
+        return self
+
+    def predict_proba(self, X):
+        return np.clip(self._reg.predict(X), 0.0, 1.0)
+
+    def predict(self, X):
+        return (self.predict_proba(X) >= 0.5).astype(np.int64)

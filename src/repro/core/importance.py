@@ -1,0 +1,40 @@
+"""Feature-importance analysis (paper §4.3).
+
+Two built-in notions come from the models themselves (gain-based for GBT,
+impurity/gain for RF — both exposed as ``feature_importances_``); this module
+adds model-agnostic permutation importance for cross-checking the paper's
+claim that throughput metrics + batch size dominate.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .metrics import r2_score
+
+__all__ = ["permutation_importance", "rank_features"]
+
+
+def permutation_importance(
+    model, X: np.ndarray, y: np.ndarray, n_repeats: int = 5, seed: int = 0
+) -> np.ndarray:
+    """Mean R2 drop when each column is shuffled."""
+    rng = np.random.default_rng(seed)
+    base = r2_score(y, model.predict(X))
+    n, d = X.shape
+    drops = np.zeros(d)
+    for j in range(d):
+        tot = 0.0
+        for _ in range(n_repeats):
+            Xp = X.copy()
+            Xp[:, j] = Xp[rng.permutation(n), j]
+            tot += base - r2_score(y, model.predict(Xp))
+        drops[j] = tot / n_repeats
+    return drops
+
+
+def rank_features(importances: np.ndarray, names: Sequence[str]) -> list[tuple[str, float]]:
+    order = np.argsort(importances)[::-1]
+    return [(names[i], float(importances[i])) for i in order]

@@ -1,0 +1,110 @@
+"""Linear baselines (paper §3.3.1), in JAX.
+
+- LinearRegression / Ridge: closed-form normal equations (jnp.linalg.solve).
+- Lasso / ElasticNet: FISTA proximal gradient, sklearn objective conventions:
+      Lasso:       (1/2n)||y - Xb||^2 + alpha ||b||_1
+      ElasticNet:  (1/2n)||y - Xb||^2 + alpha*l1_ratio ||b||_1
+                                     + 0.5*alpha*(1-l1_ratio) ||b||^2
+Intercepts are unpenalized (fit on centered data, like sklearn).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LinearRegression", "Ridge", "Lasso", "ElasticNet"]
+
+
+@partial(jax.jit, static_argnames=())
+def _solve_ridge(Xc, yc, alpha):
+    d = Xc.shape[1]
+    A = Xc.T @ Xc + alpha * jnp.eye(d, dtype=Xc.dtype)
+    b = Xc.T @ yc
+    return jnp.linalg.solve(A, b)
+
+
+@partial(jax.jit, static_argnames=("n_iter",))
+def _fista(Xc, yc, l1, l2, n_iter=2000):
+    """Minimize (1/2n)||y-Xb||^2 + l1||b||_1 + (l2/2)||b||^2."""
+    n, d = Xc.shape
+    # Lipschitz constant of smooth part: (sigma_max^2 / n) + l2.
+    sig = jnp.linalg.norm(Xc, ord=2)
+    L = sig * sig / n + l2 + 1e-12
+    step = 1.0 / L
+
+    def soft(x, t):
+        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+    def body(_, carry):
+        b, z, t = carry
+        grad = Xc.T @ (Xc @ z - yc) / n + l2 * z
+        b_new = soft(z - step * grad, step * l1)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = b_new + (t - 1.0) / t_new * (b_new - b)
+        return b_new, z_new, t_new
+
+    b0 = jnp.zeros(d, Xc.dtype)
+    b, _, _ = jax.lax.fori_loop(0, n_iter, body, (b0, b0, jnp.array(1.0, Xc.dtype)))
+    return b
+
+
+class _LinBase:
+    def __init__(self):
+        self.coef_ = None
+        self.intercept_ = 0.0
+
+    def _center(self, X, y):
+        X = jnp.asarray(np.asarray(X, np.float64))
+        y = jnp.asarray(np.asarray(y, np.float64))
+        xm, ym = X.mean(0), y.mean()
+        return X - xm, y - ym, xm, ym
+
+    def _finish(self, coef, xm, ym):
+        self.coef_ = np.asarray(coef)
+        self.intercept_ = float(ym - jnp.dot(xm, coef))
+        return self
+
+    def predict(self, X):
+        return np.asarray(X, np.float64) @ self.coef_ + self.intercept_
+
+
+class LinearRegression(_LinBase):
+    def fit(self, X, y):
+        Xc, yc, xm, ym = self._center(X, y)
+        return self._finish(_solve_ridge(Xc, yc, 1e-10), xm, ym)
+
+
+class Ridge(_LinBase):
+    def __init__(self, alpha: float = 1.0):
+        super().__init__()
+        self.alpha = alpha
+
+    def fit(self, X, y):
+        Xc, yc, xm, ym = self._center(X, y)
+        return self._finish(_solve_ridge(Xc, yc, self.alpha), xm, ym)
+
+
+class Lasso(_LinBase):
+    def __init__(self, alpha: float = 0.1, n_iter: int = 2000):
+        super().__init__()
+        self.alpha, self.n_iter = alpha, n_iter
+
+    def fit(self, X, y):
+        Xc, yc, xm, ym = self._center(X, y)
+        return self._finish(_fista(Xc, yc, self.alpha, 0.0, self.n_iter), xm, ym)
+
+
+class ElasticNet(_LinBase):
+    def __init__(self, alpha: float = 0.1, l1_ratio: float = 0.5, n_iter: int = 2000):
+        super().__init__()
+        self.alpha, self.l1_ratio, self.n_iter = alpha, l1_ratio, n_iter
+
+    def fit(self, X, y):
+        Xc, yc, xm, ym = self._center(X, y)
+        l1 = self.alpha * self.l1_ratio
+        l2 = self.alpha * (1.0 - self.l1_ratio)
+        return self._finish(_fista(Xc, yc, l1, l2, self.n_iter), xm, ym)

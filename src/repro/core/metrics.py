@@ -1,0 +1,88 @@
+"""Evaluation protocol (paper §3.3.4): R2/RMSE/MAE, percentage errors in the
+original (expm1) space, 80/20 split with seed 42, and 5-fold CV."""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "r2_score",
+    "rmse",
+    "mae",
+    "pct_errors",
+    "train_test_split",
+    "kfold_indices",
+    "cross_val_r2",
+    "accuracy",
+    "f1_binary",
+]
+
+
+def r2_score(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    y_true = np.asarray(y_true, np.float64)
+    y_pred = np.asarray(y_pred, np.float64)
+    ss_res = float(np.sum((y_true - y_pred) ** 2))
+    ss_tot = float(np.sum((y_true - y_true.mean()) ** 2))
+    return 1.0 - ss_res / ss_tot if ss_tot > 0 else 0.0
+
+
+def rmse(y_true, y_pred) -> float:
+    return float(np.sqrt(np.mean((np.asarray(y_true) - np.asarray(y_pred)) ** 2)))
+
+
+def mae(y_true, y_pred) -> float:
+    return float(np.mean(np.abs(np.asarray(y_true) - np.asarray(y_pred))))
+
+
+def pct_errors(y_true_raw, y_pred_raw) -> dict:
+    """Mean/median absolute percentage error in original throughput space."""
+    t = np.asarray(y_true_raw, np.float64)
+    p = np.asarray(y_pred_raw, np.float64)
+    pe = np.abs(p - t) / np.maximum(np.abs(t), 1e-9) * 100.0
+    return {"mean_pct_err": float(pe.mean()), "median_pct_err": float(np.median(pe))}
+
+
+def train_test_split(n: int, test_frac: float = 0.2, seed: int = 42):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_test = int(round(test_frac * n))
+    return perm[n_test:], perm[:n_test]  # train_idx, test_idx
+
+
+def kfold_indices(n: int, k: int = 5, seed: int = 42):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    folds = np.array_split(perm, k)
+    out = []
+    for i in range(k):
+        test = folds[i]
+        train = np.concatenate([folds[j] for j in range(k) if j != i])
+        out.append((train, test))
+    return out
+
+
+def cross_val_r2(
+    make_model: Callable, X: np.ndarray, y: np.ndarray, k: int = 5, seed: int = 42
+) -> np.ndarray:
+    scores = []
+    for tr, te in kfold_indices(X.shape[0], k, seed):
+        m = make_model()
+        m.fit(X[tr], y[tr])
+        scores.append(r2_score(y[te], m.predict(X[te])))
+    return np.asarray(scores)
+
+
+def accuracy(y_true, y_pred) -> float:
+    return float(np.mean(np.asarray(y_true) == np.asarray(y_pred)))
+
+
+def f1_binary(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    tp = float(np.sum((y_pred == 1) & (y_true == 1)))
+    fp = float(np.sum((y_pred == 1) & (y_true == 0)))
+    fn = float(np.sum((y_pred == 0) & (y_true == 1)))
+    denom = 2 * tp + fp + fn
+    return 2 * tp / denom if denom > 0 else 0.0

@@ -1,0 +1,109 @@
+"""MLP regressor (paper §3.3.3): hidden (64,32,16), ReLU, Adam, L2 alpha=1e-3,
+early stopping patience=10 on a 10% validation split. Pure JAX."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["MLPConfig", "MLPRegressor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    hidden: tuple = (64, 32, 16)
+    l2: float = 1e-3
+    lr: float = 1e-3
+    max_epochs: int = 500
+    batch_size: int = 32
+    patience: int = 10
+    val_frac: float = 0.1
+    seed: int = 0
+
+
+def _init(key, sizes):
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (sizes[i], sizes[i + 1])) * jnp.sqrt(2.0 / sizes[i])
+        params.append({"w": w, "b": jnp.zeros(sizes[i + 1])})
+    return params
+
+
+def _forward(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+def _loss(params, x, y, l2):
+    pred = _forward(params, x)
+    mse = jnp.mean((pred - y) ** 2)
+    reg = sum(jnp.sum(p["w"] ** 2) for p in params)
+    return mse + l2 * reg
+
+
+@partial(jax.jit, static_argnames=("l2", "lr"))
+def _adam_step(params, opt, x, y, l2, lr):
+    m, v, t = opt
+    grads = jax.grad(_loss)(params, x, y, l2)
+    t = t + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, (m, v, t)
+
+
+class MLPRegressor:
+    def __init__(self, config: Optional[MLPConfig] = None, **kw):
+        self.config = config or MLPConfig(**kw)
+        self.params = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        cfg = self.config
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        n, d = X.shape
+        rng = np.random.default_rng(cfg.seed)
+        perm = rng.permutation(n)
+        n_val = max(1, int(round(cfg.val_frac * n)))
+        vi, ti = perm[:n_val], perm[n_val:]
+        Xt, yt, Xv, yv = X[ti], y[ti], X[vi], y[vi]
+
+        key = jax.random.PRNGKey(cfg.seed)
+        params = _init(key, (d, *cfg.hidden, 1))
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        opt = (zeros, jax.tree.map(jnp.zeros_like, params), jnp.int32(0))
+
+        best_val, best_params, bad = np.inf, params, 0
+        nt = Xt.shape[0]
+        for epoch in range(cfg.max_epochs):
+            order = rng.permutation(nt)
+            for s in range(0, nt, cfg.batch_size):
+                idx = order[s : s + cfg.batch_size]
+                params, opt = _adam_step(params, opt, Xt[idx], yt[idx], cfg.l2, cfg.lr)
+            val = float(jnp.mean((_forward(params, Xv) - yv) ** 2))
+            if val < best_val - 1e-7:
+                best_val, best_params, bad = val, params, 0
+            else:
+                bad += 1
+                if bad >= cfg.patience:
+                    break
+        self.params = best_params
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        assert self.params is not None, "fit() first"
+        return np.asarray(_forward(self.params, jnp.asarray(X, jnp.float32)))

@@ -1,0 +1,162 @@
+"""The paper's Fig-10 workflow as a library object.
+
+observations -> feature matrix -> log1p target -> model zoo fit/eval ->
+throughput prediction for unseen configurations -> (autotune.py) recommendation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from .features import FEATURE_NAMES, FeatureSpec, StandardScaler, expm1_inverse, log1p_transform
+from .forest import RandomForestRegressor, RFConfig
+from .gbt import GBTConfig, GBTRegressor
+from .linear import ElasticNet, Lasso, LinearRegression, Ridge
+from .metrics import cross_val_r2, mae, pct_errors, r2_score, rmse, train_test_split
+from .mlp import MLPConfig, MLPRegressor
+
+__all__ = ["MODEL_ZOO", "make_model", "ModelReport", "IOPerformancePredictor"]
+
+
+# Paper hyperparameters (§3.3).
+MODEL_ZOO: Dict[str, Callable] = {
+    "linear": lambda seed=0: LinearRegression(),
+    "ridge": lambda seed=0: Ridge(alpha=1.0),
+    "lasso": lambda seed=0: Lasso(alpha=0.1),
+    "elasticnet": lambda seed=0: ElasticNet(alpha=0.1, l1_ratio=0.5),
+    "random_forest": lambda seed=0: RandomForestRegressor(
+        RFConfig(n_estimators=100, max_depth=10, min_samples_split=5, seed=seed)
+    ),
+    "xgboost": lambda seed=0: GBTRegressor(
+        GBTConfig(
+            n_estimators=100,
+            max_depth=6,
+            learning_rate=0.1,
+            subsample=0.8,
+            seed=seed,
+        )
+    ),
+    "mlp": lambda seed=0: _ScaledMLP(seed),
+}
+
+
+class _ScaledMLP:
+    """MLP with StandardScaler inputs (paper: scaling only for the NN)."""
+
+    def __init__(self, seed: int = 0):
+        self.scaler = StandardScaler()
+        self.mlp = MLPRegressor(MLPConfig(seed=seed))
+
+    def fit(self, X, y):
+        self.mlp.fit(self.scaler.fit_transform(X), y)
+        return self
+
+    def predict(self, X):
+        return self.mlp.predict(self.scaler.transform(X))
+
+
+def make_model(name: str, seed: int = 0):
+    return MODEL_ZOO[name](seed=seed)
+
+
+@dataclasses.dataclass
+class ModelReport:
+    name: str
+    train_r2: float
+    test_r2: float
+    test_rmse: float
+    test_mae: float
+    mean_pct_err: float
+    median_pct_err: float
+    cv_mean: float = float("nan")
+    cv_std: float = float("nan")
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class IOPerformancePredictor:
+    """Fit the model zoo on I/O observations; predict/recommend configs.
+
+    ``observations`` is a dict of equal-length column arrays containing the 11
+    canonical features plus ``target_throughput`` (MB/s, raw space).
+    """
+
+    def __init__(self, spec: Optional[FeatureSpec] = None, model: str = "xgboost", seed: int = 0):
+        self.spec = spec or FeatureSpec()
+        self.model_name = model
+        self.seed = seed
+        self.model = None
+        self.reports: Dict[str, ModelReport] = {}
+
+    # ------------------------------------------------------------------
+    def evaluate_zoo(
+        self,
+        observations: dict,
+        models: Optional[list] = None,
+        with_cv: bool = True,
+        test_frac: float = 0.2,
+        split_seed: int = 42,
+    ) -> Dict[str, ModelReport]:
+        X = self.spec.matrix(observations)
+        y_raw = np.asarray(observations[self.spec.target], np.float64)
+        y = log1p_transform(y_raw)
+        tr, te = train_test_split(X.shape[0], test_frac, split_seed)
+        for name in models or list(MODEL_ZOO):
+            m = make_model(name, self.seed)
+            m.fit(X[tr], y[tr])
+            pred_tr = m.predict(X[tr])
+            pred_te = m.predict(X[te])
+            pe = pct_errors(y_raw[te], expm1_inverse(pred_te))
+            rep = ModelReport(
+                name=name,
+                train_r2=r2_score(y[tr], pred_tr),
+                test_r2=r2_score(y[te], pred_te),
+                test_rmse=rmse(y[te], pred_te),
+                test_mae=mae(y[te], pred_te),
+                mean_pct_err=pe["mean_pct_err"],
+                median_pct_err=pe["median_pct_err"],
+            )
+            if with_cv and name in ("xgboost", "random_forest", "lasso"):
+                scores = cross_val_r2(lambda: make_model(name, self.seed), X, y, k=5)
+                rep.cv_mean = float(scores.mean())
+                rep.cv_std = float(scores.std())
+            self.reports[name] = rep
+        return self.reports
+
+    # ------------------------------------------------------------------
+    def fit(self, observations: dict):
+        X = self.spec.matrix(observations)
+        y = log1p_transform(np.asarray(observations[self.spec.target], np.float64))
+        self.model = make_model(self.model_name, self.seed)
+        self.model.fit(X, y)
+        return self
+
+    def predict_log(self, X: np.ndarray) -> np.ndarray:
+        assert self.model is not None, "fit() first"
+        return self.model.predict(np.asarray(X, np.float64))
+
+    def predict_throughput(self, config: dict) -> float:
+        """Predict raw MB/s for one configuration dict (missing keys -> 0)."""
+        x = self.spec.row(config)[None, :]
+        return float(expm1_inverse(self.predict_log(x))[0])
+
+    def predict_throughput_batch(self, X: np.ndarray) -> np.ndarray:
+        return expm1_inverse(self.predict_log(X))
+
+    @property
+    def feature_importances_(self):
+        return getattr(self.model, "feature_importances_", None)
+
+    # ------------------------------------------------------------------
+    def save_reports(self, path: str):
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(
+            json.dumps({k: v.as_dict() for k, v in self.reports.items()}, indent=2)
+        )

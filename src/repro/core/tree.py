@@ -1,0 +1,227 @@
+"""Histogram-based decision-tree builder shared by GBT (gbt.py) and RF (forest.py).
+
+Design
+------
+Building greedy trees is inherently sequential and data-dependent, so the
+*builder* runs host-side on numpy (fast for the paper's n=141..10^4 regime).
+The *fitted* trees are packed into dense, fixed-shape arrays (heap-free child
+pointers) so that inference is a pure JAX tensor program: iterative descent,
+``max_depth`` gather steps, fully vmappable over rows and trees, and
+Pallas-tileable (see ``repro/kernels/gbt_predict.py``).
+
+The split objective is the XGBoost second-order gain
+
+    gain = 1/2 * [ GL^2/(HL+lam) + GR^2/(HR+lam) - G^2/(H+lam) ] - gamma
+
+with leaf weight ``w = -G/(H+lam)``.  Random-Forest regression is the special
+case g = -(y - mean), h = 1, lam = 0 (variance reduction; leaf = mean).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "TreeArrays",
+    "TreeBuilderConfig",
+    "build_tree",
+    "compute_bins",
+    "bin_features",
+    "predict_tree_np",
+]
+
+
+@dataclasses.dataclass
+class TreeArrays:
+    """One fitted tree as dense arrays (size = n_nodes, BFS order).
+
+    ``feature[i] < 0`` marks a leaf; leaves self-loop (left==right==i) so a
+    fixed ``max_depth``-step descent always lands on the correct leaf.
+    """
+
+    feature: np.ndarray  # int32  [n_nodes]
+    threshold: np.ndarray  # float32[n_nodes]  (raw feature-space threshold)
+    left: np.ndarray  # int32  [n_nodes]
+    right: np.ndarray  # int32  [n_nodes]
+    value: np.ndarray  # float32[n_nodes]  (leaf weight; internal nodes too, for truncation)
+    gain: np.ndarray  # float32[n_nodes]  (split gain; 0 at leaves) — for importances
+    cover: np.ndarray  # float32[n_nodes]  (sum of hessians reaching node)
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.feature.shape[0])
+
+    def padded(self, max_nodes: int) -> "TreeArrays":
+        """Pad to ``max_nodes`` so trees stack into a ragged-free ensemble."""
+        n = self.n_nodes
+        if n > max_nodes:
+            raise ValueError(f"tree has {n} nodes > max_nodes={max_nodes}")
+        pad = max_nodes - n
+
+        def _pad(a: np.ndarray, fill) -> np.ndarray:
+            return np.concatenate([a, np.full((pad,), fill, dtype=a.dtype)])
+
+        # Padded nodes are self-looping leaves with value 0.
+        idx = np.arange(n, max_nodes, dtype=np.int32)
+        return TreeArrays(
+            feature=_pad(self.feature, -1),
+            threshold=_pad(self.threshold, 0.0),
+            left=np.concatenate([self.left, idx]),
+            right=np.concatenate([self.right, idx]),
+            value=_pad(self.value, 0.0),
+            gain=_pad(self.gain, 0.0),
+            cover=_pad(self.cover, 0.0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeBuilderConfig:
+    max_depth: int = 6
+    min_samples_split: int = 2
+    min_child_weight: float = 1e-3  # min hessian sum per child
+    reg_lambda: float = 1.0
+    gamma: float = 0.0  # min gain to split
+    max_bins: int = 64
+
+
+def compute_bins(X: np.ndarray, max_bins: int) -> list[np.ndarray]:
+    """Quantile bin edges per feature. Edges are *upper* bounds; a row goes
+    left iff ``x <= threshold``."""
+    edges = []
+    for j in range(X.shape[1]):
+        col = X[:, j]
+        qs = np.quantile(col, np.linspace(0, 1, max_bins + 1)[1:-1])
+        e = np.unique(qs.astype(np.float64))
+        edges.append(e)
+    return edges
+
+
+def bin_features(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
+    """Map raw features to bin indices (uint16)."""
+    out = np.empty(X.shape, dtype=np.uint16)
+    for j, e in enumerate(edges):
+        out[:, j] = np.searchsorted(e, X[:, j], side="left")
+    return out
+
+
+def _leaf_value(G: float, H: float, lam: float) -> float:
+    return float(-G / (H + lam))
+
+
+def build_tree(
+    Xb: np.ndarray,
+    edges: list[np.ndarray],
+    grad: np.ndarray,
+    hess: np.ndarray,
+    cfg: TreeBuilderConfig,
+    rng: Optional[np.random.Generator] = None,
+    colsample: float = 1.0,
+) -> TreeArrays:
+    """Greedy BFS histogram tree on pre-binned features ``Xb``."""
+    n, d = Xb.shape
+    feature, threshold, left, right, value, gains, covers = [], [], [], [], [], [], []
+
+    # Each queue entry: (node_id, row_indices, depth)
+    def new_node() -> int:
+        feature.append(-1)
+        threshold.append(0.0)
+        left.append(0)
+        right.append(0)
+        value.append(0.0)
+        gains.append(0.0)
+        covers.append(0.0)
+        return len(feature) - 1
+
+    root = new_node()
+    stack = [(root, np.arange(n), 0)]
+    lam = cfg.reg_lambda
+
+    while stack:
+        nid, rows, depth = stack.pop()
+        g = grad[rows]
+        h = hess[rows]
+        G, H = float(g.sum()), float(h.sum())
+        value[nid] = _leaf_value(G, H, lam)
+        covers[nid] = H
+        parent_score = G * G / (H + lam)
+
+        make_leaf = (
+            depth >= cfg.max_depth
+            or rows.size < cfg.min_samples_split
+            or H < 2 * cfg.min_child_weight
+        )
+        best = None  # (gain, feat, bin_idx)
+        if not make_leaf:
+            feats = np.arange(d)
+            if colsample < 1.0 and rng is not None:
+                k = max(1, int(round(colsample * d)))
+                feats = rng.choice(d, size=k, replace=False)
+            for j in feats:
+                e = edges[j]
+                nb = e.size + 1
+                if nb <= 1:
+                    continue
+                b = Xb[rows, j]
+                Gh = np.bincount(b, weights=g, minlength=nb)
+                Hh = np.bincount(b, weights=h, minlength=nb)
+                GL = np.cumsum(Gh)[:-1]
+                HL = np.cumsum(Hh)[:-1]
+                GR = G - GL
+                HR = H - HL
+                ok = (HL >= cfg.min_child_weight) & (HR >= cfg.min_child_weight)
+                if not ok.any():
+                    continue
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    gain = 0.5 * (
+                        GL * GL / (HL + lam) + GR * GR / (HR + lam) - parent_score
+                    ) - cfg.gamma
+                gain = np.where(ok, gain, -np.inf)
+                bi = int(np.argmax(gain))
+                if best is None or gain[bi] > best[0]:
+                    best = (float(gain[bi]), int(j), bi)
+            if best is None or best[0] <= 0.0:
+                make_leaf = True
+
+        if make_leaf:
+            left[nid] = nid
+            right[nid] = nid
+            continue
+
+        gbest, j, bi = best
+        thr = float(edges[j][bi])
+        go_left = Xb[rows, j] <= bi
+        lrows, rrows = rows[go_left], rows[~go_left]
+        lid, rid = new_node(), new_node()
+        feature[nid] = j
+        threshold[nid] = thr
+        left[nid] = lid
+        right[nid] = rid
+        gains[nid] = gbest
+        stack.append((lid, lrows, depth + 1))
+        stack.append((rid, rrows, depth + 1))
+
+    return TreeArrays(
+        feature=np.asarray(feature, np.int32),
+        threshold=np.asarray(threshold, np.float32),
+        left=np.asarray(left, np.int32),
+        right=np.asarray(right, np.int32),
+        value=np.asarray(value, np.float32),
+        gain=np.asarray(gains, np.float32),
+        cover=np.asarray(covers, np.float32),
+    )
+
+
+def predict_tree_np(tree: TreeArrays, X: np.ndarray, max_depth: int) -> np.ndarray:
+    """Numpy oracle for a single tree (matches JAX/Pallas descent exactly)."""
+    idx = np.zeros(X.shape[0], dtype=np.int64)
+    for _ in range(max_depth + 1):
+        f = tree.feature[idx]
+        leaf = f < 0
+        fx = X[np.arange(X.shape[0]), np.maximum(f, 0)]
+        go_left = fx <= tree.threshold[idx]
+        nxt = np.where(go_left, tree.left[idx], tree.right[idx])
+        idx = np.where(leaf, idx, nxt)
+    return tree.value[idx].astype(np.float64)

@@ -1,0 +1,106 @@
+"""Beyond-paper: uncertainty quantification + ensemble stacking — both named
+as future work in the paper (§5.4 "Add prediction intervals", "Try ensemble
+stacking").
+
+- Prediction intervals: RF per-tree spread (quantiles of the bootstrap
+  ensemble) and GBT residual-conformal intervals (split-conformal: hold-out
+  residual quantile added to point predictions — distribution-free coverage).
+- Stacking: ridge meta-learner over out-of-fold predictions of the zoo.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .ensemble_base import PackedEnsemble
+from .forest import RandomForestRegressor
+from .linear import Ridge
+from .metrics import kfold_indices
+from .tree import TreeArrays, predict_tree_np
+
+__all__ = ["rf_prediction_interval", "ConformalRegressor", "StackingRegressor"]
+
+
+def _per_tree_predictions(ens: PackedEnsemble, X: np.ndarray) -> np.ndarray:
+    """[n_trees, n] matrix of per-tree outputs (numpy path)."""
+    out = np.zeros((ens.n_trees, X.shape[0]))
+    for b in range(ens.n_trees):
+        t = TreeArrays(
+            feature=np.asarray(ens.feature[b]), threshold=np.asarray(ens.threshold[b]),
+            left=np.asarray(ens.left[b]), right=np.asarray(ens.right[b]),
+            value=np.asarray(ens.value[b]),
+            gain=np.zeros(1), cover=np.zeros(1),
+        )
+        out[b] = predict_tree_np(t, X, ens.max_depth)
+    return out
+
+
+def rf_prediction_interval(
+    model: RandomForestRegressor, X: np.ndarray, alpha: float = 0.1
+):
+    """(lo, mid, hi) from the bootstrap-tree distribution (RF ensemble spread)."""
+    ens = model.ensemble
+    per_tree = ens.base_score + _per_tree_predictions(ens, X)  # each tree is mean-offset
+    lo = np.quantile(per_tree, alpha / 2, axis=0)
+    hi = np.quantile(per_tree, 1 - alpha / 2, axis=0)
+    return lo, per_tree.mean(axis=0), hi
+
+
+class ConformalRegressor:
+    """Split-conformal wrapper: distribution-free 1-alpha coverage intervals
+    around any point regressor."""
+
+    def __init__(self, base_model, calib_frac: float = 0.25, seed: int = 0):
+        self.base = base_model
+        self.calib_frac = calib_frac
+        self.seed = seed
+        self.q_: Optional[float] = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray, alpha: float = 0.1):
+        rng = np.random.default_rng(self.seed)
+        n = X.shape[0]
+        perm = rng.permutation(n)
+        n_cal = max(2, int(round(self.calib_frac * n)))
+        cal, tr = perm[:n_cal], perm[n_cal:]
+        self.base.fit(X[tr], y[tr])
+        resid = np.abs(y[cal] - self.base.predict(X[cal]))
+        k = min(int(np.ceil((1 - alpha) * (n_cal + 1))), n_cal)
+        self.q_ = float(np.sort(resid)[k - 1])
+        return self
+
+    def predict_interval(self, X: np.ndarray):
+        mid = self.base.predict(X)
+        return mid - self.q_, mid, mid + self.q_
+
+
+class StackingRegressor:
+    """Out-of-fold stacking: base models' OOF predictions -> ridge meta."""
+
+    def __init__(self, make_models: Dict[str, callable], k: int = 5,
+                 meta_alpha: float = 1.0, seed: int = 42):
+        self.make_models = make_models
+        self.k = k
+        self.meta = Ridge(alpha=meta_alpha)
+        self.models_ = {}
+        self.seed = seed
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        n = X.shape[0]
+        oof = np.zeros((n, len(self.make_models)))
+        for j, (name, mk) in enumerate(self.make_models.items()):
+            for tr, te in kfold_indices(n, self.k, self.seed):
+                m = mk()
+                m.fit(X[tr], y[tr])
+                oof[te, j] = m.predict(X[te])
+            final = mk()
+            final.fit(X, y)
+            self.models_[name] = final
+        self.meta.fit(oof, y)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        base = np.stack([m.predict(X) for m in self.models_.values()], axis=1)
+        return self.meta.predict(base)

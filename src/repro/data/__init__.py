@@ -1,0 +1,21 @@
+"""repro.data — storage backends, record formats, benchmarks, and the tunable
+training input pipeline the paper's predictor optimizes."""
+
+from .bench_io import (  # noqa: F401
+    bench_concurrent_read,
+    bench_random_read,
+    bench_sequential_read,
+    make_test_file,
+)
+from .dataset import collect_observations, observations_to_columns  # noqa: F401
+from .formats import FORMATS, DatasetReader, open_dataset, write_dataset  # noqa: F401
+from .pipeline import (  # noqa: F401
+    DataPipeline,
+    ImageRecordCodec,
+    PipelineConfig,
+    SyntheticTokenSource,
+    TabularRecordCodec,
+    TokenRecordCodec,
+)
+from .storage import BACKENDS, StorageBackend, get_backend  # noqa: F401
+from .telemetry import StepTelemetry  # noqa: F401

@@ -1,0 +1,144 @@
+"""I/O microbenchmarks (paper §3.1.1): sequential, random, concurrent reads.
+
+Each function returns the canonical observation fields so rows drop straight
+into the predictor's FeatureSpec.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import pathlib
+import time
+from typing import Optional
+
+import numpy as np
+
+from .storage import StorageBackend, drop_page_cache_hint
+
+__all__ = [
+    "make_test_file",
+    "bench_sequential_read",
+    "bench_random_read",
+    "bench_concurrent_read",
+]
+
+
+def make_test_file(backend: StorageBackend, name: str, size_mb: float, seed: int = 0) -> pathlib.Path:
+    """Create a test file of pseudo-random bytes (incompressible)."""
+    p = backend.path(name)
+    if p.exists() and p.stat().st_size == int(size_mb * 1e6):
+        return p
+    rng = np.random.default_rng(seed)
+    chunk = rng.integers(0, 256, size=1 << 20, dtype=np.uint8).tobytes()
+    remaining = int(size_mb * 1e6)
+    with open(p, "wb") as f:
+        while remaining > 0:
+            n = min(remaining, len(chunk))
+            f.write(chunk[:n])
+            remaining -= n
+    return p
+
+
+def bench_sequential_read(
+    backend: StorageBackend, path: pathlib.Path, block_kb: int, cold: bool = False
+) -> dict:
+    if cold:
+        drop_page_cache_hint(path)
+    size = path.stat().st_size
+    bs = block_kb * 1024
+    t0 = time.perf_counter()
+    n_ops = 0
+    with open(path, "rb") as f:
+        off = 0
+        while off < size:
+            data = backend.read_block(f, off, min(bs, size - off))
+            if not data:
+                break
+            off += len(data)
+            n_ops += 1
+    dt = max(time.perf_counter() - t0, 1e-9)
+    return {
+        "block_kb": block_kb,
+        "file_size_mb": size / 1e6,
+        "throughput_mb_s": size / 1e6 / dt,
+        "iops": n_ops / dt,
+        "n_threads": 1,
+        "elapsed_s": dt,
+    }
+
+
+def bench_random_read(
+    backend: StorageBackend,
+    path: pathlib.Path,
+    n_samples: int,
+    sample_kb: int = 4,
+    seed: int = 0,
+    cold: bool = False,
+) -> dict:
+    if cold:
+        drop_page_cache_hint(path)
+    size = path.stat().st_size
+    bs = sample_kb * 1024
+    rng = np.random.default_rng(seed)
+    offsets = rng.integers(0, max(size - bs, 1), size=n_samples)
+    offsets = (offsets // bs) * bs  # aligned
+    t0 = time.perf_counter()
+    read_bytes = 0
+    with open(path, "rb") as f:
+        for off in offsets:
+            read_bytes += len(backend.read_block(f, int(off), bs))
+    dt = max(time.perf_counter() - t0, 1e-9)
+    return {
+        "block_kb": sample_kb,
+        "file_size_mb": size / 1e6,
+        "n_samples": n_samples,
+        "throughput_mb_s": read_bytes / 1e6 / dt,
+        "iops": n_samples / dt,
+        "n_threads": 1,
+        "elapsed_s": dt,
+    }
+
+
+def bench_concurrent_read(
+    backend: StorageBackend,
+    path: pathlib.Path,
+    n_threads: int,
+    per_thread_mb: float = 8.0,
+    block_kb: int = 256,
+    seed: int = 0,
+) -> dict:
+    """Aggregate throughput with k threads doing strided sequential reads."""
+    size = path.stat().st_size
+    bs = block_kb * 1024
+    per_bytes = int(per_thread_mb * 1e6)
+
+    def worker(tid: int) -> int:
+        rng = np.random.default_rng(seed + tid)
+        start = int(rng.integers(0, max(size - per_bytes, 1)))
+        start = (start // bs) * bs
+        done = 0
+        with open(path, "rb") as f:
+            off = start
+            while done < per_bytes:
+                data = backend.read_block(f, off % max(size - bs, 1), bs)
+                if not data:
+                    break
+                done += len(data)
+                off += bs
+        return done
+
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=n_threads) as ex:
+        totals = list(ex.map(worker, range(n_threads)))
+    dt = max(time.perf_counter() - t0, 1e-9)
+    agg = sum(totals) / 1e6 / dt
+    return {
+        "block_kb": block_kb,
+        "file_size_mb": size / 1e6,
+        "n_threads": n_threads,
+        "throughput_mb_s": agg / n_threads,  # per-thread
+        "aggregate_throughput_mb_s": agg,
+        "iops": sum(totals) / bs / dt,
+        "elapsed_s": dt,
+    }

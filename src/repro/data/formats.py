@@ -1,0 +1,174 @@
+"""Record formats (paper §1.1's format axis: Parquet/ORC/TFRecord/WebDataset...).
+
+We implement four self-contained formats with the same read API so the
+benchmark/classifier can compare them:
+
+- RAW       fixed-size records, no index (offset = i * record_size)
+- PACKED    variable-size records + uint64 offset index (TFRecord-like)
+- COMPRESSED zlib-per-record + index (compressed WebDataset-like)
+- SHARDED   PACKED split across k shard files (webdataset/parquet-row-group-like)
+
+All readers read via ``StorageBackend.read_block`` so simulated backends
+charge latency/bandwidth, and support ``block_kb``-aligned reads (the paper's
+block-size knob): a record fetch reads whole aligned blocks covering it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import struct
+import zlib
+from typing import List, Sequence
+
+import numpy as np
+
+from .storage import StorageBackend
+
+__all__ = ["FORMATS", "write_dataset", "open_dataset", "DatasetReader"]
+
+MAGIC = b"RPR1"
+
+
+def _index_path(base: pathlib.Path) -> pathlib.Path:
+    return base.with_suffix(base.suffix + ".idx")
+
+
+def write_dataset(
+    backend: StorageBackend,
+    name: str,
+    records: Sequence[bytes],
+    fmt: str = "packed",
+    n_shards: int = 4,
+) -> dict:
+    """Write records in ``fmt``; returns a manifest dict."""
+    if fmt == "raw":
+        sizes = {len(r) for r in records}
+        assert len(sizes) == 1, "raw format needs fixed-size records"
+        rec_size = sizes.pop()
+        p = backend.path(f"{name}.raw")
+        with open(p, "wb") as f:
+            for r in records:
+                f.write(r)
+        manifest = {
+            "format": "raw",
+            "files": [str(p)],
+            "record_size": rec_size,
+            "n_records": len(records),
+        }
+    elif fmt in ("packed", "compressed"):
+        p = backend.path(f"{name}.{fmt}")
+        offs = [0]
+        with open(p, "wb") as f:
+            f.write(MAGIC)
+            pos = 4
+            offs = []
+            for r in records:
+                payload = zlib.compress(r, 1) if fmt == "compressed" else r
+                f.write(struct.pack("<I", len(payload)))
+                f.write(payload)
+                offs.append(pos)
+                pos += 4 + len(payload)
+        idx = np.asarray(offs, np.uint64)
+        idx.tofile(_index_path(p))
+        manifest = {
+            "format": fmt,
+            "files": [str(p)],
+            "n_records": len(records),
+        }
+    elif fmt == "sharded":
+        files = []
+        per = (len(records) + n_shards - 1) // n_shards
+        counts = []
+        for s in range(n_shards):
+            chunk = records[s * per : (s + 1) * per]
+            if not chunk:
+                break
+            sub = write_dataset(backend, f"{name}.shard{s}", chunk, "packed")
+            files.append(sub["files"][0])
+            counts.append(len(chunk))
+        manifest = {
+            "format": "sharded",
+            "files": files,
+            "shard_counts": counts,
+            "n_records": len(records),
+        }
+    else:
+        raise ValueError(f"unknown format {fmt!r}")
+
+    manifest["backend"] = backend.name
+    mp = backend.path(f"{name}.manifest.json")
+    mp.write_text(json.dumps(manifest))
+    manifest["manifest_path"] = str(mp)
+    return manifest
+
+
+@dataclasses.dataclass
+class DatasetReader:
+    backend: StorageBackend
+    manifest: dict
+    block_kb: int = 64
+
+    def __post_init__(self):
+        self._files = [open(p, "rb") for p in self.manifest["files"]]
+        fmt = self.manifest["format"]
+        if fmt in ("packed", "compressed"):
+            self._idx = [np.fromfile(_index_path(pathlib.Path(p)), np.uint64) for p in self.manifest["files"]]
+        elif fmt == "sharded":
+            self._idx = [np.fromfile(_index_path(pathlib.Path(p)), np.uint64) for p in self.manifest["files"]]
+            self._cum = np.cumsum([0] + list(self.manifest["shard_counts"]))
+        self._file_sizes = [pathlib.Path(p).stat().st_size for p in self.manifest["files"]]
+
+    def __len__(self) -> int:
+        return int(self.manifest["n_records"])
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self._file_sizes))
+
+    def _read_span(self, fi: int, offset: int, size: int) -> bytes:
+        """Block-aligned read covering [offset, offset+size)."""
+        bs = self.block_kb * 1024
+        start = (offset // bs) * bs
+        end = min(((offset + size + bs - 1) // bs) * bs, self._file_sizes[fi])
+        data = self.backend.read_block(self._files[fi], start, end - start)
+        return data[offset - start : offset - start + size]
+
+    def read(self, i: int) -> bytes:
+        fmt = self.manifest["format"]
+        if fmt == "raw":
+            rs = self.manifest["record_size"]
+            return self._read_span(0, i * rs, rs)
+        if fmt in ("packed", "compressed"):
+            fi, local = 0, i
+        else:  # sharded
+            fi = int(np.searchsorted(self._cum, i, side="right") - 1)
+            local = i - int(self._cum[fi])
+            fmt = "packed"
+        off = int(self._idx[fi][local])
+        (ln,) = struct.unpack("<I", self._read_span(fi, off, 4))
+        payload = self._read_span(fi, off + 4, ln)
+        if self.manifest["format"] == "compressed":
+            return zlib.decompress(payload)
+        return payload
+
+    def read_batch(self, indices) -> List[bytes]:
+        return [self.read(int(i)) for i in indices]
+
+    def close(self):
+        for f in self._files:
+            f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+FORMATS = ("raw", "packed", "compressed", "sharded")
+
+
+def open_dataset(backend: StorageBackend, manifest: dict, block_kb: int = 64) -> DatasetReader:
+    return DatasetReader(backend, manifest, block_kb)

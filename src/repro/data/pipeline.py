@@ -1,0 +1,264 @@
+"""The tunable training input pipeline (paper §3.1.2 made production-grade).
+
+Knobs = the paper's features: batch_size, num_workers, prefetch_depth,
+block_kb, format, backend. Properties needed at pod scale:
+
+- **per-host sharding**: host h of H reads global indices h::H — each pod
+  host feeds only its data-parallel slice.
+- **restart-exact**: the sample order is a pure function of (seed, epoch,
+  step); resuming from a checkpointed step reproduces the same batches.
+- **live reconfiguration**: ``reconfigure()`` swaps worker pool / prefetch /
+  block size between steps without losing position (the autotuner's actuator).
+- **prefetch**: a background thread keeps ``prefetch_depth`` batches ready;
+  workers fetch records concurrently within a batch.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+from .formats import DatasetReader
+
+__all__ = ["PipelineConfig", "TokenRecordCodec", "ImageRecordCodec",
+           "TabularRecordCodec", "DataPipeline", "SyntheticTokenSource"]
+
+
+class _ProducerError:
+    """Wraps an exception raised in the prefetch thread for re-raise."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    batch_size: int = 32
+    num_workers: int = 0  # 0 = synchronous in-thread fetch
+    prefetch_depth: int = 2
+    block_kb: int = 64
+    shuffle: bool = True
+    drop_last: bool = True
+    seed: int = 0
+
+    def replace(self, **kw) -> "PipelineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class TokenRecordCodec:
+    """Fixed-length int32 token records <-> bytes."""
+
+    def __init__(self, seq_len: int):
+        self.seq_len = seq_len
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * self.seq_len
+
+    def encode(self, tokens: np.ndarray) -> bytes:
+        assert tokens.shape == (self.seq_len,)
+        return np.asarray(tokens, np.int32).tobytes()
+
+    def decode(self, data: bytes) -> np.ndarray:
+        return np.frombuffer(data, np.int32, count=self.seq_len)
+
+
+class ImageRecordCodec:
+    """CIFAR-style fixed-size image records (paper §3.1.2: 32x32 RGB uint8)."""
+
+    def __init__(self, h: int = 32, w: int = 32, c: int = 3):
+        self.shape = (h, w, c)
+
+    @property
+    def nbytes(self) -> int:
+        h, w, c = self.shape
+        return h * w * c
+
+    def encode(self, img: np.ndarray) -> bytes:
+        assert img.shape == self.shape
+        return np.asarray(img, np.uint8).tobytes()
+
+    def decode(self, data: bytes) -> np.ndarray:
+        return np.frombuffer(data, np.uint8, count=self.nbytes).reshape(self.shape)
+
+
+class TabularRecordCodec:
+    """Fixed-width float32 feature rows (paper §3.1.2 tabular workloads)."""
+
+    def __init__(self, n_features: int):
+        self.n_features = n_features
+
+    @property
+    def nbytes(self) -> int:
+        return 4 * self.n_features
+
+    def encode(self, row: np.ndarray) -> bytes:
+        assert row.shape == (self.n_features,)
+        return np.asarray(row, np.float32).tobytes()
+
+    def decode(self, data: bytes) -> np.ndarray:
+        return np.frombuffer(data, np.float32, count=self.n_features)
+
+
+class SyntheticTokenSource:
+    """I/O-free source: deterministic tokens(i). Used by smoke tests and the
+    dry-run path where no real storage is wanted."""
+
+    def __init__(self, n_records: int, seq_len: int, vocab: int, seed: int = 0):
+        self.n_records, self.seq_len, self.vocab, self.seed = n_records, seq_len, vocab, seed
+
+    def __len__(self):
+        return self.n_records
+
+    def read(self, i: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 1_000_003 + i)
+        return rng.integers(0, self.vocab, size=self.seq_len, dtype=np.int32)
+
+    def record_nbytes(self) -> int:
+        return 4 * self.seq_len
+
+
+class _ReaderSource:
+    """Adapter: DatasetReader + codec -> sample source."""
+
+    def __init__(self, reader: DatasetReader, codec: TokenRecordCodec):
+        self.reader, self.codec = reader, codec
+
+    def __len__(self):
+        return len(self.reader)
+
+    def read(self, i: int) -> np.ndarray:
+        return self.codec.decode(self.reader.read(i))
+
+    def record_nbytes(self) -> int:
+        return self.codec.nbytes
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        source,
+        config: PipelineConfig,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        collate: Optional[Callable] = None,
+    ):
+        self.source = source
+        self.config = config
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.collate = collate or (lambda recs: np.stack(recs))
+        self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._rebuild_pool()
+
+    @classmethod
+    def from_reader(cls, reader, seq_len: int, config: PipelineConfig, **kw):
+        # push block_kb into the reader (the knob acts at the format layer)
+        reader.block_kb = config.block_kb
+        return cls(_ReaderSource(reader, TokenRecordCodec(seq_len)), config, **kw)
+
+    # -- deterministic order ------------------------------------------------
+    def epoch_order(self, epoch: int) -> np.ndarray:
+        n = len(self.source)
+        if self.config.shuffle:
+            rng = np.random.default_rng((self.config.seed, epoch))
+            order = rng.permutation(n)
+        else:
+            order = np.arange(n)
+        return order[self.host_id :: self.n_hosts]
+
+    def steps_per_epoch(self) -> int:
+        n = self.epoch_order(0).shape[0]
+        b = self.config.batch_size
+        return n // b if self.config.drop_last else (n + b - 1) // b
+
+    def batch_indices(self, epoch: int, step: int) -> np.ndarray:
+        order = self.epoch_order(epoch)
+        b = self.config.batch_size
+        return order[step * b : (step + 1) * b]
+
+    # -- fetching -------------------------------------------------------------
+    def _rebuild_pool(self):
+        old = self._pool
+        self._pool = (
+            cf.ThreadPoolExecutor(max_workers=self.config.num_workers)
+            if self.config.num_workers > 0
+            else None
+        )
+        if old is not None:
+            old.shutdown(wait=False)
+
+    def fetch_batch(self, epoch: int, step: int) -> np.ndarray:
+        idx = self.batch_indices(epoch, step)
+        pool = self._pool  # snapshot: reconfigure() may swap it concurrently
+        if pool is not None:
+            recs = list(pool.map(self.source.read, idx))
+        else:
+            recs = [self.source.read(int(i)) for i in idx]
+        return self.collate(recs)
+
+    def batch_nbytes(self) -> int:
+        return self.config.batch_size * self.source.record_nbytes()
+
+    # -- prefetched iteration ---------------------------------------------
+    def iter_epoch(self, epoch: int, start_step: int = 0) -> Iterator[np.ndarray]:
+        """Prefetched iterator; restart-exact given (epoch, start_step)."""
+        steps = self.steps_per_epoch()
+        depth = max(1, self.config.prefetch_depth)
+        q: queue.Queue = queue.Queue(maxsize=depth)
+        stop = threading.Event()
+
+        def _put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer():
+            try:
+                for s in range(start_step, steps):
+                    if stop.is_set():
+                        return
+                    if not _put(self.fetch_batch(epoch, s)):
+                        return
+                _put(None)
+            except BaseException as e:  # noqa: BLE001 — surface in consumer
+                _put(_ProducerError(e))
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                if isinstance(item, _ProducerError):
+                    raise item.exc
+                yield item
+        finally:
+            stop.set()
+            t.join(timeout=5.0)
+
+    # -- live reconfiguration (autotuner actuator) --------------------------
+    def reconfigure(self, **knobs) -> PipelineConfig:
+        old = self.config
+        self.config = self.config.replace(
+            **{k: v for k, v in knobs.items() if hasattr(old, k)}
+        )
+        if self.config.num_workers != old.num_workers:
+            self._rebuild_pool()
+        if self.config.block_kb != old.block_kb and hasattr(self.source, "reader"):
+            self.source.reader.block_kb = self.config.block_kb
+        return self.config
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)

@@ -1,0 +1,108 @@
+"""Storage backends (paper §3.1.1: NVMe / network storage / tmpfs).
+
+This container exposes two *real* tiers — tmpfs (/dev/shm) and local disk —
+plus a calibrated simulator for network-attached storage (latency + shared
+bandwidth cap), so the benchmark matrix covers the paper's three backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import BinaryIO, Optional
+
+__all__ = ["StorageBackend", "get_backend", "BACKENDS", "drop_page_cache_hint"]
+
+
+@dataclasses.dataclass
+class StorageBackend:
+    name: str
+    root: pathlib.Path
+    # Simulated constraints (None = native speed).
+    latency_s: Optional[float] = None  # per-operation latency
+    bandwidth_mb_s: Optional[float] = None  # shared link cap
+
+    def __post_init__(self):
+        self.root = pathlib.Path(self.root)
+        self._lock = threading.Lock()
+        self._link_free_at = 0.0
+
+    def path(self, name: str) -> pathlib.Path:
+        self.root.mkdir(parents=True, exist_ok=True)
+        return self.root / name
+
+    # -- throttled I/O (identity for native backends) ----------------------
+    def charge(self, nbytes: int):
+        """Apply simulated latency/bandwidth for an I/O of ``nbytes``."""
+        if self.latency_s is None and self.bandwidth_mb_s is None:
+            return
+        delay = self.latency_s or 0.0
+        if self.bandwidth_mb_s:
+            xfer = nbytes / (self.bandwidth_mb_s * 1e6)
+            with self._lock:  # shared-link contention across threads
+                now = time.perf_counter()
+                start = max(now, self._link_free_at)
+                self._link_free_at = start + xfer
+                delay += (start - now) + xfer
+        if delay > 0:
+            time.sleep(delay)
+
+    def read_block(self, f: BinaryIO, offset: int, size: int) -> bytes:
+        # os.pread is atomic w.r.t. the file offset -> safe under concurrent
+        # worker threads sharing one handle (DataPipeline workers, §3.1.1
+        # concurrent benchmarks).
+        data = os.pread(f.fileno(), size, offset)
+        self.charge(len(data))
+        return data
+
+    def cleanup(self):
+        if self.root.exists():
+            shutil.rmtree(self.root, ignore_errors=True)
+
+
+def _default_roots():
+    base = os.environ.get("REPRO_IO_DIR")
+    disk = pathlib.Path(base) if base else pathlib.Path("/tmp/repro_io")
+    shm = pathlib.Path("/dev/shm/repro_io")
+    return disk, shm
+
+
+def make_backends() -> dict:
+    disk, shm = _default_roots()
+    return {
+        # tmpfs: in-memory filesystem (paper's fastest tier)
+        "tmpfs": StorageBackend("tmpfs", shm),
+        # local disk (stands in for the paper's NVMe tier)
+        "disk": StorageBackend("disk", disk),
+        # simulated network-attached storage: 1 ms op latency, 1.2 GB/s link
+        "network_sim": StorageBackend(
+            "network_sim", disk / "net", latency_s=1e-3, bandwidth_mb_s=1200.0
+        ),
+        # simulated object store: high latency, 400 MB/s
+        "object_sim": StorageBackend(
+            "object_sim", disk / "obj", latency_s=8e-3, bandwidth_mb_s=400.0
+        ),
+    }
+
+
+BACKENDS = make_backends()
+
+
+def get_backend(name: str) -> StorageBackend:
+    return BACKENDS[name]
+
+
+def drop_page_cache_hint(path: pathlib.Path):
+    """Best-effort cold-cache: posix_fadvise(DONTNEED). No-op on failure."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        finally:
+            os.close(fd)
+    except OSError:
+        pass

@@ -1,0 +1,80 @@
+"""Pipeline telemetry (paper §3.1.2 measurements): samples/sec,
+data_loading_ratio, throughput, and simulated accelerator utilization.
+
+The trainer wraps each step in ``data_wait()`` / ``compute()`` blocks; the
+telemetry window then exports exactly the paper's pipeline features, feeding
+the OnlineAutotuner.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+from typing import Deque, Optional
+
+__all__ = ["StepTelemetry"]
+
+
+class StepTelemetry:
+    def __init__(self, window: int = 50):
+        self.window = window
+        self.data_times: Deque[float] = collections.deque(maxlen=window)
+        self.compute_times: Deque[float] = collections.deque(maxlen=window)
+        self.batch_sizes: Deque[int] = collections.deque(maxlen=window)
+        self.batch_bytes: Deque[int] = collections.deque(maxlen=window)
+
+    @contextlib.contextmanager
+    def data_wait(self):
+        t0 = time.perf_counter()
+        yield
+        self.data_times.append(time.perf_counter() - t0)
+
+    @contextlib.contextmanager
+    def compute(self):
+        t0 = time.perf_counter()
+        yield
+        self.compute_times.append(time.perf_counter() - t0)
+
+    def record_batch(self, n_samples: int, n_bytes: int):
+        self.batch_sizes.append(n_samples)
+        self.batch_bytes.append(n_bytes)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_steps(self) -> int:
+        return len(self.compute_times)
+
+    def data_loading_ratio(self) -> float:
+        d = sum(self.data_times)
+        c = sum(self.compute_times)
+        tot = d + c
+        return d / tot if tot > 0 else 0.0
+
+    def samples_per_second(self) -> float:
+        tot = sum(self.data_times) + sum(self.compute_times)
+        return sum(self.batch_sizes) / tot if tot > 0 else 0.0
+
+    def throughput_mb_s(self) -> float:
+        tot = sum(self.data_times) + sum(self.compute_times)
+        return sum(self.batch_bytes) / 1e6 / tot if tot > 0 else 0.0
+
+    def delivered_mb_s(self) -> float:
+        """Bytes per second of *data-wait* time: the pipeline's own speed."""
+        d = sum(self.data_times)
+        return sum(self.batch_bytes) / 1e6 / d if d > 0 else float("inf")
+
+    def simulated_utilization(self) -> float:
+        """Paper Fig 1: fraction of wall time the accelerator computes."""
+        return 1.0 - self.data_loading_ratio()
+
+    def features(self, batch_size: int, num_workers: int, block_kb: int = 0) -> dict:
+        """Export the paper's pipeline-benchmark features for the autotuner."""
+        return {
+            "batch_size": batch_size,
+            "num_workers": num_workers,
+            "block_kb": block_kb,
+            "samples_per_second": self.samples_per_second(),
+            "data_loading_ratio": self.data_loading_ratio(),
+            "throughput_mb_s": self.throughput_mb_s(),
+        }

@@ -1,0 +1,9 @@
+"""repro.kernels — Pallas TPU kernels (validated in interpret mode on CPU).
+
+flash_attention: dominant FLOP hot-spot of every transformer cell.
+rmsnorm:        fused memory-bound norm.
+gbt_predict:    the paper's hot path — batched ensemble inference for
+                autotune sweeps, one-hot-matmul descent (gather-free).
+"""
+
+from .ops import flash_attention_op, gbt_predict_op, rmsnorm_op  # noqa: F401

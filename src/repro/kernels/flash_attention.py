@@ -1,0 +1,133 @@
+"""Flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Design (TPU-native, not a CUDA port):
+- grid = (batch*kv_heads*q_groups, n_q_blocks, n_kv_blocks); the kv-block axis
+  is the innermost, sequentially-executed grid dimension on TPU, so the
+  online-softmax state (m, l, acc) lives in VMEM scratch and persists across
+  kv steps — no HBM round-trip for scores, exactly the flash recurrence.
+- BlockSpecs stream one (q_block x d) and one (kv_block x d) tile at a time;
+  MXU-aligned block sizes (multiples of 128 on the matmul dims).
+- Masks: causal, sliding-window, prefix-LM — computed from global indices.
+
+The reference oracle is ref.py::attention_reference; tests sweep shapes and
+dtypes in interpret mode (CPU) against it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 prefix: Optional[int], q_block: int, kv_block: int,
+                 n_kv: int, seq_q: int, seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [q_block, d]
+    k = k_ref[0].astype(jnp.float32)  # [kv_block, d]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [q_block, kv_block]
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+    ok = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        allowed = k_pos <= q_pos
+        if prefix is not None:
+            allowed = allowed | (k_pos < prefix)
+        ok &= allowed
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ()))
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "prefix", "scale", "q_block", "kv_block", "interpret"),
+)
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_block: int = 256,
+    kv_block: int = 256,
+    interpret: bool = False,
+):
+    """q: [B, Sq, H, D]; k/v: [B, Skv, KVH, D] -> [B, Sq, H, D].
+
+    GQA handled by folding the group into the batch*head grid axis.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = float(scale if scale is not None else D ** -0.5)
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+
+    # [B, S, H, D] -> [B*H, S, D] with H-major grouping matching kv heads
+    qg = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kg = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Skv, D)
+    vg = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Skv, D)
+
+    n_q = Sq // q_block
+    n_kv = Skv // kv_block
+    grid = (B * H, n_q, n_kv)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window, prefix=prefix,
+        q_block=q_block, kv_block=kv_block, n_kv=n_kv, seq_q=Sq, seq_kv=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

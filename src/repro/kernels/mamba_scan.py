@@ -1,0 +1,116 @@
+"""Mamba selective-scan chunk kernel (TPU adaptation of the CUDA fused scan).
+
+Contract: projections (dt/B/C) happen outside (they contract over the full
+d_inner and stay cheap); the kernel consumes dt, B, C, x and forms the gates
+``a = exp(dt*A)`` and ``b = dt*B*x`` IN REGISTERS — the [S, di, ds] gate
+tensors never touch HBM. HBM traffic is exactly the kernel operands:
+x, dt (di-wide), B, C (ds-wide), y out — ~10 bytes/element of [S, di] vs
+the reference lowering's ~100s (see EXPERIMENTS.md §Perf T1).
+
+Grid: (batch, di_blocks, chunks); the chunk axis is innermost/sequential on
+TPU, so the recurrence state h [di_block, ds] lives in VMEM scratch across
+chunk steps. Within a chunk the recurrence runs as a fori_loop of VPU ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_log_ref, d_ref, o_ref, h_scr,
+                 *, chunk: int, ds: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # [chunk, dib]
+    dt = dt_ref[0].astype(jnp.float32)  # [chunk, dib]
+    B = b_ref[0].astype(jnp.float32)  # [chunk, ds]
+    C = c_ref[0].astype(jnp.float32)  # [chunk, ds]
+    A = -jnp.exp(a_log_ref[0].astype(jnp.float32))  # [dib, ds]
+    D = d_ref[0].astype(jnp.float32)  # [dib]
+
+    def step(t, carry):
+        h, y = carry  # h: [dib, ds]; y: [chunk, dib]
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]  # [dib]
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)[0]
+        B_t = jax.lax.dynamic_slice_in_dim(B, t, 1, 0)[0]  # [ds]
+        C_t = jax.lax.dynamic_slice_in_dim(C, t, 1, 0)[0]
+        a_t = jnp.exp(dt_t[:, None] * A)  # [dib, ds] — in registers
+        b_t = (dt_t * x_t)[:, None] * B_t[None, :]
+        h = a_t * h + b_t
+        y_t = (h * C_t[None, :]).sum(axis=1) + D * x_t  # [dib]
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[None], t, 0)
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros_like(x)
+    h_end, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h_end
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "di_block", "interpret"),
+)
+def mamba_scan(x, dt, B, C, a_log, d_skip, *, chunk: int = 64,
+               di_block: int = 256, interpret: bool = False):
+    """x, dt: [b, S, di]; B, C: [b, S, ds]; a_log: [di, ds]; d_skip: [di].
+    Returns y [b, S, di] f32-accurate selective scan output."""
+    b, S, di = x.shape
+    ds = B.shape[-1]
+    chunk = min(chunk, S)
+    di_block = min(di_block, di)
+    assert S % chunk == 0 and di % di_block == 0
+    grid = (b * (di // di_block), 1, S // chunk)  # flat (batch x di-block)
+
+    # reshape to expose (batch*di_block) grid axis
+    xr = x.reshape(b, S, di // di_block, di_block).transpose(0, 2, 1, 3) \
+         .reshape(b * (di // di_block), S, di_block)
+    dtr = dt.reshape(b, S, di // di_block, di_block).transpose(0, 2, 1, 3) \
+         .reshape(b * (di // di_block), S, di_block)
+    Br = jnp.repeat(B, di // di_block, axis=0).reshape(b * (di // di_block), S, ds) \
+        if di // di_block > 1 else B
+    Cr = jnp.repeat(C, di // di_block, axis=0).reshape(b * (di // di_block), S, ds) \
+        if di // di_block > 1 else C
+    a_log_r = a_log.reshape(di // di_block, di_block, ds)
+    d_r = d_skip.reshape(di // di_block, di_block)
+    n_dib = di // di_block
+
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk, ds=ds),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, di_block), lambda g, _, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, di_block), lambda g, _, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda g, _, ci: (g, ci, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda g, _, ci: (g, ci, 0)),
+            pl.BlockSpec((1, di_block, ds), lambda g, _, ci, n=n_dib: (g % n, 0, 0)),
+            pl.BlockSpec((1, di_block), lambda g, _, ci, n=n_dib: (g % n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, di_block), lambda g, _, ci: (g, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((di_block, ds), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, Br, Cr, a_log_r.reshape(n_dib, di_block, ds), d_r)
+
+    y = out.reshape(b, n_dib, S, di_block).transpose(0, 2, 1, 3).reshape(b, S, di)
+    return y
+
+
+def analytic_hbm_bytes(b: int, S: int, di: int, ds: int,
+                       in_dtype_bytes: int = 2) -> int:
+    """Per-call HBM traffic of the kernel (operands only; gates in VMEM)."""
+    return (
+        b * S * di * (in_dtype_bytes + 4)  # x (in dtype) + dt f32
+        + 2 * b * S * ds * 4               # B, C
+        + b * S * di * 4                   # y out f32
+        + di * ds * 4 + di * 4             # A_log, D
+    )

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        prefix: Optional[int] = None,
+                        scale: Optional[float] = None):
+    """Dense softmax attention with the same masks as the kernel."""
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = float(scale if scale is not None else D ** -0.5)
+    q5 = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bshd->bhgqs", q5, k.astype(jnp.float32))
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        allowed = kp <= qp
+        if prefix is not None:
+            allowed = allowed | (kp < prefix)
+        ok &= allowed
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def rmsnorm_reference(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def gbt_predict_reference(X, feature, threshold, left, right, value,
+                          max_depth: int, base_score: float, scale: float):
+    """Dense-array ensemble descent (matches core.ensemble_base semantics).
+
+    X: [N, F] f32; tree arrays: [T, nodes].
+    """
+    X = jnp.asarray(X, jnp.float32)
+    N = X.shape[0]
+    T = feature.shape[0]
+
+    def one_tree(f, thr, l, r, val):
+        idx = jnp.zeros(N, jnp.int32)
+        for _ in range(max_depth + 1):
+            fi = f[idx]
+            leaf = fi < 0
+            fx = jnp.take_along_axis(X, jnp.maximum(fi, 0)[:, None], axis=1)[:, 0]
+            nxt = jnp.where(fx <= thr[idx], l[idx], r[idx])
+            idx = jnp.where(leaf, idx, nxt)
+        return val[idx]
+
+    per_tree = jax.vmap(one_tree)(feature, threshold, left, right, value)
+    return base_score + scale * per_tree.sum(axis=0)

@@ -1,0 +1,79 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# §Perf hillclimbing driver (see EXPERIMENTS.md §Perf for the log).
+# Three targets chosen from the baseline roofline table:
+#   T1 falcon-mamba-7b  prefill_32k 16x16   — worst roofline fraction (memory)
+#   T2 codeqwen1.5-7b   train_4k    2x16x16 — most collective-bound
+#   T3 granite-moe-1b   train_4k    16x16   — paper-representative (MoE+EP)
+# Each iteration: hypothesis -> change (cfg/rules) -> re-lower -> terms.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import sys  # noqa: E402
+
+from ..configs import get_config  # noqa: E402
+from ..parallel.rules import make_rules  # noqa: E402
+from .dryrun import run_cell  # noqa: E402
+
+OUT = pathlib.Path("/root/repo/results/hillclimb")
+
+
+def _iters_t1():
+    cfg = get_config("falcon-mamba-7b")
+    return "falcon-mamba-7b", "prefill_32k", False, [
+        ("it1_chunk_local_gates", cfg.replace(ssm_chunk_local=True), None),
+        ("it2_chunk256", cfg.replace(ssm_chunk_local=True, ssm_scan_chunk=256), None),
+        ("it3_chunk1024", cfg.replace(ssm_chunk_local=True, ssm_scan_chunk=1024), None),
+        ("it4_chunk4096", cfg.replace(ssm_chunk_local=True, ssm_scan_chunk=4096), None),
+    ]
+
+
+def _iters_t2():
+    cfg = get_config("codeqwen1.5-7b")
+    rules_sp = make_rules(cfg, "train", 256, multi_pod=True).replace(act_seq="model")
+    return "codeqwen1.5-7b", "train_4k", True, [
+        ("it1_seq_parallel", cfg, rules_sp),
+        ("it2_sp_qchunk1024", cfg.replace(q_chunk=1024), rules_sp),
+        ("it3_sp_qchunk2048", cfg.replace(q_chunk=2048), rules_sp),
+    ]
+
+
+def _iters_t3():
+    cfg = get_config("granite-moe-1b-a400m")
+    rules = make_rules(cfg, "train", 256, multi_pod=False)
+    rules_repl = rules.replace(expert=None)
+    return "granite-moe-1b-a400m", "train_4k", False, [
+        ("it1_local_dispatch", cfg.replace(moe_local_dispatch=True), None),
+        ("it2_replicate_experts",
+         cfg.replace(moe_local_dispatch=True, moe_replicate_experts=True), rules_repl),
+        ("it3_capacity1.0",
+         cfg.replace(moe_local_dispatch=True, moe_replicate_experts=True,
+                     capacity_factor=1.0), rules_repl),
+    ]
+
+
+TARGETS = {"t1": _iters_t1, "t2": _iters_t2, "t3": _iters_t3}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", choices=[*TARGETS, "all"], default="all")
+    ap.add_argument("--iter", default=None, help="run a single iteration tag")
+    args = ap.parse_args()
+
+    targets = list(TARGETS) if args.target == "all" else [args.target]
+    for t in targets:
+        arch, shape, multi_pod, iters = TARGETS[t]()
+        for tag, cfg_v, rules_v in iters:
+            if args.iter and args.iter != tag:
+                continue
+            rec = run_cell(arch, shape, multi_pod, OUT, tag=f"{t}_{tag}",
+                           cfg_override=cfg_v, rules_override=rules_v)
+            if rec["status"] != "ok":
+                print("FAILED:", rec.get("error"))
+
+
+if __name__ == "__main__":
+    main()

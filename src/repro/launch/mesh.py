@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state. Single pod: 16x16 = 256 chips ("data", "model"). Multi-pod: 2 pods x
+256 = 512 chips with a leading "pod" axis carrying only data-parallel
+gradient traffic (matching slow inter-pod links).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4, pod: int = 0):
+    """Small mesh for CI-scale sharding tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count >= data*model*max(pod,1))."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

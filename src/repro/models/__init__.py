@@ -1,0 +1,58 @@
+"""repro.models — architecture zoo. ``get_api(cfg)`` dispatches by family."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from . import jamba, mamba, transformer, whisper
+from .config import ModelConfig
+from .transformer import LOCAL_CTX, ShardCtx  # noqa: F401
+
+__all__ = ["ModelConfig", "ModelAPI", "get_api", "ShardCtx", "LOCAL_CTX"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    param_specs: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache_specs: Optional[Callable] = None  # (cfg, batch, max_len)
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelAPI(
+            param_specs=transformer.param_specs,
+            loss_fn=transformer.loss_fn,
+            prefill=transformer.prefill,
+            decode_step=transformer.decode_step,
+            init_cache_specs=transformer.init_cache_specs,
+        )
+    if fam == "ssm":
+        return ModelAPI(
+            param_specs=mamba.param_specs,
+            loss_fn=mamba.loss_fn,
+            prefill=mamba.prefill,
+            decode_step=mamba.decode_step,
+            init_cache_specs=lambda cfg, batch, max_len: mamba.init_state_specs(cfg, batch),
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            param_specs=jamba.param_specs,
+            loss_fn=jamba.loss_fn,
+            prefill=jamba.prefill,
+            decode_step=jamba.decode_step,
+            init_cache_specs=jamba.init_cache_specs,
+        )
+    if fam == "encdec":
+        return ModelAPI(
+            param_specs=whisper.param_specs,
+            loss_fn=whisper.loss_fn,
+            prefill=whisper.prefill_logits,
+            decode_step=whisper.decode_step,
+            init_cache_specs=whisper.init_cache_specs,
+        )
+    raise ValueError(f"unknown family {fam!r}")

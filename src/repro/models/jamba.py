@@ -1,0 +1,162 @@
+"""Jamba-v0.1 hybrid: attention:mamba 1:7 interleave + MoE every other layer.
+
+Structure (arXiv:2403.19887): 4 "Jamba blocks" of 8 layers each; within a
+block, layer 4 is attention, the rest are Mamba mixers; odd layers carry MoE
+FFNs, even layers dense FFNs. We scan over the 4 homogeneous super-blocks
+(params stacked [4, ...] per position), so the HLO contains one unrolled
+super-block.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.spec import ParamSpec, logical_constraint as lc
+from .common import chunked_cross_entropy, rms_norm
+from .config import ModelConfig
+from .mamba import init_state_specs as _mamba_state_specs  # noqa: F401
+from .mamba import mamba_layer_specs, mamba_mixer
+from .transformer import (
+    LOCAL_CTX,
+    ShardCtx,
+    _attn_specs,
+    _decode_layer,
+    _embed,
+    _ffn_or_moe,
+    _ffn_specs,
+    _layer,
+    _moe_specs,
+    _unembed_weight,
+)
+
+N_SUPER_LAYERS = 8  # layers per Jamba block
+
+
+def _pos_specs(cfg: ModelConfig, j: int, n_super: int) -> Dict[str, Any]:
+    """Specs for position j within the super-block, stacked over n_super."""
+    D = cfg.d_model
+    is_attn = j == cfg.attn_phase
+    is_moe = j % cfg.moe_period == cfg.moe_phase
+    s: Dict[str, Any] = {}
+    if is_attn:
+        s["ln1"] = ParamSpec((n_super, D), ("layers", "embed"), jnp.float32, init="ones")
+        s["attn"] = _attn_specs(cfg, n_super)
+    else:
+        s["mixer"] = mamba_layer_specs(cfg, n_super)
+    s["ln2"] = ParamSpec((n_super, D), ("layers", "embed"), jnp.float32, init="ones")
+    s["moe" if is_moe else "ffn"] = (
+        _moe_specs(cfg, n_super) if is_moe else _ffn_specs(cfg, n_super)
+    )
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.n_layers % N_SUPER_LAYERS == 0
+    n_super = cfg.n_layers // N_SUPER_LAYERS
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    return {
+        "embed": ParamSpec((Vp, D), ("vocab", "embed"), cfg.dtype),
+        "final_norm": ParamSpec((D,), ("embed",), jnp.float32, init="ones"),
+        "blocks": {
+            f"pos{j}": _pos_specs(cfg, j, n_super) for j in range(N_SUPER_LAYERS)
+        },
+    }
+
+
+def _super_block(cfg: ModelConfig, lps, x, ctx: ShardCtx):
+    for j in range(N_SUPER_LAYERS):
+        lp = lps[f"pos{j}"]
+        is_moe = j % cfg.moe_period == cfg.moe_phase
+        if j == cfg.attn_phase:
+            x = _layer(cfg, lp, x, layer_global=True, is_moe=is_moe,
+                       prefix=None, ctx=ctx)
+        else:
+            x = x + mamba_mixer(cfg, lp["mixer"], rms_norm(x, lp["mixer"]["ln"]), ctx)
+            x = _ffn_or_moe(cfg, lp, x, is_moe, ctx)
+    return x
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx: ShardCtx = LOCAL_CTX):
+    x = _embed(cfg, params, batch["tokens"], ctx)
+
+    def body(x, lps):
+        return _super_block(cfg, lps, x, ctx), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=True if cfg.unroll_scans else 1)
+    x = rms_norm(x, params["final_norm"])
+    B, S, D = x.shape
+    return chunked_cross_entropy(
+        x.reshape(B * S, D), _unembed_weight(cfg, params),
+        batch["labels"].reshape(B * S), chunk=min(cfg.xent_chunk, B * S),
+        rules=ctx.rules, unroll=cfg.unroll_scans,
+    )
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Per-position caches: KV for the attention position, SSM+conv states
+    for mamba positions."""
+    n_super = cfg.n_layers // N_SUPER_LAYERS
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    di, ds, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    caches: Dict[str, Any] = {}
+    for j in range(N_SUPER_LAYERS):
+        if j == cfg.attn_phase:
+            caches[f"pos{j}"] = {
+                "k": ParamSpec((n_super, batch, max_len, KV, hd),
+                               ("layers", "batch", "kv_seq", "kv_heads", None), cfg.dtype, init="zeros"),
+                "v": ParamSpec((n_super, batch, max_len, KV, hd),
+                               ("layers", "batch", "kv_seq", "kv_heads", None), cfg.dtype, init="zeros"),
+            }
+        else:
+            caches[f"pos{j}"] = {
+                "h": ParamSpec((n_super, batch, di, ds), ("layers", "batch", "mlp", "state"), jnp.float32, init="zeros"),
+                "conv": ParamSpec((n_super, batch, dc - 1, di), ("layers", "batch", None, "mlp"), cfg.dtype, init="zeros"),
+            }
+    return {"blocks": caches}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx: ShardCtx = LOCAL_CTX):
+    x = _embed(cfg, params, token, ctx)
+
+    def body(x, lps_caches):
+        lps, cch = lps_caches
+        new_c: Dict[str, Any] = {}
+        for j in range(N_SUPER_LAYERS):
+            lp = lps[f"pos{j}"]
+            is_moe = j % cfg.moe_period == cfg.moe_phase
+            if j == cfg.attn_phase:
+                x, new_c[f"pos{j}"] = _decode_layer(
+                    cfg, lp, cch[f"pos{j}"], x, pos, layer_global=True,
+                    is_moe=is_moe, ctx=ctx)
+            else:
+                xn = rms_norm(x, lp["mixer"]["ln"])
+                out, (h2, conv2) = mamba_mixer(
+                    cfg, lp["mixer"], xn, ctx,
+                    h0=cch[f"pos{j}"]["h"], conv_state=cch[f"pos{j}"]["conv"])
+                x = x + out
+                x = _ffn_or_moe(cfg, lp, x, is_moe, ctx)
+                new_c[f"pos{j}"] = {"h": h2, "conv": conv2}
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]),
+                                unroll=True if cfg.unroll_scans else 1)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, _unembed_weight(cfg, params))
+    logits = lc(logits, ("batch", None, "vocab"), ctx.rules)
+    return logits[:, 0], {"blocks": new_cache}
+
+
+def prefill(cfg: ModelConfig, params, tokens, ctx: ShardCtx = LOCAL_CTX):
+    x = _embed(cfg, params, tokens, ctx)
+
+    def body(x, lps):
+        return _super_block(cfg, lps, x, ctx), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=True if cfg.unroll_scans else 1)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], _unembed_weight(cfg, params))
+    return lc(logits, ("batch", "vocab"), ctx.rules)

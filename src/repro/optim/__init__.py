@@ -1,0 +1,5 @@
+"""repro.optim — AdamW, schedules, clipping, gradient compression."""
+
+from .adamw import AdamWConfig, adamw_init_specs, adamw_update  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401
+from .compress import compress_grads, decompress_grads  # noqa: F401

@@ -1,0 +1,72 @@
+"""AdamW with global-norm clipping. Moments are f32; parameters stay in the
+model dtype (bf16) with f32 update math (see DESIGN.md: a full f32
+master-weight copy is a config switch away via ``master_dtype``)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.spec import ParamSpec
+
+__all__ = ["AdamWConfig", "adamw_init_specs", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init_specs(param_specs, cfg: AdamWConfig):
+    """ParamSpec tree for (mu, nu) with the same logical axes as params."""
+
+    def mom(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, cfg.moment_dtype, init="zeros")
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    return (
+        jax.tree.map(mom, param_specs, is_leaf=is_spec),
+        jax.tree.map(mom, param_specs, is_leaf=is_spec),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, params, mu, nu, step, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_mu, new_nu, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    new_mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, mu, grads)
+    new_nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_mu, new_nu)
+    return new_params, new_mu, new_nu, {"grad_norm": gnorm}

@@ -1,0 +1,14 @@
+"""repro.parallel — logical-axis sharding rules and param specs."""
+
+from .rules import make_rules, mesh_dp_axes  # noqa: F401
+from .spec import (  # noqa: F401
+    DEFAULT_RULES,
+    POD_RULES,
+    ParamSpec,
+    Rules,
+    abstract_params,
+    init_params,
+    logical_constraint,
+    partition_spec,
+    tree_partition_specs,
+)

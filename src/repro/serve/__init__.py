@@ -1,0 +1,3 @@
+"""repro.serve — batched serving engine (prefill + KV-cache decode)."""
+
+from .engine import ServeEngine, Request  # noqa: F401

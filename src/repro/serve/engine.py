@@ -1,0 +1,117 @@
+"""Batched serving engine: fixed-slot continuous batching over the jit'd
+decode step. Requests are prefilling into free slots; every decode step
+advances all active slots one token; finished slots (EOS or max_tokens) are
+recycled. Works on any model family exposing decode_step."""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, get_api
+from ..parallel.spec import init_params
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [P] int32
+    max_tokens: int = 16
+    eos_id: int = -1  # -1: never
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class ServeEngine:
+    """Single-host engine; slots = decode batch size."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512, slots: int = 4):
+        assert cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid"), cfg.family
+        self.cfg = cfg
+        self.api = get_api(cfg)
+        self.params = params
+        self.max_len = max_len
+        self.slots = slots
+        cache_specs = self.api.init_cache_specs(cfg, slots, max_len)
+        self.cache = init_params(cache_specs, jax.random.PRNGKey(0))
+        self._free = list(range(slots))
+        self._active: Dict[int, Request] = {}
+        self._slot_pos = np.zeros(slots, np.int64)
+        self._slot_started = np.zeros(slots, np.float64)
+
+        def step(params, cache, tokens, pos_vec):
+            # per-slot positions differ; we use the max for cache_len masking
+            # conservativeness and per-slot RoPE via the vectorized pos.
+            logits, new_cache = self.api.decode_step(
+                cfg, params, cache, tokens, pos_vec.max().astype(jnp.int32)
+            )
+            return logits, new_cache
+
+        self._decode = jax.jit(step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _prefill_slot(self, slot: int, req: Request):
+        """Feed the prompt token-by-token through decode (cache fill)."""
+        self._slot_started[slot] = time.perf_counter()
+        for i, t in enumerate(req.prompt):
+            tok = np.zeros((self.slots, 1), np.int32)
+            tok[slot, 0] = t
+            pos = jnp.asarray(self._slot_pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tok), pos)
+            self._slot_pos[slot] += 1
+        req.tokens = []
+        self._active[slot] = req
+
+    def submit(self, req: Request) -> bool:
+        if not self._free:
+            return False
+        slot = self._free.pop()
+        self._slot_pos[slot] = 0
+        self._prefill_slot(slot, req)
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step across all active slots; returns finished requests."""
+        if not self._active:
+            return []
+        tok = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self._active.items():
+            tok[slot, 0] = req.tokens[-1] if req.tokens else (
+                req.prompt[-1] if len(req.prompt) else 0
+            )
+        pos = jnp.asarray(self._slot_pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tok), pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot in list(self._active):
+            req = self._active[slot]
+            t = int(nxt[slot])
+            req.tokens.append(t)
+            self._slot_pos[slot] += 1
+            if t == req.eos_id or len(req.tokens) >= req.max_tokens or \
+               self._slot_pos[slot] >= self.max_len:
+                req.done = True
+                req.latency_s = time.perf_counter() - self._slot_started[slot]
+                finished.append(req)
+                del self._active[slot]
+                self._free.append(slot)
+        return finished
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests to completion (simple scheduler)."""
+        pending = list(requests)
+        done: List[Request] = []
+        while pending or self._active:
+            while pending and self._free:
+                self.submit(pending.pop(0))
+            done.extend(self.step())
+        return done

@@ -1,0 +1,22 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately no XLA_FLAGS here — smoke tests must see 1 device.
+# Mesh/sharding tests spawn subprocesses that set their own device count.
+
+
+@pytest.fixture(scope="session")
+def obs_fast():
+    """Small real observation set collected once per session."""
+    from repro.data.dataset import collect_observations, observations_to_columns
+
+    rows = collect_observations(fast=True, force=False, cache=None)
+    return rows, observations_to_columns(rows)
+
+
+@pytest.fixture(scope="session")
+def synth_regression():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-2, 2, (300, 11))
+    y = np.sin(2 * X[:, 0]) + X[:, 1] ** 2 + 0.5 * X[:, 2] * X[:, 3]
+    return X, y

@@ -1,0 +1,195 @@
+"""Unit + property tests for the predictive-modeling core (the paper's zoo)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PCA,
+    ElasticNet,
+    GBTConfig,
+    GBTRegressor,
+    Lasso,
+    LinearRegression,
+    MLPConfig,
+    MLPRegressor,
+    RandomForestRegressor,
+    RFConfig,
+    Ridge,
+    StandardScaler,
+    cross_val_r2,
+    expm1_inverse,
+    log1p_transform,
+    r2_score,
+    rmse,
+    train_test_split,
+)
+from repro.core.ensemble_base import predict_ensemble, predict_ensemble_np
+
+
+# ---------------------------------------------------------------- linear
+def test_linear_exact_recovery():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(100, 5))
+    beta = np.array([1.0, -2.0, 3.0, 0.5, -1.5])
+    y = X @ beta + 4.0
+    m = LinearRegression().fit(X, y)
+    np.testing.assert_allclose(m.coef_, beta, atol=1e-5)
+    assert abs(m.intercept_ - 4.0) < 1e-5
+
+
+def test_ridge_shrinks_vs_ols():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(40, 10))
+    y = rng.normal(size=40)
+    ols = LinearRegression().fit(X, y)
+    ridge = Ridge(alpha=100.0).fit(X, y)
+    assert np.linalg.norm(ridge.coef_) < np.linalg.norm(ols.coef_)
+
+
+def test_lasso_sparsity():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(120, 8))
+    y = 3 * X[:, 0] - 2 * X[:, 1] + 0.01 * rng.normal(size=120)
+    m = Lasso(alpha=0.5, n_iter=4000).fit(X, y)
+    # irrelevant coefficients driven to (near) zero
+    assert np.all(np.abs(m.coef_[2:]) < 1e-2)
+    assert abs(m.coef_[0]) > 1.0
+
+
+def test_elasticnet_between():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(80, 6))
+    y = X @ np.arange(1.0, 7.0)
+    for m in (Lasso(0.1), ElasticNet(0.1, 0.5)):
+        m.fit(X, y)
+        assert r2_score(y, m.predict(X)) > 0.95
+
+
+# ---------------------------------------------------------------- trees
+def test_gbt_fits_nonlinear(synth_regression):
+    X, y = synth_regression
+    m = GBTRegressor(GBTConfig(n_estimators=80)).fit(X, y)
+    assert r2_score(y, m.predict(X)) > 0.95
+    imp = m.feature_importances_
+    assert imp.shape == (11,) and abs(imp.sum() - 1.0) < 1e-6
+    # true drivers are features 0..3
+    assert set(np.argsort(imp)[::-1][:4]) == {0, 1, 2, 3}
+
+
+def test_gbt_more_rounds_reduce_train_error(synth_regression):
+    X, y = synth_regression
+    errs = []
+    for n in (5, 20, 80):
+        m = GBTRegressor(GBTConfig(n_estimators=n, subsample=1.0)).fit(X, y)
+        errs.append(rmse(y, m.predict(X)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_gbt_jax_predict_matches_numpy(synth_regression):
+    X, y = synth_regression
+    m = GBTRegressor(GBTConfig(n_estimators=15, max_depth=4)).fit(X, y)
+    jax_pred = np.asarray(predict_ensemble(m.ensemble, X.astype(np.float32)))
+    np_pred = predict_ensemble_np(m.ensemble, X)
+    np.testing.assert_allclose(jax_pred, np_pred, rtol=1e-4, atol=1e-4)
+
+
+def test_rf_fits_and_importances(synth_regression):
+    X, y = synth_regression
+    m = RandomForestRegressor(RFConfig(n_estimators=30)).fit(X, y)
+    assert r2_score(y, m.predict(X)) > 0.8
+    assert set(np.argsort(m.feature_importances_)[::-1][:4]) == {0, 1, 2, 3}
+
+
+def test_gbt_binary_classifier():
+    from repro.core import GBTBinaryClassifier
+
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(300, 4))
+    y = (X[:, 0] + X[:, 1] ** 2 > 0.5).astype(np.float64)
+    m = GBTBinaryClassifier(GBTConfig(n_estimators=30, max_depth=3)).fit(X, y)
+    assert (m.predict(X) == y).mean() > 0.95
+
+
+# ---------------------------------------------------------------- mlp
+def test_mlp_learns_linear():
+    rng = np.random.default_rng(6)
+    X = rng.normal(size=(400, 5)).astype(np.float32)
+    y = X @ np.array([1, 2, 3, 4, 5.0]) * 0.1
+    m = MLPRegressor(MLPConfig(max_epochs=100, patience=20)).fit(X, y)
+    assert r2_score(y, m.predict(X)) > 0.9
+
+
+# ---------------------------------------------------------------- features
+def test_scaler_roundtrip():
+    rng = np.random.default_rng(7)
+    X = rng.normal(3.0, 5.0, size=(50, 4))
+    sc = StandardScaler()
+    Xs = sc.fit_transform(X)
+    np.testing.assert_allclose(Xs.mean(0), 0, atol=1e-9)
+    np.testing.assert_allclose(Xs.std(0), 1, atol=1e-9)
+    np.testing.assert_allclose(sc.inverse_transform(Xs), X, atol=1e-9)
+
+
+def test_pca_properties():
+    rng = np.random.default_rng(8)
+    X = rng.normal(size=(60, 6)) @ rng.normal(size=(6, 6))
+    p = PCA().fit(X)
+    # components orthonormal
+    G = p.components_ @ p.components_.T
+    np.testing.assert_allclose(G, np.eye(6), atol=1e-4)  # f32 SVD
+    # ratios sorted and sum to 1
+    r = p.explained_variance_ratio_
+    assert np.all(np.diff(r) <= 1e-6) and abs(r.sum() - 1.0) < 1e-5
+    # full reconstruction
+    Z = p.transform(X)
+    np.testing.assert_allclose(p.inverse_transform(Z), X, atol=1e-3)
+    assert 1 <= p.n_components_for_variance(0.8) <= 6
+
+
+def test_log1p_roundtrip():
+    y = np.array([0.0, 1.1, 48211.0])
+    np.testing.assert_allclose(expm1_inverse(log1p_transform(y)), y, rtol=1e-12)
+
+
+# ---------------------------------------------------------------- metrics
+def test_split_and_cv_protocol():
+    tr, te = train_test_split(141, 0.2, seed=42)
+    assert len(te) == 28 and len(tr) == 113
+    assert len(set(tr) & set(te)) == 0
+
+
+def test_r2_perfect_and_mean():
+    y = np.arange(10.0)
+    assert r2_score(y, y) == 1.0
+    assert abs(r2_score(y, np.full(10, y.mean()))) < 1e-12
+
+
+# ---------------------------------------------------------------- hypothesis
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(30, 120),
+    d=st.integers(2, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_gbt_train_r2_nonneg_property(n, d, seed):
+    """Boosting from the mean must never fit worse than the mean."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = rng.normal(size=n)
+    m = GBTRegressor(GBTConfig(n_estimators=10, max_depth=3, subsample=1.0)).fit(X, y)
+    assert r2_score(y, m.predict(X)) >= -1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(20, 100),
+    scale=st.floats(0.1, 100.0),
+    seed=st.integers(0, 10_000),
+)
+def test_scaler_invariance_property(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3)) * scale
+    sc = StandardScaler()
+    Xs = sc.fit_transform(X)
+    np.testing.assert_allclose(sc.inverse_transform(Xs), X, rtol=1e-9, atol=1e-7 * scale)

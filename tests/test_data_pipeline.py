@@ -1,0 +1,177 @@
+"""Formats, backends, pipeline determinism/sharding/reconfiguration."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    BACKENDS,
+    DataPipeline,
+    PipelineConfig,
+    SyntheticTokenSource,
+    TokenRecordCodec,
+    open_dataset,
+    write_dataset,
+)
+from repro.data.storage import StorageBackend
+
+
+@pytest.fixture(scope="module")
+def tmpfs():
+    return BACKENDS["tmpfs"]
+
+
+# ---------------------------------------------------------------- formats
+@pytest.mark.parametrize("fmt", ["raw", "packed", "compressed", "sharded"])
+def test_format_roundtrip(fmt, tmpfs):
+    rng = np.random.default_rng(0)
+    recs = [rng.integers(0, 255, size=64, dtype=np.uint8).tobytes() for _ in range(37)]
+    man = write_dataset(tmpfs, f"t_{fmt}", recs, fmt)
+    with open_dataset(tmpfs, man, block_kb=4) as r:
+        assert len(r) == 37
+        for i in (0, 1, 17, 36):
+            assert r.read(i) == recs[i]
+        got = r.read_batch([5, 2, 30])
+        assert got == [recs[5], recs[2], recs[30]]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 50),
+    size=st.integers(1, 2000),
+    fmt=st.sampled_from(["packed", "compressed", "sharded"]),
+    block_kb=st.sampled_from([1, 4, 64]),
+    seed=st.integers(0, 1000),
+)
+def test_format_roundtrip_property(n, size, fmt, block_kb, seed):
+    backend = BACKENDS["tmpfs"]
+    rng = np.random.default_rng(seed)
+    recs = [rng.integers(0, 255, size=size, dtype=np.uint8).tobytes() for _ in range(n)]
+    man = write_dataset(backend, f"hp_{fmt}_{seed}", recs, fmt)
+    with open_dataset(backend, man, block_kb=block_kb) as r:
+        idx = rng.permutation(n)[: min(n, 10)]
+        for i in idx:
+            assert r.read(int(i)) == recs[i]
+
+
+def test_simulated_backend_charges_latency(tmp_path):
+    b = StorageBackend("sim", tmp_path, latency_s=2e-3, bandwidth_mb_s=100.0)
+    p = b.path("x.bin")
+    p.write_bytes(b"a" * 1_000_00)
+    import time
+
+    with open(p, "rb") as f:
+        t0 = time.perf_counter()
+        for off in range(0, 50_000, 10_000):
+            b.read_block(f, off, 10_000)
+        dt = time.perf_counter() - t0
+    assert dt >= 5 * 2e-3  # at least the op latency
+
+
+# ---------------------------------------------------------------- pipeline
+def _pipe(n_hosts=1, host_id=0, **kw):
+    src = SyntheticTokenSource(256, 32, 1000, seed=1)
+    return DataPipeline(src, PipelineConfig(batch_size=8, **kw), host_id, n_hosts)
+
+
+def test_pipeline_restart_exact():
+    p1 = _pipe(shuffle=True)
+    a = p1.fetch_batch(epoch=3, step=5)
+    p2 = _pipe(shuffle=True)
+    b = p2.fetch_batch(epoch=3, step=5)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pipeline_host_sharding_partition():
+    full = set()
+    for h in range(4):
+        p = _pipe(n_hosts=4, host_id=h)
+        idx = p.epoch_order(0)
+        assert len(set(idx)) == len(idx)
+        full |= set(int(i) for i in idx)
+    assert full == set(range(256))
+
+
+def test_pipeline_prefetch_iterator_matches_fetch():
+    p = _pipe(num_workers=2, prefetch_depth=3)
+    batches = []
+    it = p.iter_epoch(0)
+    for i, b in enumerate(it):
+        batches.append(b)
+        if i == 4:
+            it.close()
+            break
+    for s, b in enumerate(batches):
+        np.testing.assert_array_equal(b, p.fetch_batch(0, s))
+    p.close()
+
+
+def test_pipeline_reconfigure_preserves_order():
+    p = _pipe(num_workers=0)
+    before = p.fetch_batch(0, 2)
+    p.reconfigure(num_workers=2, prefetch_depth=4)
+    after = p.fetch_batch(0, 2)
+    np.testing.assert_array_equal(before, after)
+    assert p.config.num_workers == 2
+    p.close()
+
+
+def test_codec_roundtrip():
+    c = TokenRecordCodec(16)
+    t = np.arange(16, dtype=np.int32)
+    assert np.array_equal(c.decode(c.encode(t)), t)
+
+
+# ---------------------------------------------------------------- telemetry
+def test_telemetry_ratio():
+    import time
+
+    from repro.data import StepTelemetry
+
+    t = StepTelemetry()
+    for _ in range(3):
+        with t.data_wait():
+            time.sleep(0.01)
+        with t.compute():
+            time.sleep(0.03)
+        t.record_batch(8, 8 * 1024)
+    r = t.data_loading_ratio()
+    assert 0.1 < r < 0.45
+    assert t.simulated_utilization() == pytest.approx(1 - r)
+    f = t.features(batch_size=8, num_workers=0)
+    assert f["samples_per_second"] > 0
+
+
+def test_image_and_tabular_codecs_pipeline(tmpfs):
+    """Paper §3.1.2 modalities: CIFAR-style images + tabular rows through the
+    full format+pipeline stack."""
+    from repro.data import ImageRecordCodec, TabularRecordCodec
+
+    rng = np.random.default_rng(0)
+    img_codec = ImageRecordCodec()
+    imgs = [rng.integers(0, 255, (32, 32, 3), dtype=np.uint8) for _ in range(40)]
+    man = write_dataset(tmpfs, "imgs", [img_codec.encode(i) for i in imgs], "packed")
+    with open_dataset(tmpfs, man) as r:
+
+        class Src:
+            def __len__(self):
+                return len(r)
+
+            def read(self, i):
+                return img_codec.decode(r.read(i))
+
+            def record_nbytes(self):
+                return img_codec.nbytes
+
+        pipe = DataPipeline(Src(), PipelineConfig(batch_size=8))
+        batch = pipe.fetch_batch(0, 0)
+        assert batch.shape == (8, 32, 32, 3) and batch.dtype == np.uint8
+        idx = pipe.batch_indices(0, 0)
+        np.testing.assert_array_equal(batch[0], imgs[int(idx[0])])
+
+    tab_codec = TabularRecordCodec(11)
+    rows = [rng.normal(size=11).astype(np.float32) for _ in range(20)]
+    man = write_dataset(tmpfs, "tab", [tab_codec.encode(x) for x in rows], "compressed")
+    with open_dataset(tmpfs, man) as r:
+        got = tab_codec.decode(r.read(7))
+        np.testing.assert_array_equal(got, rows[7])

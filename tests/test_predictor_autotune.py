@@ -1,0 +1,115 @@
+"""The paper's workflow end-to-end on real (fast-collected) observations,
+plus autotuner behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ConfigSpace,
+    IOPerformancePredictor,
+    OnlineAutotuner,
+    accuracy,
+    make_classifier,
+    recommend,
+)
+
+
+def test_predictor_fast_observations(obs_fast):
+    rows, cols = obs_fast
+    pred = IOPerformancePredictor(model="xgboost")
+    reports = pred.evaluate_zoo(cols, models=["xgboost", "linear"], with_cv=False)
+    # the fast subset has only ~5 test rows — test-R2 ordering is noisy there,
+    # so assert the stable facts: both models fit, GBT fits the train set
+    # at least as well as linear (the full-141 Fig-5 ordering is asserted in
+    # benchmarks / EXPERIMENTS.md).
+    assert reports["xgboost"].train_r2 >= reports["linear"].train_r2 - 5e-3
+    assert reports["xgboost"].train_r2 > 0.9
+    assert reports["xgboost"].test_r2 > 0.5
+
+
+def test_predict_throughput_scalar(obs_fast):
+    rows, cols = obs_fast
+    pred = IOPerformancePredictor(model="xgboost").fit(cols)
+    t = pred.predict_throughput(
+        {"batch_size": 32, "num_workers": 2, "block_kb": 64, "throughput_mb_s": 500.0}
+    )
+    assert np.isfinite(t) and t >= 0
+
+
+def test_recommend_ranks_by_prediction(obs_fast):
+    rows, cols = obs_fast
+    pred = IOPerformancePredictor(model="xgboost").fit(cols)
+    space = ConfigSpace(batch_size=(16, 64), num_workers=(0, 2), block_kb=(4, 64),
+                        n_threads=(1,), prefetch_depth=(1,))
+    top = recommend(pred, context={"throughput_mb_s": 800.0, "file_size_mb": 16.0},
+                    space=space, top_k=4)
+    assert len(top) == 4
+    scores = [t["predicted_throughput_mb_s"] for t in top]
+    assert scores == sorted(scores, reverse=True)
+
+
+def test_online_autotuner_reconfigures_on_clear_signal():
+    """Synthetic world: more workers => strictly higher throughput."""
+    tuner = OnlineAutotuner(
+        refit_every=1, min_observations=10, gain_threshold=0.05,
+        space=ConfigSpace(batch_size=(32,), num_workers=(0, 2, 4),
+                          block_kb=(64,), n_threads=(1,), prefetch_depth=(1,)),
+        seed=0,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(40):
+        w = int(rng.choice([0, 2, 4]))
+        thr = 100.0 * (1 + w) * (1 + 0.01 * rng.normal())
+        tuner.observe(
+            {"batch_size": 32, "num_workers": w, "block_kb": 64,
+             "throughput_mb_s": thr, "samples_per_second": thr * 2,
+             "data_loading_ratio": 0.5 / (1 + w)},
+            thr,
+        )
+    assert tuner.maybe_refit()
+    decision = tuner.decide(
+        current_config={"batch_size": 32, "num_workers": 0, "block_kb": 64,
+                        "prefetch_depth": 1},
+        context={"batch_size": 32, "num_workers": 0, "block_kb": 64,
+                 "throughput_mb_s": 100.0, "samples_per_second": 200.0,
+                 "data_loading_ratio": 0.5},
+    )
+    assert decision.reconfigure
+    assert decision.config["num_workers"] == 4
+
+
+def test_autotuner_no_churn_when_already_best():
+    tuner = OnlineAutotuner(
+        refit_every=1, min_observations=5, gain_threshold=0.10,
+        space=ConfigSpace(batch_size=(32,), num_workers=(0, 4), block_kb=(64,),
+                          n_threads=(1,), prefetch_depth=(1,)),
+    )
+    for w, thr in [(0, 100), (4, 500)] * 5:
+        tuner.observe({"batch_size": 32, "num_workers": w, "block_kb": 64,
+                       "throughput_mb_s": thr}, thr)
+    tuner.maybe_refit()
+    d = tuner.decide(
+        current_config={"batch_size": 32, "num_workers": 4, "block_kb": 64,
+                        "prefetch_depth": 1},
+        context={"batch_size": 32, "num_workers": 4, "block_kb": 64,
+                 "throughput_mb_s": 500.0},
+    )
+    assert not d.reconfigure
+
+
+def test_format_classifier_rq3():
+    """RQ3: classifiers recommend the best format from workload features."""
+    rng = np.random.default_rng(0)
+    n = 400
+    X = np.stack([
+        rng.uniform(1, 4096, n),   # record_kb
+        rng.uniform(0, 1, n),      # compressibility
+        rng.uniform(0, 1, n),      # random-access fraction
+    ], axis=1)
+    # ground truth: compressed if compressible, raw if tiny records, packed else
+    y = np.where(X[:, 1] > 0.7, 2, np.where(X[:, 0] < 64, 0, 1))
+    for name in ("logistic", "random_forest", "gbt"):
+        m = make_classifier(name, n_classes=3)
+        m.fit(X, y)
+        acc = accuracy(y, m.predict(X))
+        assert acc > (0.85 if name != "logistic" else 0.7), (name, acc)
