@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-fast campaign-smoke dev-deps
+
+test:  ## tier-1 suite (ROADMAP verify command)
+	$(PYTHON) -m pytest -x -q
+
+bench-fast:  ## per-figure paper benchmarks, CI-sized
+	$(PYTHON) -m benchmarks.run --fast
+
+campaign-smoke:  ## paper campaigns end-to-end (fast) + non-empty summary check
+	$(PYTHON) -m repro.data.campaign smoke --out /tmp/repro_io/campaign_smoke
+
+dev-deps:  ## test-only dependencies (hypothesis, pytest)
+	$(PYTHON) -m pip install -r requirements-dev.txt

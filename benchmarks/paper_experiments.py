@@ -21,7 +21,12 @@ def _t(fn, reps=1):
 # ------------------------------------------------------------------ Fig 2/3
 def bench_dataset(fast: bool) -> List[Row]:
     from repro.data.dataset import collect_observations, observations_to_columns
+    from repro.data.registry import get_campaign
 
+    n_cases = {
+        name: len(get_campaign(name).cases(fast))
+        for name in ("paper_random_access", "paper_pipeline", "paper_concurrent")
+    }
     us, rows = _t(lambda: collect_observations(fast=fast))
     cols = observations_to_columns(rows)
     t = cols["target_throughput"]
@@ -29,7 +34,8 @@ def bench_dataset(fast: bool) -> List[Row]:
     tl = np.log1p(t)
     skew_log = float(np.mean((tl - tl.mean()) ** 3) / tl.std() ** 3)
     return [
-        ("fig2_dataset_collection", us, f"n={len(rows)}"),
+        ("fig2_dataset_collection", us,
+         f"n={len(rows)} campaigns=" + "+".join(str(v) for v in n_cases.values())),
         ("fig3_target_skewness_raw", 0.0, f"skew={skew:.2f} (paper: 2.50)"),
         ("fig3_target_skewness_log1p", 0.0, f"skew={skew_log:.2f}"),
         ("fig3_target_range", 0.0,
@@ -102,7 +108,7 @@ def bench_util_impact(fast: bool) -> List[Row]:
     """Poor vs optimized pipeline config -> simulated accelerator utilization."""
     from repro.data import BACKENDS, DataPipeline, PipelineConfig, TokenRecordCodec
     from repro.data import open_dataset, write_dataset
-    from repro.data.dataset import _run_pipeline_case, _simulated_compute  # noqa
+    from repro.data.campaign import simulated_compute as _simulated_compute
 
     # network-attached storage sim: per-op latency dominates, so prefetch +
     # workers genuinely overlap I/O with compute (the paper's Fig-1 regime)
@@ -224,6 +230,31 @@ def bench_extensions(fast: bool) -> List[Row]:
     }, k=4).fit(X[tr], y[tr]))
     rows.append(("s54_stacking", us,
                  f"test_r2={r2_score(y[te], stack.predict(X[te])):.4f}"))
+    return rows
+
+
+# ------------------------------------------------------------------ §3.1 campaigns
+def bench_campaign(fast: bool) -> List[Row]:
+    """Registry expansion + resumable JSONL collection overhead (campaign.py)."""
+    import pathlib
+    import tempfile
+
+    from repro.data.campaign import load_records, run_campaign, summarize
+    from repro.data.registry import list_campaigns
+
+    rows: List[Row] = []
+    for c in list_campaigns():
+        us, cases = _t(lambda c=c: c.cases(fast))
+        rows.append((f"campaign_expand_{c.name}", us, f"cases={len(cases)}"))
+    with tempfile.TemporaryDirectory() as td:
+        out = pathlib.Path(td) / "cc.jsonl"
+        us, res = _t(lambda: run_campaign("paper_concurrent", out, fast=True))
+        report = summarize(load_records(out))
+        rows.append(("campaign_run_concurrent_fast", us,
+                     f"executed={res.n_executed} ok={report['n_ok']}"))
+        us, res = _t(lambda: run_campaign("paper_concurrent", out, fast=True))
+        rows.append(("campaign_resume_noop", us,
+                     f"executed={res.n_executed} skipped={res.skipped}"))
     return rows
 
 

@@ -23,6 +23,7 @@ def main() -> None:
 
     groups = {
         "dataset": pe.bench_dataset,
+        "campaign": pe.bench_campaign,
         "pca": pe.bench_pca,
         "model_comparison": pe.bench_model_comparison,
         "feature_importance": pe.bench_feature_importance,

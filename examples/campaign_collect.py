@@ -1,0 +1,44 @@
+"""Campaign quickstart: declarative, resumable benchmark collection.
+
+1. List the registered campaigns (the paper's 84/52/5 plus `extended`).
+2. Run the fast paper campaigns, appending one JSONL record per case.
+3. Re-run: resume skips everything already completed.
+4. Aggregate the per-backend/format summary report.
+
+Run: PYTHONPATH=src python examples/campaign_collect.py
+The same flow via the CLI:  python -m repro.data.campaign list|run|summarize
+"""
+
+import pathlib
+import tempfile
+
+from repro.data.campaign import format_summary, load_records, run_campaign, summarize
+from repro.data.registry import list_campaigns
+
+
+def main():
+    print("== 1. registered campaigns ==")
+    for c in list_campaigns():
+        print(f"   {c.name:24s} {len(c.cases()):>4d} cases "
+              f"(fast: {len(c.cases(fast=True))})  {c.description}")
+
+    out_dir = pathlib.Path(tempfile.mkdtemp(prefix="repro_campaign_"))
+    out = out_dir / "paper_fast.jsonl"
+
+    print("== 2. collecting (fast paper campaigns -> JSONL) ==")
+    for name in ("paper_random_access", "paper_pipeline", "paper_concurrent"):
+        res = run_campaign(name, out, fast=True)
+        print(f"   {name:24s} executed={res.n_executed:3d} "
+              f"skipped={res.skipped} failed={len(res.failures)}")
+
+    print("== 3. resume is a no-op when everything is done ==")
+    res = run_campaign("paper_pipeline", out, fast=True)
+    print(f"   paper_pipeline           executed={res.n_executed:3d} skipped={res.skipped}")
+
+    print("== 4. summary report ==")
+    print(format_summary(summarize(load_records(out))))
+    print(f"\nresults kept at {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,21 @@
-"""repro.data — storage backends, record formats, benchmarks, and the tunable
-training input pipeline the paper's predictor optimizes."""
+"""repro.data — storage backends, record formats, the declarative benchmark
+campaign subsystem (``registry``/``campaign``), and the tunable training
+input pipeline the paper's predictor optimizes."""
 
 from .bench_io import (  # noqa: F401
     bench_concurrent_read,
     bench_random_read,
     bench_sequential_read,
     make_test_file,
+)
+from .campaign import (  # noqa: F401
+    RunContext,
+    RunResult,
+    format_summary,
+    load_records,
+    run_campaign,
+    run_case,
+    summarize,
 )
 from .dataset import collect_observations, observations_to_columns  # noqa: F401
 from .formats import FORMATS, DatasetReader, open_dataset, write_dataset  # noqa: F401
@@ -16,6 +26,15 @@ from .pipeline import (  # noqa: F401
     SyntheticTokenSource,
     TabularRecordCodec,
     TokenRecordCodec,
+)
+from .registry import (  # noqa: F401
+    BenchCase,
+    Campaign,
+    CAMPAIGNS,
+    get_campaign,
+    list_campaigns,
+    matrix_cases,
+    register_campaign,
 )
 from .storage import BACKENDS, StorageBackend, get_backend  # noqa: F401
 from .telemetry import StepTelemetry  # noqa: F401

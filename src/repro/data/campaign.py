@@ -1,0 +1,610 @@
+"""Resumable, shardable execution of benchmark campaigns (paper §3.1).
+
+``registry.py`` declares *what* to run (frozen :class:`BenchCase` lists);
+this module runs it.  Every completed case appends exactly one JSONL record —
+observation row plus provenance (case id, repeat index, seed, shard, host,
+elapsed time, git describe, and a failure record on exception) — so a crashed
+or killed campaign loses at most the in-flight case:
+
+- **resume**: re-running a campaign against the same JSONL file skips case
+  (id, rep) pairs that already succeeded and re-runs failed ones;
+- **shard**: ``--shard h/H`` partitions the case list across H hosts by
+  position (disjoint and complete), each appending to its own file;
+- **summarize**: aggregates per-backend/format throughput distributions and
+  failure counts from one or more JSONL files.
+
+CLI::
+
+    python -m repro.data.campaign list
+    python -m repro.data.campaign run --campaign paper_core --fast
+    python -m repro.data.campaign resume --campaign extended --shard 0/4
+    python -m repro.data.campaign summarize --out /tmp/repro_io/campaigns/extended.jsonl
+
+The JSONL record schema is documented in ``docs/benchmark-matrix.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import socket
+import subprocess
+import sys
+import time
+import traceback
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.features import FEATURE_NAMES, TARGET_NAME
+from .bench_io import bench_concurrent_read, bench_random_read, bench_sequential_read, make_test_file
+from .formats import open_dataset, write_dataset
+from .pipeline import DataPipeline, PipelineConfig, TokenRecordCodec
+from .registry import BenchCase, Campaign, get_campaign, list_campaigns
+from .storage import BACKENDS, StorageBackend
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "DEFAULT_OUT_DIR",
+    "RunContext",
+    "RunResult",
+    "run_case",
+    "run_campaign",
+    "load_records",
+    "completed_keys",
+    "rows_from_records",
+    "shard_cases",
+    "summarize",
+    "format_summary",
+    "simulated_compute",
+    "run_pipeline_case",
+    "main",
+]
+
+SCHEMA_VERSION = 1
+DEFAULT_OUT_DIR = pathlib.Path("/tmp/repro_io/campaigns")
+
+
+def simulated_compute(seconds: float):
+    """Stand-in busy-wait for the accelerator step (paper's 'simulated GPU')."""
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        pass
+
+
+def _git_describe() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=pathlib.Path(__file__).parent, capture_output=True, text=True, timeout=5,
+        )
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+class RunContext:
+    """Shared per-run caches so cases stay cheap to execute independently.
+
+    Random-access cases share test files and the per-(backend, size, block)
+    sequential-throughput baseline; pipeline cases share written dataset
+    manifests per (backend, format, n_records, seq_len, seed)."""
+
+    def __init__(self):
+        self.seq_baseline: Dict[tuple, float] = {}
+        self.test_files: Dict[tuple, pathlib.Path] = {}
+        self.manifests: Dict[tuple, dict] = {}
+        self._records: Dict[tuple, list] = {}
+        self.git = _git_describe()
+        self.host = socket.gethostname()
+
+    def test_file(self, backend: StorageBackend, size_mb: float, seed: int,
+                  prefix: str = "ra") -> pathlib.Path:
+        key = (backend.name, prefix, size_mb, seed)
+        if key not in self.test_files:
+            # seed in the name: make_test_file reuses an existing same-size
+            # file, so without it every seed would silently share seed-0 bytes
+            sz = int(size_mb) if size_mb == int(size_mb) else size_mb
+            name = f"{prefix}_{sz}mb_s{seed}.bin"
+            self.test_files[key] = make_test_file(backend, name, size_mb, seed)
+        return self.test_files[key]
+
+    def token_records(self, n_records: int, seq_len: int, seed: int) -> list:
+        key = (n_records, seq_len, seed)
+        if key not in self._records:
+            codec = TokenRecordCodec(seq_len)
+            rng = np.random.default_rng(seed)
+            self._records[key] = [
+                codec.encode(rng.integers(0, 50_000, size=seq_len, dtype=np.int32))
+                for _ in range(n_records)
+            ]
+        return self._records[key]
+
+    def manifest(self, backend: StorageBackend, fmt: str, n_records: int,
+                 seq_len: int, seed: int) -> dict:
+        key = (backend.name, fmt, n_records, seq_len, seed)
+        if key not in self.manifests:
+            # the name carries every cache-key axis: cases differing only in
+            # n_records/seq_len/seed must not overwrite each other's files
+            # while an earlier case's cached manifest still points at them
+            self.manifests[key] = write_dataset(
+                backend, f"pl_{fmt}_r{n_records}x{seq_len}_s{seed}",
+                self.token_records(n_records, seq_len, seed), fmt,
+            )
+        return self.manifests[key]
+
+
+def _blank_row(bench_type: str) -> dict:
+    row = {k: 0.0 for k in FEATURE_NAMES}
+    row["bench_type"] = bench_type
+    return row
+
+
+# ---------------------------------------------------------------- executors
+
+def _exec_random(case: BenchCase, ctx: RunContext, seed: int) -> dict:
+    backend = BACKENDS[case.backend]
+    path = ctx.test_file(backend, case.file_size_mb, seed)
+    # seed in the key: the baseline must be measured on the same seed's file
+    # as the random-read target (repeats > 1 runs each rep with seed + rep)
+    key = (case.backend, case.file_size_mb, case.block_kb, seed)
+    if key not in ctx.seq_baseline:
+        seq = bench_sequential_read(backend, path, block_kb=max(case.block_kb, 64))
+        ctx.seq_baseline[key] = seq["throughput_mb_s"]
+    r = bench_random_read(backend, path, case.n_samples, case.block_kb, seed=seed)
+    row = _blank_row("io_random")
+    row.update(
+        block_kb=case.block_kb,
+        file_size_mb=r["file_size_mb"],
+        n_samples=case.n_samples,
+        throughput_mb_s=ctx.seq_baseline[key],  # upstream: sequential baseline
+        iops=r["iops"],
+        n_threads=1,
+    )
+    row[TARGET_NAME] = r["throughput_mb_s"]  # downstream: random-access
+    row["backend"] = case.backend
+    return row
+
+
+def run_pipeline_case(
+    backend: StorageBackend,
+    manifest: dict,
+    fmt: str,
+    batch: int,
+    workers: int,
+    seq_len: int,
+    compute_s: float,
+    probe_steps: int = 2,
+    measure_steps: int = 6,
+    prefetch_depth: int = 2,
+    block_kb: int = 64,
+) -> dict:
+    """Run one pipeline benchmark: probe window feeds the upstream features,
+    the measure window feeds the downstream target (paper §4.3)."""
+    from .telemetry import StepTelemetry
+
+    reader = open_dataset(backend, manifest, block_kb=block_kb)
+    pipe = DataPipeline.from_reader(
+        reader, seq_len,
+        PipelineConfig(batch_size=batch, num_workers=workers,
+                       prefetch_depth=prefetch_depth, seed=0),
+    )
+    tele = StepTelemetry()
+    probe = StepTelemetry()
+    steps = min(pipe.steps_per_epoch(), probe_steps + measure_steps)
+    it = pipe.iter_epoch(0)
+    for s in range(steps):
+        t = probe if s < probe_steps else tele
+        with t.data_wait():
+            batch_arr = next(it)
+        with t.compute():
+            simulated_compute(compute_s)
+        t.record_batch(batch_arr.shape[0], batch_arr.nbytes)
+    it.close()  # stops the producer thread before teardown
+    pipe.close()
+    reader.close()
+    row = _blank_row("pipeline")
+    row.update(
+        batch_size=batch,
+        num_workers=workers,
+        block_kb=block_kb,
+        file_size_mb=reader.total_bytes / 1e6,
+        samples_per_second=probe.samples_per_second(),  # upstream probe
+        data_loading_ratio=probe.data_loading_ratio(),
+        throughput_mb_s=probe.throughput_mb_s(),
+    )
+    # Target = overall delivered MB/s (samples/sec x record bytes), the
+    # paper's pipeline-benchmark measurement; probe features come from the
+    # separate warmup window above.
+    row[TARGET_NAME] = tele.throughput_mb_s()
+    row["backend"] = backend.name
+    row["format"] = fmt
+    row["utilization"] = tele.simulated_utilization()
+    return row
+
+
+def _exec_pipeline(case: BenchCase, ctx: RunContext, seed: int) -> dict:
+    backend = BACKENDS[case.backend]
+    manifest = ctx.manifest(backend, case.format, case.n_records, case.seq_len, seed)
+    return run_pipeline_case(
+        backend, manifest, case.format, case.batch_size, case.num_workers,
+        case.seq_len, compute_s=case.compute_s,
+        prefetch_depth=case.prefetch_depth, block_kb=case.block_kb,
+    )
+
+
+def _exec_concurrent(case: BenchCase, ctx: RunContext, seed: int) -> dict:
+    backend = BACKENDS[case.backend]
+    path = ctx.test_file(backend, case.file_size_mb, seed, prefix="cc")
+    r = bench_concurrent_read(
+        backend, path, case.n_threads, per_thread_mb=case.per_thread_mb,
+        block_kb=case.block_kb, seed=seed,
+    )
+    row = _blank_row("concurrent")
+    row.update(
+        block_kb=r["block_kb"],
+        file_size_mb=r["file_size_mb"],
+        n_threads=case.n_threads,
+        throughput_mb_s=r["throughput_mb_s"],  # per-thread
+        iops=r["iops"],
+        aggregate_throughput_mb_s=r["aggregate_throughput_mb_s"],
+    )
+    row[TARGET_NAME] = r["aggregate_throughput_mb_s"]
+    row["backend"] = case.backend
+    return row
+
+
+_EXECUTORS = {
+    "io_random": _exec_random,
+    "pipeline": _exec_pipeline,
+    "concurrent": _exec_concurrent,
+}
+
+
+def run_case(case: BenchCase, ctx: Optional[RunContext] = None, seed: int = 0) -> dict:
+    """Execute one case and return its observation row (features + target)."""
+    return _EXECUTORS[case.bench_type](case, ctx or RunContext(), seed)
+
+
+# ---------------------------------------------------------------- JSONL store
+
+def load_records(path: pathlib.Path) -> List[dict]:
+    """Read JSONL records, dropping a torn trailing line (a killed writer may
+    leave a partial last record).  A malformed line *before* the end means
+    something else corrupted the file — those are dropped too, but with a
+    warning, since the affected cases will silently re-run on resume."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return []
+    lines = [ln for ln in path.read_text().splitlines() if ln.strip()]
+    records = []
+    for i, line in enumerate(lines):
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i != len(lines) - 1:
+                print(f"warning: {path}:{i + 1}: dropping malformed JSONL line "
+                      "(file corrupted mid-stream?)", file=sys.stderr)
+    return records
+
+
+def completed_keys(records: Iterable[dict]) -> set:
+    """(case_id, rep, seed) triples that already succeeded — the resume
+    skip-set.  Keying on seed means a re-run with a new ``--seed`` collects a
+    fresh set of rows into the same file (growing the dataset) instead of
+    silently no-opping against records from another seed."""
+    return {
+        (r["case_id"], r.get("rep", 0), r.get("seed", 0))
+        for r in records if r.get("status") == "ok"
+    }
+
+
+def rows_from_records(records: Iterable[dict]) -> List[dict]:
+    """Observation rows (dataset.py schema) from successful JSONL records."""
+    return [r["row"] for r in records if r.get("status") == "ok" and r.get("row")]
+
+
+def shard_cases(cases: Sequence[BenchCase], shard: int, n_shards: int) -> List[BenchCase]:
+    """Positional partition: shard h of H takes cases h, h+H, h+2H, ...
+
+    Disjoint and complete across shards by construction."""
+    if not (0 <= shard < n_shards):
+        raise ValueError(f"shard {shard} out of range for {n_shards} shards")
+    return [c for i, c in enumerate(cases) if i % n_shards == shard]
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What one ``run_campaign`` invocation did."""
+
+    campaign: str
+    out_path: Optional[pathlib.Path]
+    executed: List[Tuple[str, int]]       # (case_id, rep) run this invocation
+    skipped: int                          # already-complete (resume hits)
+    failures: List[Tuple[str, int]]       # (case_id, rep) that raised
+    rows: List[dict]                      # observation rows from this run
+    errors: List[dict] = dataclasses.field(default_factory=list)
+    # one {case_id, rep, type, message, traceback} per entry in failures
+
+    @property
+    def n_executed(self) -> int:
+        return len(self.executed)
+
+
+def run_campaign(
+    campaign: Union[str, Campaign],
+    out_path: Optional[Union[str, pathlib.Path]] = None,
+    fast: bool = False,
+    seed: int = 0,
+    shard: Tuple[int, int] = (0, 1),
+    resume: bool = True,
+    max_cases: Optional[int] = None,
+    ctx: Optional[RunContext] = None,
+    executor: Optional[Callable[[BenchCase, RunContext, int], dict]] = None,
+    progress: Optional[Callable[[str], None]] = None,
+) -> RunResult:
+    """Run (or resume) a campaign, appending one JSONL record per case.
+
+    ``out_path=None`` keeps results in memory only (no resume across
+    processes).  ``shard=(h, H)`` runs the h-th positional slice of the case
+    list.  ``max_cases`` stops after that many executions (used by tests to
+    simulate a killed run).  ``executor`` overrides case execution (tests)."""
+    camp = get_campaign(campaign) if isinstance(campaign, str) else campaign
+    cases = shard_cases(camp.cases(fast), *shard)
+    ctx = ctx or RunContext()
+    exec_fn = executor or run_case
+
+    done: set = set()
+    if out_path is not None:
+        out_path = pathlib.Path(out_path)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        if resume:
+            done = completed_keys(load_records(out_path))
+        elif out_path.exists():
+            out_path.unlink()
+
+    executed: List[Tuple[str, int]] = []
+    failures: List[Tuple[str, int]] = []
+    errors: List[dict] = []
+    rows: List[dict] = []
+    skipped = 0
+    out_f = open(out_path, "a") if out_path is not None else None
+    try:
+        for case in cases:
+            for rep in range(case.repeats):
+                key = (case.id, rep)  # RunResult bookkeeping for this run
+                if (case.id, rep, seed + rep) in done:
+                    skipped += 1
+                    continue
+                if max_cases is not None and len(executed) >= max_cases:
+                    raise _MaxCasesReached
+                t0 = time.perf_counter()
+                record = {
+                    "schema_version": SCHEMA_VERSION,
+                    "campaign": camp.name,
+                    "case_id": case.id,
+                    "rep": rep,
+                    "seed": seed + rep,
+                    "shard": f"{shard[0]}/{shard[1]}",
+                    "host": ctx.host,
+                    "git": ctx.git,
+                    "case": dataclasses.asdict(case),
+                }
+                try:
+                    row = exec_fn(case, ctx, seed + rep)
+                    record.update(status="ok", row=row)
+                    rows.append(row)
+                    executed.append(key)
+                except KeyboardInterrupt:
+                    raise
+                except Exception as e:  # noqa: BLE001 — per-case isolation
+                    record.update(
+                        status="error", row=None,
+                        error={"type": type(e).__name__, "message": str(e),
+                               "traceback": traceback.format_exc(limit=8)},
+                    )
+                    failures.append(key)
+                    errors.append({"case_id": case.id, "rep": rep,
+                                   **record["error"]})
+                    executed.append(key)
+                record["elapsed_s"] = round(time.perf_counter() - t0, 6)
+                if out_f is not None:
+                    out_f.write(json.dumps(record) + "\n")
+                    out_f.flush()
+                if progress is not None:
+                    progress(f"{record['status']:5s} {case.id}#r{rep} "
+                             f"({record['elapsed_s']:.2f}s)")
+    except _MaxCasesReached:
+        pass
+    finally:
+        if out_f is not None:
+            out_f.close()
+    return RunResult(camp.name, out_path, executed, skipped, failures, rows, errors)
+
+
+class _MaxCasesReached(Exception):
+    pass
+
+
+# ---------------------------------------------------------------- summarize
+
+def _dist(values: List[float]) -> dict:
+    a = np.asarray(values, np.float64)
+    return {
+        "count": int(a.size),
+        "mean": float(a.mean()),
+        "median": float(np.median(a)),
+        "p10": float(np.percentile(a, 10)),
+        "p90": float(np.percentile(a, 90)),
+        "min": float(a.min()),
+        "max": float(a.max()),
+    }
+
+
+def summarize(records: Iterable[dict]) -> dict:
+    """Aggregate report: per-(bench_type, backend, format) target-throughput
+    distributions plus failure counts per group.
+
+    Records are deduplicated by (case_id, rep, seed) keeping the *last* one,
+    so an error record superseded by a successful resume re-run no longer
+    counts as a failure."""
+    latest: Dict[tuple, dict] = {}
+    for r in records:
+        latest[(r.get("case_id"), r.get("rep", 0), r.get("seed", 0))] = r
+    groups: Dict[tuple, List[float]] = {}
+    fails: Dict[tuple, int] = {}
+    n_ok = n_err = 0
+    for r in latest.values():
+        case = r.get("case", {})
+        key = (
+            case.get("bench_type", "?"),
+            case.get("backend", "?"),
+            case.get("format") or "-",
+        )
+        if r.get("status") == "ok" and r.get("row"):
+            n_ok += 1
+            groups.setdefault(key, []).append(float(r["row"].get(TARGET_NAME, 0.0)))
+        else:
+            n_err += 1
+            fails[key] = fails.get(key, 0) + 1
+    return {
+        "n_ok": n_ok,
+        "n_failed": n_err,
+        "groups": {
+            "/".join(k): {
+                "target_throughput_mb_s": _dist(v),
+                "failures": fails.get(k, 0),
+            }
+            for k, v in sorted(groups.items())
+        },
+        "failed_groups": {"/".join(k): n for k, n in sorted(fails.items())
+                          if k not in groups},
+    }
+
+
+def format_summary(report: dict) -> str:
+    lines = [f"ok={report['n_ok']} failed={report['n_failed']}"]
+    hdr = f"{'bench/backend/format':40s} {'n':>4s} {'mean':>10s} {'median':>10s} {'p10':>10s} {'p90':>10s} {'fail':>5s}"
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for name, g in report["groups"].items():
+        d = g["target_throughput_mb_s"]
+        lines.append(
+            f"{name:40s} {d['count']:>4d} {d['mean']:>10.1f} {d['median']:>10.1f} "
+            f"{d['p10']:>10.1f} {d['p90']:>10.1f} {g['failures']:>5d}"
+        )
+    for name, n in report.get("failed_groups", {}).items():
+        lines.append(f"{name:40s} {'-':>4s} {'-':>10s} {'-':>10s} {'-':>10s} {'-':>10s} {n:>5d}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------- CLI
+
+def _parse_shard(s: str) -> Tuple[int, int]:
+    try:
+        h, n = s.split("/")
+        return int(h), int(n)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"--shard wants 'h/H', got {s!r}") from None
+
+
+def _default_out(campaign: str, shard: Tuple[int, int], fast: bool = False) -> pathlib.Path:
+    # fast-mode rows measure smaller datasets/files — keep them out of the
+    # full campaign's default result file so summaries never mix the two
+    suffix = ".fast" if fast else ""
+    if shard[1] > 1:
+        suffix += f".shard{shard[0]}of{shard[1]}"
+    return DEFAULT_OUT_DIR / f"{campaign}{suffix}.jsonl"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.data.campaign",
+        description="List, run, resume, and summarize benchmark campaigns.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_list = sub.add_parser("list", help="list registered campaigns and case counts")
+    p_list.add_argument("--fast", action="store_true", help="count fast-mode cases")
+
+    for name, hlp in (("run", "run a campaign (resumes by default)"),
+                      ("resume", "alias of run: skip completed, re-run failed"),
+                      ("smoke", "run all paper campaigns fast and check summaries")):
+        p = sub.add_parser(name, help=hlp)
+        if name != "smoke":
+            p.add_argument("--campaign", default="paper_core")
+            p.add_argument("--shard", type=_parse_shard, default=(0, 1),
+                           metavar="h/H", help="run shard h of H (positional slice)")
+            if name == "run":
+                p.add_argument("--force", action="store_true",
+                               help="discard existing results and start over")
+            p.add_argument("--out", type=pathlib.Path, default=None,
+                           help=f"JSONL path (default: {DEFAULT_OUT_DIR}/<campaign>.jsonl)")
+            p.add_argument("--fast", action="store_true", help="small CI-sized subset")
+        else:
+            p.add_argument("--out", type=pathlib.Path, default=None,
+                           help="directory for per-campaign JSONL files "
+                                f"(default: {DEFAULT_OUT_DIR})")
+        p.add_argument("--seed", type=int, default=0)
+
+    p_sum = sub.add_parser("summarize", help="aggregate JSONL results")
+    p_sum.add_argument("--out", type=pathlib.Path, nargs="+", required=True,
+                       help="one or more campaign JSONL files (e.g. per-shard)")
+    p_sum.add_argument("--json", action="store_true", help="print JSON, not a table")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "list":
+        for c in list_campaigns():
+            n = len(c.cases(args.fast))
+            print(f"{c.name:24s} {n:>5d} cases  {c.description}")
+        return 0
+
+    if args.cmd == "summarize":
+        missing = [p for p in args.out if not pathlib.Path(p).exists()]
+        if missing:
+            print(f"error: no such result file: {', '.join(map(str, missing))}",
+                  file=sys.stderr)
+            return 2
+        records = [r for p in args.out for r in load_records(p)]
+        report = summarize(records)
+        print(json.dumps(report, indent=2) if args.json else format_summary(report))
+        return 0 if report["n_ok"] and not report["n_failed"] else 1
+
+    if args.cmd == "smoke":
+        failures = 0
+        for name in ("paper_random_access", "paper_pipeline", "paper_concurrent"):
+            out = (args.out / f"{name}.jsonl") if args.out else _default_out(name, (0, 1), fast=True)
+            res = run_campaign(name, out, fast=True, seed=args.seed,
+                               progress=lambda m: print(f"  {m}"))
+            report = summarize(load_records(out))
+            ok = report["n_ok"] > 0 and not res.failures
+            print(f"{name}: executed={res.n_executed} skipped={res.skipped} "
+                  f"failed={len(res.failures)} summary_groups={len(report['groups'])}")
+            if not ok:
+                failures += 1
+        print("smoke: " + ("PASS" if not failures else "FAIL"))
+        return 1 if failures else 0
+
+    # run / resume
+    out = args.out or _default_out(args.campaign, args.shard, fast=args.fast)
+    try:
+        res = run_campaign(
+            args.campaign, out, fast=args.fast, seed=args.seed, shard=args.shard,
+            resume=not getattr(args, "force", False),  # --force exists on run only
+            progress=lambda m: print(m),
+        )
+    except (KeyError, ValueError) as e:
+        msg = e.args[0] if e.args else e
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+    print(f"{res.campaign}: executed={res.n_executed} skipped={res.skipped} "
+          f"failed={len(res.failures)} -> {out}")
+    print(format_summary(summarize(load_records(out))))
+    return 1 if res.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

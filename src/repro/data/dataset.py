@@ -2,8 +2,13 @@
 
 Regenerates the paper's 141-observation core set deterministically on this
 machine: 84 random-access I/O tests, 52 training-pipeline benchmarks, and
-5 concurrent-I/O tests. Results are cached to JSON; ``n_repeats`` extends the
-set toward the paper's 500-1000 future-work target.
+5 concurrent-I/O tests.  The case matrix itself is declared in
+``registry.py`` (campaigns ``paper_random_access`` / ``paper_pipeline`` /
+``paper_concurrent``) and executed by ``campaign.py``; this module is the
+thin, signature-stable wrapper the predictor and benchmarks consume.
+Results are cached to JSON; ``repeats`` extends the set toward the paper's
+500-1000 future-work target (see also the ``extended`` campaign and the
+resumable JSONL runner in ``campaign.py`` for large collections).
 
 Feature semantics (leakage-aware, matching the paper's design): rows mix
 *configuration* knobs with *upstream measurements* (e.g. a file's sequential
@@ -17,196 +22,58 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
-from ..core.features import FEATURE_NAMES, TARGET_NAME
-from .bench_io import bench_concurrent_read, bench_random_read, bench_sequential_read, make_test_file
-from .formats import open_dataset, write_dataset
-from .pipeline import DataPipeline, PipelineConfig, TokenRecordCodec
-from .storage import BACKENDS, StorageBackend
-from .telemetry import StepTelemetry
+from ..core.features import FEATURE_NAMES, TARGET_NAME  # noqa: F401 — re-export
+from .campaign import RunContext, run_campaign
+from .registry import get_campaign
 
-__all__ = ["collect_observations", "observations_to_columns", "DEFAULT_CACHE"]
+__all__ = [
+    "collect_observations",
+    "collect_random_access",
+    "collect_pipeline",
+    "collect_concurrent",
+    "observations_to_columns",
+    "DEFAULT_CACHE",
+]
 
 DEFAULT_CACHE = pathlib.Path("/tmp/repro_io/observations.json")
 
-_RA_BACKENDS = ("tmpfs", "disk", "network_sim", "object_sim")
-_RA_SIZES_MB = (4, 16, 64)
-_RA_COMBOS = ((100, 4), (300, 4), (1000, 4), (100, 64), (300, 64), (1000, 64), (300, 16))
-# latency-heavy simulated backends get proportionally fewer ops
-_RA_SCALE = {"tmpfs": 1.0, "disk": 1.0, "network_sim": 0.5, "object_sim": 0.125}
 
-_PL_FORMATS = ("raw", "packed", "compressed", "sharded")
-_PL_BACKENDS = ("tmpfs", "disk")
-_PL_BATCH = (16, 32, 64)
-_PL_WORKERS = (0, 2)
-_PL_EXTRA = [  # 4 extra rows -> 4*2*3*2 + 4 = 52 (paper Fig 2)
-    ("raw", "tmpfs", 128, 4),
-    ("packed", "tmpfs", 128, 4),
-    ("compressed", "tmpfs", 128, 4),
-    ("sharded", "tmpfs", 128, 4),
-]
+def _collect(campaign: str, seed: int, fast: bool,
+             ctx: Optional[RunContext] = None) -> List[dict]:
+    """Run one paper campaign in-memory and return its observation rows.
 
-_CC_CASES = [("tmpfs", 1), ("tmpfs", 2), ("tmpfs", 4), ("tmpfs", 8), ("disk", 4)]
-
-
-def _blank_row(bench_type: str) -> dict:
-    row = {k: 0.0 for k in FEATURE_NAMES}
-    row["bench_type"] = bench_type
-    return row
-
-
-def _simulated_compute(seconds: float):
-    """Stand-in for the accelerator step (paper's 'simulated GPU')."""
-    t0 = time.perf_counter()
-    while time.perf_counter() - t0 < seconds:
-        pass
+    Unlike the resumable JSONL runner, collection here is all-or-nothing:
+    a failed case raises instead of yielding a silently truncated dataset."""
+    result = run_campaign(campaign, out_path=None, fast=fast, seed=seed, ctx=ctx)
+    if result.failures:
+        ids = ", ".join(f"{cid}#r{rep}" for cid, rep in result.failures)
+        first = result.errors[0] if result.errors else {}
+        raise RuntimeError(
+            f"campaign {campaign!r}: {len(result.failures)} case(s) failed: {ids}; "
+            f"first error: {first.get('type', '?')}: {first.get('message', '?')}\n"
+            f"{first.get('traceback', '')}"
+            "(use repro.data.campaign.run_campaign for fault-tolerant collection)"
+        )
+    return result.rows
 
 
 def collect_random_access(seed: int = 0, fast: bool = False) -> List[dict]:
-    rows = []
-    sizes = (2, 4) if fast else _RA_SIZES_MB
-    combos = _RA_COMBOS[:2] if fast else _RA_COMBOS
-    backends = ("tmpfs", "disk") if fast else _RA_BACKENDS
-    seq_cache: Dict[tuple, float] = {}
-    for bname in backends:
-        backend = BACKENDS[bname]
-        for size_mb in sizes:
-            path = make_test_file(backend, f"ra_{size_mb}mb.bin", size_mb, seed)
-            for n_samples, sample_kb in combos:
-                n = max(20, int(n_samples * _RA_SCALE.get(bname, 1.0)))
-                key = (bname, size_mb, sample_kb)
-                if key not in seq_cache:
-                    seq = bench_sequential_read(backend, path, block_kb=max(sample_kb, 64))
-                    seq_cache[key] = seq["throughput_mb_s"]
-                r = bench_random_read(backend, path, n, sample_kb, seed=seed)
-                row = _blank_row("io_random")
-                row.update(
-                    block_kb=sample_kb,
-                    file_size_mb=r["file_size_mb"],
-                    n_samples=n,
-                    throughput_mb_s=seq_cache[key],  # upstream: sequential baseline
-                    iops=r["iops"],
-                    n_threads=1,
-                )
-                row[TARGET_NAME] = r["throughput_mb_s"]  # downstream: random-access
-                row["backend"] = bname
-                rows.append(row)
-    return rows
-
-
-def _run_pipeline_case(
-    backend: StorageBackend,
-    manifest: dict,
-    fmt: str,
-    batch: int,
-    workers: int,
-    seq_len: int,
-    compute_s: float,
-    probe_steps: int = 2,
-    measure_steps: int = 6,
-) -> dict:
-    reader = open_dataset(backend, manifest, block_kb=64)
-    pipe = DataPipeline.from_reader(
-        reader, seq_len, PipelineConfig(batch_size=batch, num_workers=workers, seed=0)
-    )
-    tele = StepTelemetry()
-    probe = StepTelemetry()
-    steps = min(pipe.steps_per_epoch(), probe_steps + measure_steps)
-    it = pipe.iter_epoch(0)
-    for s in range(steps):
-        t = probe if s < probe_steps else tele
-        with t.data_wait():
-            batch_arr = next(it)
-        with t.compute():
-            _simulated_compute(compute_s)
-        t.record_batch(batch_arr.shape[0], batch_arr.nbytes)
-    it.close()  # stops the producer thread before teardown
-    pipe.close()
-    reader.close()
-    row = _blank_row("pipeline")
-    row.update(
-        batch_size=batch,
-        num_workers=workers,
-        block_kb=64,
-        file_size_mb=reader.total_bytes / 1e6,
-        samples_per_second=probe.samples_per_second(),  # upstream probe
-        data_loading_ratio=probe.data_loading_ratio(),
-        throughput_mb_s=probe.throughput_mb_s(),
-    )
-    # Target = overall delivered MB/s (samples/sec × record bytes), the
-    # paper's pipeline-benchmark measurement; probe features come from the
-    # separate warmup window above.
-    row[TARGET_NAME] = tele.throughput_mb_s()
-    row["backend"] = backend.name
-    row["format"] = fmt
-    row["utilization"] = tele.simulated_utilization()
-    return row
+    """The 84 random-access rows (campaign ``paper_random_access``)."""
+    return _collect("paper_random_access", seed, fast)
 
 
 def collect_pipeline(seed: int = 0, fast: bool = False) -> List[dict]:
-    seq_len = 256
-    codec = TokenRecordCodec(seq_len)
-    rng = np.random.default_rng(seed)
-    n_records = 256 if fast else 1024
-    records = [
-        codec.encode(rng.integers(0, 50_000, size=seq_len, dtype=np.int32))
-        for _ in range(n_records)
-    ]
-    manifests: Dict[tuple, dict] = {}
-    for bname in _PL_BACKENDS:
-        for fmt in _PL_FORMATS:
-            manifests[(bname, fmt)] = write_dataset(
-                BACKENDS[bname], f"pl_{fmt}", records, fmt
-            )
-    cases = []
-    batches = _PL_BATCH[:2] if fast else _PL_BATCH
-    for fmt in _PL_FORMATS:
-        for bname in _PL_BACKENDS if not fast else ("tmpfs",):
-            for batch in batches:
-                for workers in _PL_WORKERS:
-                    cases.append((fmt, bname, batch, workers))
-    if not fast:
-        cases.extend(_PL_EXTRA)
-    rows = []
-    for fmt, bname, batch, workers in cases:
-        rows.append(
-            _run_pipeline_case(
-                BACKENDS[bname],
-                manifests[(bname, fmt)],
-                fmt,
-                batch,
-                workers,
-                seq_len,
-                compute_s=0.002,
-            )
-        )
-    return rows
+    """The 52 training-pipeline rows (campaign ``paper_pipeline``)."""
+    return _collect("paper_pipeline", seed, fast)
 
 
 def collect_concurrent(seed: int = 0, fast: bool = False) -> List[dict]:
-    rows = []
-    cases = _CC_CASES[:2] if fast else _CC_CASES
-    for bname, n_threads in cases:
-        backend = BACKENDS[bname]
-        path = make_test_file(backend, "cc_32mb.bin", 8 if fast else 32, seed)
-        r = bench_concurrent_read(backend, path, n_threads, per_thread_mb=2 if fast else 8)
-        row = _blank_row("concurrent")
-        row.update(
-            block_kb=r["block_kb"],
-            file_size_mb=r["file_size_mb"],
-            n_threads=n_threads,
-            throughput_mb_s=r["throughput_mb_s"],  # per-thread
-            iops=r["iops"],
-            aggregate_throughput_mb_s=r["aggregate_throughput_mb_s"],
-        )
-        row[TARGET_NAME] = r["aggregate_throughput_mb_s"]
-        row["backend"] = bname
-        rows.append(row)
-    return rows
+    """The 5 concurrent-I/O rows (campaign ``paper_concurrent``)."""
+    return _collect("paper_concurrent", seed, fast)
 
 
 def collect_observations(
@@ -218,21 +85,20 @@ def collect_observations(
 ) -> List[dict]:
     """The 141-row core set (or a small ``fast`` subset for unit tests).
 
-    ``repeats > 1`` re-runs the suite with different seeds (sample offsets,
-    shuffles), growing the dataset toward the paper's 500-1000 future-work
-    target (141 x repeats rows)."""
-    expect = 141 * repeats
+    Thin wrapper over the ``paper_core`` campaign.  ``repeats > 1`` re-runs
+    the suite with different seeds (sample offsets, shuffles), growing the
+    dataset toward the paper's 500-1000 future-work target (141 x repeats
+    rows)."""
+    expect = len(get_campaign("paper_core").cases(fast=False)) * repeats
     if cache is not None and cache.exists() and not force:
         rows = json.loads(cache.read_text())
         if (fast and len(rows) >= 10) or (not fast and len(rows) >= expect):
             return rows[:expect] if not fast else rows
-    rows = []
+    rows: List[dict] = []
     for r in range(repeats):
-        rows += (
-            collect_random_access(seed + r, fast)
-            + collect_pipeline(seed + r, fast)
-            + collect_concurrent(seed + r, fast)
-        )
+        # fresh per-repeat context; test files and manifests carry the seed in
+        # their names, so each repeat benchmarks seed-specific file content
+        rows += _collect("paper_core", seed + r, fast, ctx=RunContext())
     if cache is not None:
         cache.parent.mkdir(parents=True, exist_ok=True)
         cache.write_text(json.dumps(rows))

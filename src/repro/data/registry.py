@@ -1,0 +1,314 @@
+"""Declarative benchmark-case registry (paper §3.1, Fig 2).
+
+The paper's 141-observation core set — 84 random-access I/O tests, 52
+training-pipeline benchmarks, 5 concurrent-I/O tests — used to live as
+hardcoded module-level tuples in ``dataset.py``.  This module replaces them
+with a declarative catalogue: every benchmark the repo can run is a frozen
+:class:`BenchCase` with a stable string id, and a :class:`Campaign` is a named,
+registered generator of cases.
+
+Three *paper* campaigns reproduce the exact 84/52/5 split; the ``extended``
+campaign sweeps a deeper grid (all four formats x all four backends, wider
+worker/prefetch/batch axes) toward the paper's 500-1000-observation
+future-work target.  ``campaign.py`` executes cases resumably and shardably;
+this module is pure data — no I/O happens here.
+
+Registering a new campaign::
+
+    @register_campaign("my_sweep", "one-line description")
+    def _my_sweep(fast: bool = False):
+        return matrix_cases(
+            "pipeline", id_prefix="my",
+            backend=["tmpfs"], format=["packed", "sharded"],
+            batch_size=[32, 64], num_workers=[0, 4],
+        )
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, Iterable, List, Sequence, Tuple
+
+__all__ = [
+    "BenchCase",
+    "Campaign",
+    "CAMPAIGNS",
+    "register_campaign",
+    "get_campaign",
+    "list_campaigns",
+    "matrix_cases",
+    "BENCH_TYPES",
+    "RA_LATENCY_SCALE",
+]
+
+BENCH_TYPES = ("io_random", "pipeline", "concurrent")
+
+# Latency-heavy simulated backends get proportionally fewer random-access ops
+# so one campaign run stays tractable (same wall-clock budget per backend).
+RA_LATENCY_SCALE = {"tmpfs": 1.0, "disk": 1.0, "network_sim": 0.5, "object_sim": 0.125}
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchCase:
+    """One executable benchmark configuration.
+
+    ``id`` is the resume/shard key: it must be unique within a campaign and
+    stable across processes.  Fields past ``tags`` are bench-type specific —
+    e.g. ``n_samples`` only matters for ``io_random``, ``n_threads`` /
+    ``per_thread_mb`` for ``concurrent``, and the pipeline knobs
+    (``batch_size``, ``num_workers``, ``prefetch_depth``, ``format``,
+    ``n_records``, ``seq_len``, ``compute_s``) for ``pipeline``.
+    """
+
+    id: str
+    bench_type: str                       # one of BENCH_TYPES
+    backend: str = "tmpfs"                # key into storage.BACKENDS
+    format: str = ""                      # record format ("" = not applicable)
+    batch_size: int = 0
+    num_workers: int = 0
+    block_kb: int = 64
+    file_size_mb: float = 0.0
+    repeats: int = 1                      # independent reruns (seed offset)
+    tags: Tuple[str, ...] = ()
+    # -- bench-type-specific extras ------------------------------------
+    n_samples: int = 0                    # io_random: number of random reads
+    n_threads: int = 1                    # concurrent: reader thread count
+    per_thread_mb: float = 8.0            # concurrent: bytes read per thread
+    prefetch_depth: int = 2               # pipeline: prefetch queue depth
+    compute_s: float = 0.002              # pipeline: simulated step compute
+    n_records: int = 1024                 # pipeline: dataset size (records)
+    seq_len: int = 256                    # pipeline: tokens per record
+
+    def __post_init__(self):
+        if self.bench_type not in BENCH_TYPES:
+            raise ValueError(f"unknown bench_type {self.bench_type!r}")
+        if not self.id:
+            raise ValueError("BenchCase.id must be non-empty")
+        if self.repeats < 1:
+            raise ValueError("BenchCase.repeats must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class Campaign:
+    """A named, registered generator of :class:`BenchCase` lists.
+
+    ``builder(fast)`` returns the expanded case list; ``fast=True`` yields a
+    small CI-sized subset with the same row schema."""
+
+    name: str
+    description: str
+    builder: Callable[[bool], Tuple[BenchCase, ...]]
+
+    def cases(self, fast: bool = False) -> Tuple[BenchCase, ...]:
+        cases = tuple(self.builder(fast))
+        seen: Dict[str, BenchCase] = {}
+        for c in cases:
+            if c.id in seen:
+                raise ValueError(f"duplicate case id {c.id!r} in campaign {self.name!r}")
+            seen[c.id] = c
+        return cases
+
+
+CAMPAIGNS: Dict[str, Campaign] = {}
+
+
+def register_campaign(name: str, description: str):
+    """Decorator: register ``fn(fast) -> cases`` as campaign ``name``."""
+
+    def deco(fn: Callable[[bool], Iterable[BenchCase]]):
+        if name in CAMPAIGNS:
+            raise ValueError(f"campaign {name!r} already registered")
+        CAMPAIGNS[name] = Campaign(name, description, lambda fast=False: tuple(fn(fast)))
+        return fn
+
+    return deco
+
+
+def get_campaign(name: str) -> Campaign:
+    try:
+        return CAMPAIGNS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown campaign {name!r}; available: {', '.join(sorted(CAMPAIGNS))}"
+        ) from None
+
+
+def list_campaigns() -> List[Campaign]:
+    return [CAMPAIGNS[k] for k in sorted(CAMPAIGNS)]
+
+
+def matrix_cases(bench_type: str, id_prefix: str, tags: Sequence[str] = (), **axes) -> List[BenchCase]:
+    """Cartesian-product expansion helper.
+
+    Each keyword is a BenchCase field name mapped to a list of values; the
+    product is expanded in keyword order and ids are generated as
+    ``{id_prefix}-{v1}-{v2}-...``."""
+    names = list(axes)
+    out = []
+    for combo in itertools.product(*(axes[n] for n in names)):
+        kw = dict(zip(names, combo))
+        cid = "-".join([id_prefix] + [_fmt_id_part(n, v) for n, v in kw.items()])
+        out.append(BenchCase(id=cid, bench_type=bench_type, tags=tuple(tags), **kw))
+    return out
+
+
+def _fmt_id_part(name: str, value) -> str:
+    abbrev = {
+        "backend": "", "format": "", "batch_size": "b", "num_workers": "w",
+        "block_kb": "k", "file_size_mb": "mb", "n_samples": "n",
+        "n_threads": "t", "prefetch_depth": "pf",
+    }
+    prefix = abbrev.get(name, name[:2])
+    if isinstance(value, float) and value == int(value):
+        value = int(value)
+    return f"{prefix}{value}"
+
+
+# ---------------------------------------------------------------------------
+# Paper campaigns (Fig 2): 84 random-access + 52 pipeline + 5 concurrent.
+# ---------------------------------------------------------------------------
+
+_RA_BACKENDS = ("tmpfs", "disk", "network_sim", "object_sim")
+_RA_SIZES_MB = (4, 16, 64)
+_RA_COMBOS = ((100, 4), (300, 4), (1000, 4), (100, 64), (300, 64), (1000, 64), (300, 16))
+
+_PL_FORMATS = ("raw", "packed", "compressed", "sharded")
+_PL_BACKENDS = ("tmpfs", "disk")
+_PL_BATCH = (16, 32, 64)
+_PL_WORKERS = (0, 2)
+# 4 extra rows -> 4*2*3*2 + 4 = 52 (paper Fig 2)
+_PL_EXTRA = (
+    ("raw", "tmpfs", 128, 4),
+    ("packed", "tmpfs", 128, 4),
+    ("compressed", "tmpfs", 128, 4),
+    ("sharded", "tmpfs", 128, 4),
+)
+
+_CC_CASES = (("tmpfs", 1), ("tmpfs", 2), ("tmpfs", 4), ("tmpfs", 8), ("disk", 4))
+
+
+def _ra_case(backend: str, size_mb: float, n_nominal: int, sample_kb: int,
+             tags: Tuple[str, ...]) -> BenchCase:
+    n = max(20, int(n_nominal * RA_LATENCY_SCALE.get(backend, 1.0)))
+    return BenchCase(
+        id=f"ra-{backend}-{_fmt_id_part('file_size_mb', size_mb)}-n{n}-k{sample_kb}",
+        bench_type="io_random", backend=backend, block_kb=sample_kb,
+        file_size_mb=size_mb, n_samples=n, tags=tags,
+    )
+
+
+def _pl_case(fmt: str, backend: str, batch: int, workers: int,
+             tags: Tuple[str, ...], prefetch: int = 2, n_records: int = 1024) -> BenchCase:
+    # ids encode every non-default knob so a fast-mode case (smaller dataset)
+    # can never alias a full-mode case in a shared resume file
+    cid = f"pl-{fmt}-{backend}-b{batch}-w{workers}"
+    if prefetch != 2:
+        cid += f"-pf{prefetch}"
+    if n_records != 1024:
+        cid += f"-r{n_records}"
+    return BenchCase(
+        id=cid, bench_type="pipeline", backend=backend, format=fmt,
+        batch_size=batch, num_workers=workers, block_kb=64,
+        prefetch_depth=prefetch, n_records=n_records, tags=tags,
+    )
+
+
+def _cc_case(backend: str, n_threads: int, tags: Tuple[str, ...],
+             file_size_mb: float = 32, per_thread_mb: float = 8) -> BenchCase:
+    cid = f"cc-{backend}-t{n_threads}"
+    if (file_size_mb, per_thread_mb) != (32, 8):
+        cid += f"-mb{int(file_size_mb)}x{int(per_thread_mb)}"
+    return BenchCase(
+        id=cid,
+        bench_type="concurrent", backend=backend, block_kb=256,
+        file_size_mb=file_size_mb, n_threads=n_threads,
+        per_thread_mb=per_thread_mb, tags=tags,
+    )
+
+
+@register_campaign("paper_random_access", "84 random-access I/O tests (paper Fig 2)")
+def paper_random_access(fast: bool = False) -> List[BenchCase]:
+    backends = ("tmpfs", "disk") if fast else _RA_BACKENDS
+    sizes = (2, 4) if fast else _RA_SIZES_MB
+    combos = _RA_COMBOS[:2] if fast else _RA_COMBOS
+    tags = ("paper", "random-access")
+    return [
+        _ra_case(b, s, n, kb, tags)
+        for b in backends for s in sizes for n, kb in combos
+    ]
+
+
+@register_campaign("paper_pipeline", "52 training-pipeline benchmarks (paper Fig 2)")
+def paper_pipeline(fast: bool = False) -> List[BenchCase]:
+    tags = ("paper", "pipeline")
+    n_records = 256 if fast else 1024
+    batches = _PL_BATCH[:2] if fast else _PL_BATCH
+    backends = ("tmpfs",) if fast else _PL_BACKENDS
+    cases = [
+        _pl_case(fmt, b, batch, w, tags, n_records=n_records)
+        for fmt in _PL_FORMATS for b in backends
+        for batch in batches for w in _PL_WORKERS
+    ]
+    if not fast:
+        cases += [_pl_case(fmt, b, batch, w, tags) for fmt, b, batch, w in _PL_EXTRA]
+    return cases
+
+
+@register_campaign("paper_concurrent", "5 concurrent-I/O tests (paper Fig 2)")
+def paper_concurrent(fast: bool = False) -> List[BenchCase]:
+    tags = ("paper", "concurrent")
+    cases = _CC_CASES[:2] if fast else _CC_CASES
+    kw = dict(file_size_mb=8, per_thread_mb=2) if fast else {}
+    return [_cc_case(b, t, tags, **kw) for b, t in cases]
+
+
+@register_campaign("paper_core", "the paper's full 141-observation core set")
+def paper_core(fast: bool = False) -> List[BenchCase]:
+    return (
+        list(paper_random_access(fast))
+        + list(paper_pipeline(fast))
+        + list(paper_concurrent(fast))
+    )
+
+
+@register_campaign(
+    "extended",
+    "deep sweep toward the paper's 500-1000-observation future-work target",
+)
+def extended(fast: bool = False) -> List[BenchCase]:
+    """All four backends x all four formats, wider batch/worker/prefetch grids.
+
+    Full expansion is ~724 cases (128 random-access + 576 pipeline + 20
+    concurrent), inside the paper's 500-1000 target band.  ``fast`` shrinks
+    every axis for smoke tests."""
+    tags = ("extended",)
+    if fast:
+        ra = [_ra_case(b, 2, 50, kb, tags) for b in ("tmpfs", "disk") for kb in (4, 64)]
+        pl = [
+            _pl_case(fmt, "tmpfs", 16, w, tags, n_records=128)
+            for fmt in ("raw", "packed") for w in (0, 2)
+        ]
+        cc = [_cc_case("tmpfs", t, tags, file_size_mb=8, per_thread_mb=2) for t in (1, 2)]
+        return ra + pl + cc
+    ra = [
+        _ra_case(b, s, n, kb, tags)
+        for b in _RA_BACKENDS
+        for s in (4, 16, 64, 256)
+        for n, kb in ((100, 4), (300, 4), (1000, 4), (100, 64), (300, 64),
+                      (1000, 64), (300, 16), (1000, 16))
+    ]
+    pl = [
+        _pl_case(fmt, b, batch, w, tags, prefetch=pf)
+        for fmt in _PL_FORMATS
+        for b in _RA_BACKENDS
+        for batch in (16, 32, 64, 128)
+        for w in (0, 2, 4)
+        for pf in (1, 2, 4)
+    ]
+    cc = [
+        _cc_case(b, t, tags)
+        for b in _RA_BACKENDS
+        for t in (1, 2, 4, 8, 16)
+    ]
+    return ra + pl + cc

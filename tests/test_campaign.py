@@ -1,0 +1,321 @@
+"""Campaign subsystem semantics: registry expansion (the paper's 84/52/5),
+resume-after-kill, failure re-run, shard partitioning, and schema stability
+of ``collect_observations`` vs. the seed implementation."""
+
+import json
+
+import pytest
+
+from repro.core.features import FEATURE_NAMES, TARGET_NAME
+from repro.data.campaign import (
+    RunContext,
+    completed_keys,
+    load_records,
+    main as campaign_main,
+    run_campaign,
+    shard_cases,
+    summarize,
+)
+from repro.data.registry import (
+    BenchCase,
+    CAMPAIGNS,
+    Campaign,
+    get_campaign,
+    matrix_cases,
+)
+
+# ---------------------------------------------------------------- registry
+
+
+def test_paper_campaigns_reproduce_fig2_split():
+    assert len(get_campaign("paper_random_access").cases()) == 84
+    assert len(get_campaign("paper_pipeline").cases()) == 52
+    assert len(get_campaign("paper_concurrent").cases()) == 5
+    core = get_campaign("paper_core").cases()
+    assert len(core) == 141
+    assert len({c.id for c in core}) == 141  # globally unique ids
+
+
+def test_paper_core_is_concatenation_in_order():
+    core = [c.id for c in get_campaign("paper_core").cases()]
+    parts = [
+        c.id
+        for name in ("paper_random_access", "paper_pipeline", "paper_concurrent")
+        for c in get_campaign(name).cases()
+    ]
+    assert core == parts
+
+
+def test_extended_campaign_hits_future_work_band():
+    cases = get_campaign("extended").cases()
+    assert 500 <= len(cases) <= 1000
+    assert len({c.id for c in cases}) == len(cases)
+    # sweeps all four formats and all four backends
+    assert {c.format for c in cases if c.bench_type == "pipeline"} == {
+        "raw", "packed", "compressed", "sharded"}
+    assert {c.backend for c in cases} == {"tmpfs", "disk", "network_sim", "object_sim"}
+
+
+def test_fast_mode_ids_are_subset_schema():
+    for name in ("paper_random_access", "paper_pipeline", "paper_concurrent"):
+        fast = get_campaign(name).cases(fast=True)
+        assert 0 < len(fast) < len(get_campaign(name).cases())
+        assert len({c.id for c in fast}) == len(fast)
+
+
+def test_bench_case_validation():
+    with pytest.raises(ValueError):
+        BenchCase(id="x", bench_type="nope")
+    with pytest.raises(ValueError):
+        BenchCase(id="", bench_type="pipeline")
+    with pytest.raises(ValueError):
+        BenchCase(id="x", bench_type="pipeline", repeats=0)
+
+
+def test_matrix_cases_expansion():
+    cases = matrix_cases(
+        "pipeline", id_prefix="m", backend=["tmpfs", "disk"],
+        format=["raw", "packed"], batch_size=[16, 32],
+    )
+    assert len(cases) == 8
+    assert len({c.id for c in cases}) == 8
+    assert cases[0].bench_type == "pipeline"
+
+
+def test_duplicate_case_ids_rejected():
+    camp = Campaign("dup", "", lambda fast=False: (
+        BenchCase(id="a", bench_type="pipeline"),
+        BenchCase(id="a", bench_type="pipeline"),
+    ))
+    with pytest.raises(ValueError, match="duplicate"):
+        camp.cases()
+
+
+# ---------------------------------------------------------------- sharding
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 5])
+def test_shards_disjoint_and_complete(n_shards):
+    cases = get_campaign("paper_core").cases()
+    parts = [shard_cases(cases, h, n_shards) for h in range(n_shards)]
+    ids = [c.id for p in parts for c in p]
+    assert sorted(ids) == sorted(c.id for c in cases)  # complete
+    assert len(set(ids)) == len(ids)  # disjoint
+
+
+def test_shard_out_of_range():
+    with pytest.raises(ValueError):
+        shard_cases([], 2, 2)
+
+
+# ---------------------------------------------------------------- runner
+# A fake executor lets us test run/resume/shard semantics without real I/O.
+
+
+def _fake_campaign(n=8):
+    return Campaign(
+        "fake", "test campaign",
+        lambda fast=False: tuple(
+            BenchCase(id=f"case-{i:02d}", bench_type="concurrent", backend="tmpfs")
+            for i in range(n)
+        ),
+    )
+
+
+def _ok_executor(log):
+    def ex(case, ctx, seed):
+        log.append(case.id)
+        return {TARGET_NAME: 1.0, "bench_type": case.bench_type, "backend": case.backend}
+    return ex
+
+
+def test_killed_run_resumes_only_remaining(tmp_path):
+    """Acceptance: kill mid-way, resume completes exactly the remaining cases."""
+    camp = _fake_campaign(8)
+    out = tmp_path / "fake.jsonl"
+    first, second = [], []
+    r1 = run_campaign(camp, out, executor=_ok_executor(first), max_cases=3)
+    assert r1.n_executed == 3 and first == ["case-00", "case-01", "case-02"]
+    r2 = run_campaign(camp, out, executor=_ok_executor(second))
+    assert second == [f"case-{i:02d}" for i in range(3, 8)]  # only the remaining 5
+    assert r2.skipped == 3
+    assert len(completed_keys(load_records(out))) == 8
+
+
+def test_resume_reruns_failed_cases(tmp_path):
+    camp = _fake_campaign(4)
+    out = tmp_path / "fake.jsonl"
+
+    def flaky(case, ctx, seed):
+        if case.id == "case-02":
+            raise RuntimeError("injected benchmark crash")
+        return {TARGET_NAME: 2.0, "bench_type": case.bench_type, "backend": case.backend}
+
+    r1 = run_campaign(camp, out, executor=flaky)
+    assert r1.failures == [("case-02", 0)]
+    (err,) = r1.errors  # details travel on the result, not just the JSONL
+    assert err["type"] == "RuntimeError" and "injected" in err["message"]
+    recs = load_records(out)
+    err = [r for r in recs if r["status"] == "error"]
+    assert len(err) == 1 and err[0]["error"]["type"] == "RuntimeError"
+    assert "injected" in err[0]["error"]["message"]
+
+    rerun = []
+    r2 = run_campaign(camp, out, executor=_ok_executor(rerun))
+    assert rerun == ["case-02"]  # only the failed case re-runs
+    assert r2.skipped == 3 and not r2.failures
+
+
+def test_repeats_tracked_per_rep(tmp_path):
+    camp = Campaign("rep", "", lambda fast=False: (
+        BenchCase(id="only", bench_type="concurrent", repeats=3),))
+    out = tmp_path / "rep.jsonl"
+    log = []
+    run_campaign(camp, out, executor=_ok_executor(log), max_cases=2)
+    r2 = run_campaign(camp, out, executor=_ok_executor(log))
+    assert r2.skipped == 2 and r2.n_executed == 1
+    assert {(r["case_id"], r["rep"]) for r in load_records(out)} == {
+        ("only", 0), ("only", 1), ("only", 2)}
+
+
+def test_torn_trailing_line_is_dropped(tmp_path):
+    camp = _fake_campaign(3)
+    out = tmp_path / "fake.jsonl"
+    run_campaign(camp, out, executor=_ok_executor([]), max_cases=2)
+    with open(out, "a") as f:
+        f.write('{"case_id": "case-02", "status": "ok"')  # no newline, invalid JSON
+    assert len(load_records(out)) == 2
+    log = []
+    run_campaign(camp, out, executor=_ok_executor(log))
+    assert log == ["case-02"]
+
+
+def test_shard_runs_write_disjoint_files(tmp_path):
+    camp = _fake_campaign(7)
+    seen = []
+    for h in range(3):
+        run_campaign(camp, tmp_path / f"s{h}.jsonl", shard=(h, 3),
+                     executor=_ok_executor(seen))
+    assert sorted(seen) == [f"case-{i:02d}" for i in range(7)]
+    recs = [r for h in range(3) for r in load_records(tmp_path / f"s{h}.jsonl")]
+    assert {r["shard"] for r in recs} == {"0/3", "1/3", "2/3"}
+
+
+def test_provenance_fields_present(tmp_path):
+    camp = _fake_campaign(1)
+    out = tmp_path / "p.jsonl"
+    run_campaign(camp, out, executor=_ok_executor([]), seed=7)
+    (rec,) = load_records(out)
+    for field in ("schema_version", "campaign", "case_id", "rep", "seed",
+                  "shard", "host", "git", "case", "status", "row", "elapsed_s"):
+        assert field in rec, field
+    assert rec["seed"] == 7
+    assert rec["case"]["id"] == "case-00"
+
+
+def test_new_seed_collects_fresh_rows(tmp_path):
+    """Same campaign + same file + new seed appends rows instead of no-opping."""
+    camp = _fake_campaign(3)
+    out = tmp_path / "seeds.jsonl"
+    run_campaign(camp, out, executor=_ok_executor([]), seed=0)
+    log = []
+    r2 = run_campaign(camp, out, executor=_ok_executor(log), seed=5)
+    assert len(log) == 3 and r2.skipped == 0  # seed 5 is a fresh collection
+    r3 = run_campaign(camp, out, executor=_ok_executor([]), seed=5)
+    assert r3.skipped == 3 and r3.n_executed == 0  # same seed resumes
+    assert len(load_records(out)) == 6
+
+
+def test_midfile_corruption_warns_not_silently_drops(tmp_path, capsys):
+    camp = _fake_campaign(3)
+    out = tmp_path / "c.jsonl"
+    run_campaign(camp, out, executor=_ok_executor([]))
+    lines = out.read_text().splitlines()
+    lines[1] = lines[1][:20]  # corrupt a mid-file line
+    out.write_text("\n".join(lines) + "\n")
+    recs = load_records(out)
+    assert len(recs) == 2
+    assert "malformed JSONL" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------- summarize
+
+
+def test_summarize_groups_and_failures(tmp_path):
+    camp = _fake_campaign(5)
+    out = tmp_path / "s.jsonl"
+
+    def flaky(case, ctx, seed):
+        if case.id.endswith("04"):
+            raise ValueError("boom")
+        return {TARGET_NAME: 10.0, "bench_type": case.bench_type, "backend": case.backend}
+
+    run_campaign(camp, out, executor=flaky)
+    report = summarize(load_records(out))
+    assert report["n_ok"] == 4 and report["n_failed"] == 1
+    (g,) = report["groups"].values()
+    assert g["target_throughput_mb_s"]["count"] == 4
+    assert g["target_throughput_mb_s"]["mean"] == pytest.approx(10.0)
+    assert g["failures"] == 1
+    # a successful resume re-run supersedes the stale error record
+    run_campaign(camp, out, executor=_ok_executor([]))
+    report = summarize(load_records(out))
+    assert report["n_ok"] == 5 and report["n_failed"] == 0
+    (g,) = report["groups"].values()
+    assert g["failures"] == 0
+
+
+# ---------------------------------------------------------------- end-to-end
+
+
+def test_real_run_concurrent_fast_jsonl(tmp_path):
+    """A real (tiny) campaign through the JSONL store, then resume no-ops."""
+    out = tmp_path / "cc.jsonl"
+    r1 = run_campaign("paper_concurrent", out, fast=True)
+    assert r1.n_executed == 2 and not r1.failures
+    rows = [r["row"] for r in load_records(out)]
+    for row in rows:
+        assert row[TARGET_NAME] > 0
+        assert set(FEATURE_NAMES) <= set(row)
+    r2 = run_campaign("paper_concurrent", out, fast=True)
+    assert r2.n_executed == 0 and r2.skipped == 2
+
+
+def test_collect_observations_schema_unchanged(obs_fast):
+    """The seed row schema survives the campaign refactor (acceptance)."""
+    rows, cols = obs_fast
+    assert len(rows) == 26  # seed fast-mode count: 8 ra + 16 pl + 2 cc
+    base = set(FEATURE_NAMES) | {TARGET_NAME, "bench_type", "backend"}
+    for row in rows:
+        extra = set(row) - base - {"format", "utilization"}
+        assert not extra, extra  # no provenance leakage into observation rows
+        assert base <= set(row)
+    assert set(cols) == set(FEATURE_NAMES) | {TARGET_NAME}
+    assert {r["bench_type"] for r in rows} == {"io_random", "pipeline", "concurrent"}
+
+
+def test_cli_list_and_summarize(tmp_path, capsys):
+    assert campaign_main(["list"]) == 0
+    assert "paper_core" in capsys.readouterr().out
+    out = tmp_path / "cc.jsonl"
+    run_campaign("paper_concurrent", out, fast=True)
+    assert campaign_main(["summarize", "--out", str(out)]) == 0
+    assert "concurrent/tmpfs" in capsys.readouterr().out
+    assert campaign_main(["summarize", "--out", str(out), "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["n_ok"] == 2
+
+
+def test_campaign_registry_is_extensible():
+    from repro.data.registry import register_campaign
+
+    name = "test_tmp_campaign"
+    try:
+        @register_campaign(name, "scratch")
+        def _tmp(fast=False):
+            return [BenchCase(id="t0", bench_type="concurrent")]
+
+        assert len(get_campaign(name).cases()) == 1
+        with pytest.raises(ValueError, match="already registered"):
+            register_campaign(name, "dup")(_tmp)
+    finally:
+        CAMPAIGNS.pop(name, None)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.ops import flash_attention_op, gbt_predict_op, rmsnorm_op
 from repro.kernels.ref import (
