@@ -18,10 +18,12 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single benchmark group")
     args = ap.parse_args()
 
+    from . import fit_bench
     from . import paper_experiments as pe
     from . import roofline
 
     groups = {
+        "fit": fit_bench.bench_fit,
         "dataset": pe.bench_dataset,
         "campaign": pe.bench_campaign,
         "pca": pe.bench_pca,

@@ -6,21 +6,26 @@ Two layers:
    of pipeline knobs, featurize each candidate, predict log-throughput with a
    fitted ``IOPerformancePredictor``, return ranked configs.  The prediction
    over the whole grid is ONE batched JAX ensemble inference (milliseconds for
-   10^5 candidates).
+   10^5 candidates), and the grid's feature matrix is built once per
+   ``ConfigSpace`` and reused across calls — per ``decide()`` only the scalar
+   context columns are rewritten in place (zero per-candidate Python work).
 
 2. ``OnlineAutotuner`` — the framework integration: lives inside the trainer,
    ingests live pipeline telemetry as new observations, periodically refits,
    and proposes a reconfiguration whenever the predicted gain over the current
    config exceeds a threshold. This is the paper's "days -> minutes" loop run
    continuously at step granularity, and doubles as straggler mitigation (a
-   slow host re-tunes its own pipeline from its own telemetry).
+   slow host re-tunes its own pipeline from its own telemetry).  Observations
+   land in an incremental column store (amortized-doubling buffer), so a refit
+   hands the model a zero-copy view of history instead of re-materializing
+   every row.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,10 +34,18 @@ from .predictor import IOPerformancePredictor
 
 __all__ = ["ConfigSpace", "recommend", "OnlineAutotuner", "DEFAULT_SPACE"]
 
+KNOB_NAMES = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth")
+
 
 @dataclasses.dataclass(frozen=True)
 class ConfigSpace:
-    """Discrete grid over the tunable pipeline knobs (paper §3.1 parameters)."""
+    """Discrete grid over the tunable pipeline knobs (paper §3.1 parameters).
+
+    The expanded grid (per-knob columns, candidate dicts, and per-spec feature
+    matrices) is cached on the instance: ``OnlineAutotuner.decide`` calls
+    ``recommend`` every step, and rebuilding 1,800+ row grids from dicts each
+    time used to dominate the serving path.
+    """
 
     batch_size: Sequence[int] = (16, 32, 64, 128, 256)
     num_workers: Sequence[int] = (0, 1, 2, 4, 8)
@@ -40,30 +53,73 @@ class ConfigSpace:
     n_threads: Sequence[int] = (1, 2, 4, 8)
     prefetch_depth: Sequence[int] = (1, 2, 4)  # beyond-paper knob
 
+    def __post_init__(self):
+        for k in KNOB_NAMES:  # normalize to tuples (hashable, immutable)
+            object.__setattr__(self, k, tuple(getattr(self, k)))
+        object.__setattr__(self, "_cache", {})
+
+    # -- grid expansion (cached) ---------------------------------------
+    @property
+    def n_candidates(self) -> int:
+        n = 1
+        for k in KNOB_NAMES:
+            n *= len(getattr(self, k))
+        return n
+
+    def _grid_shape(self) -> Tuple[int, ...]:
+        return tuple(len(getattr(self, k)) for k in KNOB_NAMES)
+
+    def knob_columns(self) -> Dict[str, np.ndarray]:
+        """Per-knob value columns of the expanded grid, in ``candidates()``
+        order (itertools.product over KNOB_NAMES), each [n_candidates]."""
+        cols = self._cache.get("knob_columns")
+        if cols is None:
+            grids = np.meshgrid(
+                *[np.asarray(getattr(self, k), np.float64) for k in KNOB_NAMES],
+                indexing="ij",
+            )
+            cols = {k: g.reshape(-1) for k, g in zip(KNOB_NAMES, grids)}
+            self._cache["knob_columns"] = cols
+        return cols
+
     def candidates(self) -> List[dict]:
-        keys = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth")
-        grids = [getattr(self, k) for k in keys]
-        return [dict(zip(keys, vals)) for vals in itertools.product(*grids)]
+        """Candidate knob dicts (cached; prefer ``candidate(i)`` / the column
+        API for large grids — this materializes n_candidates dicts)."""
+        cands = self._cache.get("candidates")
+        if cands is None:
+            grids = [getattr(self, k) for k in KNOB_NAMES]
+            cands = [dict(zip(KNOB_NAMES, vals)) for vals in itertools.product(*grids)]
+            self._cache["candidates"] = cands
+        return cands
+
+    def candidate(self, i: int) -> dict:
+        """The i-th candidate dict (original Python value types), without
+        materializing the whole list."""
+        idx = np.unravel_index(int(i), self._grid_shape())
+        return {k: getattr(self, k)[j] for k, j in zip(KNOB_NAMES, idx)}
+
+    # -- zero-copy feature matrix --------------------------------------
+    def feature_matrix(self, spec: FeatureSpec, context: dict) -> np.ndarray:
+        """[n_candidates, n_features] matrix for ``spec``: knob columns from
+        the cached grid, remaining features from scalar ``context`` values
+        (missing -> 0.0, mirroring ``FeatureSpec.row``).
+
+        The knob columns are written once and cached per spec; only the
+        context columns are overwritten on subsequent calls.  The returned
+        array is the cached buffer — treat it as read-only.
+        """
+        key = ("matrix", spec.names)
+        X = self._cache.get(key)
+        if X is None:
+            X = spec.matrix_from_candidates(self.knob_columns(), self.n_candidates)
+            self._cache[key] = X
+        for k, name in enumerate(spec.names):
+            if name not in KNOB_NAMES:
+                X[:, k] = float(context.get(name, 0.0))
+        return X
 
 
 DEFAULT_SPACE = ConfigSpace()
-
-
-def _featurize(
-    candidates: List[dict], context: dict, spec: FeatureSpec
-) -> np.ndarray:
-    """Candidate knobs + measured context features -> [n, 11] matrix.
-
-    ``context`` carries the measured features a knob doesn't set (current
-    throughput_mb_s, iops, file_size_mb, ...), mirroring how the paper's
-    feature vector mixes configuration with observed telemetry.
-    """
-    rows = []
-    for c in candidates:
-        merged = dict(context)
-        merged.update(c)
-        rows.append(spec.row(merged))
-    return np.stack(rows, axis=0)
 
 
 def recommend(
@@ -72,13 +128,23 @@ def recommend(
     space: ConfigSpace = DEFAULT_SPACE,
     top_k: int = 5,
 ) -> List[dict]:
-    """Ranked top-k configurations by predicted throughput."""
-    cands = space.candidates()
-    X = _featurize(cands, context, predictor.spec)
-    pred = predictor.predict_throughput_batch(X)
-    order = np.argsort(pred)[::-1][:top_k]
+    """Ranked top-k configurations by predicted throughput.
+
+    One cached-matrix featurization + one batched ensemble inference +
+    an O(n) argpartition; only the k winning candidate dicts are built.
+    """
+    X = space.feature_matrix(predictor.spec, context)
+    pred = np.asarray(predictor.predict_throughput_batch(X))
+    n = pred.shape[0]
+    k = min(top_k, n)
+    if k < n:
+        part = np.argpartition(-pred, k - 1)[:k]
+        order = part[np.argsort(pred[part])[::-1]]
+    else:
+        order = np.argsort(pred)[::-1]
     return [
-        {**cands[i], "predicted_throughput_mb_s": float(pred[i])} for i in order
+        {**space.candidate(i), "predicted_throughput_mb_s": float(pred[i])}
+        for i in order
     ]
 
 
@@ -88,6 +154,44 @@ class AutotuneDecision:
     config: Optional[dict]
     predicted_gain: float
     current_throughput: float
+
+
+class _ColumnStore:
+    """Append-only observation matrix with amortized-doubling growth.
+
+    Rows are feature dicts; columns are ``keys``.  ``matrix()``/``column()``
+    return zero-copy views of the live buffer, so a refit never re-stacks
+    history."""
+
+    def __init__(self, keys: Sequence[str]):
+        self.keys = tuple(keys)
+        self._pos = {k: i for i, k in enumerate(self.keys)}
+        self._buf = np.zeros((0, len(self.keys)), np.float64)
+        self.n = 0
+
+    def append(self, row: dict) -> None:
+        if self.n == self._buf.shape[0]:
+            grown = np.zeros((max(64, 2 * self._buf.shape[0]), len(self.keys)))
+            grown[: self.n] = self._buf[: self.n]
+            self._buf = grown
+        out = self._buf[self.n]
+        for k, v in row.items():
+            i = self._pos.get(k)
+            if i is not None:
+                out[i] = float(v)
+        self.n += 1
+
+    def matrix(self, names: Sequence[str]) -> np.ndarray:
+        """View of the first len(names) columns (requires ``names`` to be a
+        prefix of ``keys``, which holds for spec.names + [target])."""
+        assert tuple(names) == self.keys[: len(names)], "column order mismatch"
+        return self._buf[: self.n, : len(names)]
+
+    def column(self, key: str) -> np.ndarray:
+        return self._buf[: self.n, self._pos[key]]
+
+    def columns(self) -> Dict[str, np.ndarray]:
+        return {k: self.column(k) for k in self.keys}
 
 
 class OnlineAutotuner:
@@ -111,10 +215,14 @@ class OnlineAutotuner:
         self.gain_threshold = gain_threshold
         self.min_config_diversity = min_config_diversity
         self.predictor = IOPerformancePredictor(self.spec, model=model, seed=seed)
-        self._rows: List[dict] = []
+        self._store = _ColumnStore(tuple(self.spec.names) + (self.spec.target,))
         self._since_fit = 0
         self._fitted = False
         self._explored: List[tuple] = []
+        self._seen_keys: set = set()
+        # Exploration order: deterministic permutation over the (cached)
+        # candidate list, computed once instead of per decide() call.
+        self._explore_order: Optional[np.ndarray] = None
 
     # Exogenous workload descriptors kept as features for the ONLINE tuner.
     # Endogenous measurements (throughput_mb_s, samples_per_second,
@@ -132,34 +240,36 @@ class OnlineAutotuner:
         return out
 
     # ------------------------------------------------------------------
+    def _ingest(self, row: dict) -> None:
+        self._store.append(row)
+        self._seen_keys.add(self._config_key(row))
+        self._since_fit += 1
+
     def seed_observations(self, rows: List[dict]):
         """Warm-start from an offline benchmark sweep (the paper's 141-row
         dataset): gives the predictor cross-configuration signal before any
         live telemetry arrives."""
-        self._rows.extend(rows)
-        self._since_fit += len(rows)
+        for r in rows:
+            self._ingest(r)
 
     @property
     def _varied_knobs(self) -> tuple:
-        return tuple(
-            k for k in ("batch_size", "num_workers", "block_kb", "n_threads",
-                        "prefetch_depth")
-            if len(getattr(self.space, k)) > 1
-        )
+        return tuple(k for k in KNOB_NAMES if len(getattr(self.space, k)) > 1)
 
     def _config_key(self, cfg: dict) -> tuple:
         return tuple(cfg.get(k) for k in self._varied_knobs)
 
     def _diversity(self) -> int:
-        return len({self._config_key(r) for r in self._rows})
+        return len(self._seen_keys)
 
     def _next_unexplored(self, current: dict) -> Optional[dict]:
-        seen = {self._config_key(r) for r in self._rows} | set(self._explored)
+        seen = self._seen_keys | set(self._explored)
         seen.add(self._config_key(current))
-        cands = self.space.candidates()
-        # deterministic shuffle: spread exploration across all knobs early
-        order = np.random.default_rng(1234).permutation(len(cands))
-        for i in order:
+        cands = self.space.candidates()  # cached on the space
+        if self._explore_order is None:
+            # deterministic shuffle: spread exploration across all knobs early
+            self._explore_order = np.random.default_rng(1234).permutation(len(cands))
+        for i in self._explore_order:
             if self._config_key(cands[i]) not in seen:
                 self._explored.append(self._config_key(cands[i]))
                 return cands[i]
@@ -167,26 +277,26 @@ class OnlineAutotuner:
 
     @property
     def n_observations(self) -> int:
-        return len(self._rows)
+        return self._store.n
 
     def observe(self, features: dict, target_throughput: float):
         row = self._filter_features(features)
         row[self.spec.target] = float(target_throughput)
-        self._rows.append(row)
-        self._since_fit += 1
+        self._ingest(row)
 
     def _columns(self) -> dict:
-        keys = list(self.spec.names) + [self.spec.target]
-        return {
-            k: np.asarray([r.get(k, 0.0) for r in self._rows], np.float64) for k in keys
-        }
+        return self._store.columns()
 
     def maybe_refit(self) -> bool:
-        if len(self._rows) < self.min_observations:
+        if self._store.n < self.min_observations:
             return False
         if self._fitted and self._since_fit < self.refit_every:
             return False
-        self.predictor.fit(self._columns())
+        # Zero-copy views of the live store: [n, F] feature block + target.
+        self.predictor.fit_matrix(
+            self._store.matrix(self.spec.names),
+            self._store.column(self.spec.target),
+        )
         self._fitted = True
         self._since_fit = 0
         return True

@@ -50,15 +50,33 @@ class PackedEnsemble:
 def pack_trees(
     trees: Sequence[TreeArrays], max_depth: int, base_score: float, scale: float
 ) -> PackedEnsemble:
-    max_nodes = max(t.n_nodes for t in trees)
-    padded = [t.padded(max_nodes) for t in trees]
-    stack = lambda f: jnp.asarray(np.stack([getattr(t, f) for t in padded]))
+    """Stack trees into [B, max_nodes] arrays, padding in place.
+
+    Writes each tree's arrays straight into preallocated [B, N] buffers
+    (padded slots are self-looping zero-value leaves) instead of materializing
+    a padded copy of all seven arrays per tree and re-stacking.
+    """
+    B = len(trees)
+    N = max(t.n_nodes for t in trees)
+    feature = np.full((B, N), -1, np.int32)
+    threshold = np.zeros((B, N), np.float32)
+    value = np.zeros((B, N), np.float32)
+    # Padded nodes self-loop so the fixed-depth descent stays put on them.
+    left = np.broadcast_to(np.arange(N, dtype=np.int32), (B, N)).copy()
+    right = left.copy()
+    for b, t in enumerate(trees):
+        k = t.n_nodes
+        feature[b, :k] = t.feature
+        threshold[b, :k] = t.threshold
+        left[b, :k] = t.left
+        right[b, :k] = t.right
+        value[b, :k] = t.value
     return PackedEnsemble(
-        feature=stack("feature"),
-        threshold=stack("threshold"),
-        left=stack("left"),
-        right=stack("right"),
-        value=stack("value"),
+        feature=jnp.asarray(feature),
+        threshold=jnp.asarray(threshold),
+        left=jnp.asarray(left),
+        right=jnp.asarray(right),
+        value=jnp.asarray(value),
         max_depth=max_depth,
         base_score=base_score,
         scale=scale,

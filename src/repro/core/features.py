@@ -4,7 +4,7 @@ transform, StandardScaler, and PCA — all JAX-backed."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -54,6 +54,31 @@ class FeatureSpec:
         return np.asarray(
             [float(config.get(name, default)) for name in self.names], np.float64
         )
+
+    def matrix_from_candidates(
+        self,
+        columns: Dict[str, np.ndarray],
+        n: int,
+        context: Optional[dict] = None,
+        default: float = 0.0,
+    ) -> np.ndarray:
+        """Vectorized candidate featurization: [n, n_features] from per-knob
+        value columns plus scalar ``context`` fallbacks.
+
+        Replaces the per-candidate dict-merge + ``row()`` loop: each feature
+        column is either a grid column (one [n] copy) or a scalar fill.
+        ``columns`` takes precedence over ``context``, mirroring the old
+        ``{**context, **candidate}`` merge semantics.
+        """
+        context = context or {}
+        X = np.empty((n, self.n_features), np.float64)
+        for k, name in enumerate(self.names):
+            col = columns.get(name)
+            if col is not None:
+                X[:, k] = col
+            else:
+                X[:, k] = float(context.get(name, default))
+        return X
 
 
 def log1p_transform(y: np.ndarray) -> np.ndarray:

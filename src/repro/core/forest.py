@@ -14,7 +14,7 @@ from typing import Optional
 import numpy as np
 
 from .ensemble_base import PackedEnsemble, pack_trees, predict_ensemble
-from .tree import TreeBuilderConfig, bin_features, build_tree, compute_bins
+from .tree import BinnedData, TreeBuilderConfig, bin_features, build_tree, compute_bins
 
 __all__ = ["RFConfig", "RandomForestRegressor", "RandomForestClassifier"]
 
@@ -30,8 +30,9 @@ class RFConfig:
 
 
 class RandomForestRegressor:
-    def __init__(self, config: Optional[RFConfig] = None, **kw):
+    def __init__(self, config: Optional[RFConfig] = None, engine: Optional[str] = None, **kw):
         self.config = config or RFConfig(**kw)
+        self.engine = engine  # tree-builder engine; None = tree.DEFAULT_ENGINE
         self.ensemble: Optional[PackedEnsemble] = None
         self.feature_importances_: Optional[np.ndarray] = None
 
@@ -42,7 +43,7 @@ class RandomForestRegressor:
         n, d = X.shape
         rng = np.random.default_rng(cfg.seed)
         edges = compute_bins(X, cfg.max_bins)
-        Xb = bin_features(X, edges)
+        binned = BinnedData.build(bin_features(X, edges), edges)
         tcfg = TreeBuilderConfig(
             max_depth=cfg.max_depth,
             min_samples_split=cfg.min_samples_split,
@@ -60,7 +61,7 @@ class RandomForestRegressor:
             # weighted residual target: g = -(y - ybar) * w, h = w
             g = -(y - ybar) * w
             h = w
-            tree = build_tree(Xb, edges, g, h, tcfg, rng, cfg.colsample)
+            tree = build_tree(binned, edges, g, h, tcfg, rng, cfg.colsample, engine=self.engine)
             trees.append(tree)
             split = tree.feature >= 0
             np.add.at(imp, tree.feature[split], tree.gain[split])

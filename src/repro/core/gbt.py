@@ -16,7 +16,13 @@ from typing import Optional
 import numpy as np
 
 from .ensemble_base import PackedEnsemble, pack_trees, predict_ensemble
-from .tree import TreeBuilderConfig, bin_features, build_tree, compute_bins, predict_tree_np
+from .tree import (
+    BinnedData,
+    TreeBuilderConfig,
+    bin_features,
+    build_tree_with_leaves,
+    compute_bins,
+)
 
 __all__ = ["GBTConfig", "GBTRegressor", "GBTBinaryClassifier"]
 
@@ -36,8 +42,9 @@ class GBTConfig:
 
 
 class _GBTBase:
-    def __init__(self, config: Optional[GBTConfig] = None, **kw):
+    def __init__(self, config: Optional[GBTConfig] = None, engine: Optional[str] = None, **kw):
         self.config = config or GBTConfig(**kw)
+        self.engine = engine  # tree-builder engine; None = tree.DEFAULT_ENGINE
         self.ensemble: Optional[PackedEnsemble] = None
         self._trees = []
         self.feature_importances_: Optional[np.ndarray] = None
@@ -58,7 +65,7 @@ class _GBTBase:
         self.n_features_ = d
         rng = np.random.default_rng(cfg.seed)
         edges = compute_bins(X, cfg.max_bins)
-        Xb = bin_features(X, edges)
+        binned = BinnedData.build(bin_features(X, edges), edges)
 
         base = self._base_score(y)
         pred = np.full(n, base, dtype=np.float64)
@@ -81,11 +88,16 @@ class _GBTBase:
                 hs = np.where(mask, h, 0.0)
             else:
                 gs, hs = g, h
-            tree = build_tree(Xb, edges, gs, hs, tcfg, rng, cfg.colsample_bytree)
+            tree, leaf = build_tree_with_leaves(
+                binned, edges, gs, hs, tcfg, rng, cfg.colsample_bytree, engine=self.engine
+            )
             self._trees.append(tree)
             split = tree.feature >= 0
             np.add.at(gain_imp, tree.feature[split], tree.gain[split])
-            pred += cfg.learning_rate * predict_tree_np(tree, X, cfg.max_depth)
+            # Scatter the builder's own leaf assignment instead of re-descending
+            # every row (predict_tree_np): O(n) gather, and it trains on the
+            # exact binned partition rather than the float32-rounded thresholds.
+            pred += cfg.learning_rate * tree.value[leaf].astype(np.float64)
 
         tot = gain_imp.sum()
         self.feature_importances_ = gain_imp / tot if tot > 0 else gain_imp

@@ -131,10 +131,21 @@ class IOPerformancePredictor:
 
     # ------------------------------------------------------------------
     def fit(self, observations: dict):
-        X = self.spec.matrix(observations)
-        y = log1p_transform(np.asarray(observations[self.spec.target], np.float64))
+        return self.fit_matrix(
+            self.spec.matrix(observations),
+            np.asarray(observations[self.spec.target], np.float64),
+        )
+
+    def fit_matrix(self, X: np.ndarray, y_raw: np.ndarray):
+        """Fit from a prebuilt [n, n_features] matrix + raw targets (MB/s).
+
+        The zero-copy path used by ``OnlineAutotuner.maybe_refit``: the online
+        column store hands over views of its live buffer, so refits skip the
+        dict-of-columns restacking entirely.
+        """
+        y = log1p_transform(np.asarray(y_raw, np.float64))
         self.model = make_model(self.model_name, self.seed)
-        self.model.fit(X, y)
+        self.model.fit(np.asarray(X, np.float64), y)
         return self
 
     def predict_log(self, X: np.ndarray) -> np.ndarray:

@@ -1,4 +1,4 @@
-"""Histogram-based decision-tree builder shared by GBT (gbt.py) and RF (forest.py).
+"""Histogram-based decision-tree builders shared by GBT (gbt.py) and RF (forest.py).
 
 Design
 ------
@@ -8,6 +8,30 @@ The *fitted* trees are packed into dense, fixed-shape arrays (heap-free child
 pointers) so that inference is a pure JAX tensor program: iterative descent,
 ``max_depth`` gather steps, fully vmappable over rows and trees, and
 Pallas-tileable (see ``repro/kernels/gbt_predict.py``).
+
+Two builder engines produce the same trees (see ``docs/fit-engine.md``):
+
+- ``"level"`` (default): level-wise frontier building.  One vectorized
+  histogram accumulation per depth over *all* frontier nodes at once — a
+  single ``np.bincount`` scatter-add over flattened ``(node, feature, bin)``
+  keys — followed by a vectorized cumsum-gain best-split selection across the
+  whole frontier and a vectorized partition.  No per-node or per-feature
+  Python loops on the O(n·d) paths.
+- ``"reference"``: the original per-node DFS builder, kept as the slow oracle
+  for equivalence tests and benchmarks.
+
+With ``colsample == 1.0`` the two engines are bit-identical: the level-wise
+engine accumulates every histogram bin in the same ascending-row order the
+reference's per-node ``np.bincount`` does, evaluates the gain formula with the
+same elementwise float64 operations, reproduces the reference's
+first-occurrence argmax tie-breaking, and finally relabels its breadth-first
+node ids into the reference's DFS emission order.  (With ``colsample < 1.0``
+the engines consume the column-sampling RNG in different node orders, so
+trees are equivalent in distribution but not replayable across engines.)
+
+Both engines also return the per-row leaf assignment they already know from
+partitioning, so boosting (gbt.py) updates its running predictions by
+scattering leaf values instead of re-descending every row each round.
 
 The split objective is the XGBoost second-order gain
 
@@ -20,23 +44,30 @@ case g = -(y - mean), h = 1, lam = 0 (variance reduction; leaf = mean).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import os
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
     "TreeArrays",
     "TreeBuilderConfig",
+    "BinnedData",
+    "DEFAULT_ENGINE",
     "build_tree",
+    "build_tree_with_leaves",
     "compute_bins",
     "bin_features",
     "predict_tree_np",
 ]
 
+# Flag-gated engine default: REPRO_TREE_ENGINE=reference restores the oracle.
+DEFAULT_ENGINE = os.environ.get("REPRO_TREE_ENGINE", "level")
+
 
 @dataclasses.dataclass
 class TreeArrays:
-    """One fitted tree as dense arrays (size = n_nodes, BFS order).
+    """One fitted tree as dense arrays (n_nodes entries, DFS emission order).
 
     ``feature[i] < 0`` marks a leaf; leaves self-loop (left==right==i) so a
     fixed ``max_depth``-step descent always lands on the correct leaf.
@@ -53,28 +84,6 @@ class TreeArrays:
     @property
     def n_nodes(self) -> int:
         return int(self.feature.shape[0])
-
-    def padded(self, max_nodes: int) -> "TreeArrays":
-        """Pad to ``max_nodes`` so trees stack into a ragged-free ensemble."""
-        n = self.n_nodes
-        if n > max_nodes:
-            raise ValueError(f"tree has {n} nodes > max_nodes={max_nodes}")
-        pad = max_nodes - n
-
-        def _pad(a: np.ndarray, fill) -> np.ndarray:
-            return np.concatenate([a, np.full((pad,), fill, dtype=a.dtype)])
-
-        # Padded nodes are self-looping leaves with value 0.
-        idx = np.arange(n, max_nodes, dtype=np.int32)
-        return TreeArrays(
-            feature=_pad(self.feature, -1),
-            threshold=_pad(self.threshold, 0.0),
-            left=np.concatenate([self.left, idx]),
-            right=np.concatenate([self.right, idx]),
-            value=_pad(self.value, 0.0),
-            gain=_pad(self.gain, 0.0),
-            cover=_pad(self.cover, 0.0),
-        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,18 +120,72 @@ def _leaf_value(G: float, H: float, lam: float) -> float:
     return float(-G / (H + lam))
 
 
-def build_tree(
-    Xb: np.ndarray,
+@dataclasses.dataclass
+class BinnedData:
+    """Pre-binned features plus the level-wise engine's per-fit precomputes.
+
+    Ensembles build 100+ trees from one binning, so everything derivable from
+    ``(Xb, edges)`` alone — the feature-major scatter-key offsets, padded
+    thresholds, and cut-validity mask — is computed once here instead of once
+    per tree.
+    """
+
+    Xb: np.ndarray  # uint16 [n, d] bin indices
+    edges: list  # per-feature bin edges (float64)
+    nb: np.ndarray  # int64 [d]: bins per feature (edges[j].size + 1)
+    nbmax: int  # max bins over features
+    key_off: np.ndarray  # intp [d, n]: j*nbmax + Xb[i, j] (scatter-key offsets)
+    thr_pad: np.ndarray  # float64 [d, nbmax-1]: edges padded to a rectangle
+    cut_valid: np.ndarray  # bool [d, nbmax-1]: which padded cuts are real
+    # Reusable per-level scratch (lazily allocated): stable-size buffers keep
+    # the hot loop free of large fresh allocations across 100+ trees per fit.
+    _keybuf: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+    _offs: Optional[np.ndarray] = dataclasses.field(default=None, repr=False)
+
+    @classmethod
+    def build(cls, Xb: np.ndarray, edges: list) -> "BinnedData":
+        n, d = Xb.shape
+        nb = np.asarray([e.size + 1 for e in edges], np.int64)
+        nbmax = int(nb.max()) if d else 1
+        ncut = max(nbmax - 1, 1)
+        key_off = Xb.T.astype(np.intp)
+        key_off += (np.arange(d, dtype=np.intp) * nbmax)[:, None]
+        thr_pad = np.zeros((d, ncut), np.float64)
+        for j, e in enumerate(edges):
+            thr_pad[j, : e.size] = e
+        cut_valid = np.arange(nbmax - 1)[None, :] < (nb[:, None] - 1)
+        return cls(Xb, edges, nb, nbmax, key_off, thr_pad, cut_valid)
+
+    def scratch(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(keybuf [d, n] intp, offs [n] intp), allocated once per dataset."""
+        if self._keybuf is None:
+            d, n = self.key_off.shape
+            self._keybuf = np.empty((d, n), np.intp)
+            self._offs = np.empty(n, np.intp)
+        return self._keybuf, self._offs
+
+
+# ======================================================================
+# Reference engine: per-node DFS (the oracle)
+# ======================================================================
+
+
+def _build_reference(
+    Xb,
     edges: list[np.ndarray],
     grad: np.ndarray,
     hess: np.ndarray,
     cfg: TreeBuilderConfig,
-    rng: Optional[np.random.Generator] = None,
-    colsample: float = 1.0,
-) -> TreeArrays:
-    """Greedy BFS histogram tree on pre-binned features ``Xb``."""
+    rng: Optional[np.random.Generator],
+    colsample: float,
+) -> Tuple[TreeArrays, np.ndarray]:
+    """Greedy DFS histogram tree on pre-binned features ``Xb``."""
+    if isinstance(Xb, BinnedData):
+        edges = Xb.edges
+        Xb = Xb.Xb
     n, d = Xb.shape
     feature, threshold, left, right, value, gains, covers = [], [], [], [], [], [], []
+    leaf_of_row = np.zeros(n, dtype=np.int32)
 
     # Each queue entry: (node_id, row_indices, depth)
     def new_node() -> int:
@@ -188,6 +251,7 @@ def build_tree(
         if make_leaf:
             left[nid] = nid
             right[nid] = nid
+            leaf_of_row[rows] = nid
             continue
 
         gbest, j, bi = best
@@ -203,7 +267,7 @@ def build_tree(
         stack.append((lid, lrows, depth + 1))
         stack.append((rid, rrows, depth + 1))
 
-    return TreeArrays(
+    tree = TreeArrays(
         feature=np.asarray(feature, np.int32),
         threshold=np.asarray(threshold, np.float32),
         left=np.asarray(left, np.int32),
@@ -212,6 +276,353 @@ def build_tree(
         gain=np.asarray(gains, np.float32),
         cover=np.asarray(covers, np.float32),
     )
+    return tree, leaf_of_row
+
+
+# ======================================================================
+# Level-wise engine: vectorized frontier building
+# ======================================================================
+
+
+def _relabel_to_reference_order(
+    feature: np.ndarray,
+    threshold: np.ndarray,
+    left: np.ndarray,
+    right: np.ndarray,
+    value: np.ndarray,
+    gain: np.ndarray,
+    cover: np.ndarray,
+    leaf_of_row: np.ndarray,
+) -> Tuple[TreeArrays, np.ndarray]:
+    """Permute level-order (BFS) node ids into the reference engine's DFS
+    emission order, so both engines produce byte-identical ``TreeArrays``.
+
+    The reference allocates both children when it *processes* (pops) a split
+    node, and its LIFO stack pops the right child first; replaying that walk
+    over the finished structure yields the exact id permutation.
+    """
+    nn = feature.shape[0]
+    perm = np.empty(nn, np.int64)  # bfs id -> reference id
+    perm[0] = 0
+    stack = [0]
+    nxt = 1
+    while stack:
+        b = stack.pop()
+        if feature[b] >= 0:
+            l, r = int(left[b]), int(right[b])
+            perm[l] = nxt
+            perm[r] = nxt + 1
+            nxt += 2
+            stack.append(l)
+            stack.append(r)
+    inv = np.empty(nn, np.int64)  # reference id -> bfs id
+    inv[perm] = np.arange(nn)
+    tree = TreeArrays(
+        feature=feature[inv].astype(np.int32),
+        threshold=threshold[inv].astype(np.float32),
+        left=perm[left[inv]].astype(np.int32),
+        right=perm[right[inv]].astype(np.int32),
+        value=value[inv].astype(np.float32),
+        gain=gain[inv].astype(np.float32),
+        cover=cover[inv].astype(np.float32),
+    )
+    return tree, perm[leaf_of_row].astype(np.int32)
+
+
+def _build_levelwise(
+    Xb,
+    edges: list[np.ndarray],
+    grad: np.ndarray,
+    hess: np.ndarray,
+    cfg: TreeBuilderConfig,
+    rng: Optional[np.random.Generator],
+    colsample: float,
+) -> Tuple[TreeArrays, np.ndarray]:
+    """Level-wise frontier builder: one scatter-add histogram per depth."""
+    data = Xb if isinstance(Xb, BinnedData) else BinnedData.build(Xb, edges)
+    Xb = data.Xb
+    n, d = Xb.shape
+    lam = cfg.reg_lambda
+    mcw = cfg.min_child_weight
+    nbmax = data.nbmax
+    ncut = nbmax - 1  # padded candidate-cut slots per feature
+
+    sample_cols = colsample < 1.0 and rng is not None
+    k_cols = max(1, int(round(colsample * d))) if sample_cols else d
+    # Rows with grad == hess == 0 (e.g. GBT's subsample mask) contribute exact
+    # +0.0 to every histogram bin, so they can skip the scatter-add (they still
+    # partition, for the leaf assignment).  With 0/1 hessians — GBT regression,
+    # where a zero hessian also implies a zero gradient — the hessian histogram
+    # degenerates to an integer count of the contributing rows.
+    hess_is_01 = bool(np.all(np.where(hess == 0.0, grad == 0.0, hess == 1.0)))
+    hess_all_one = bool(np.all(hess == 1.0))
+    # Per-build feature-tiled weights for the dense scheme (lazy).
+    wg_all: Optional[np.ndarray] = None
+    wh_all: Optional[np.ndarray] = None
+
+    # Per-level output chunks, concatenated once at the end.
+    feat_lv: List[np.ndarray] = []
+    thr_lv: List[np.ndarray] = []
+    left_lv: List[np.ndarray] = []
+    right_lv: List[np.ndarray] = []
+    val_lv: List[np.ndarray] = []
+    gain_lv: List[np.ndarray] = []
+    cov_lv: List[np.ndarray] = []
+
+    leaf_of_row = np.zeros(n, dtype=np.int64)
+    # Frontier state: rows grouped by frontier node (ascending row ids within
+    # each group — the invariant that makes histogram accumulation order match
+    # the reference), plus per-group row counts.
+    srows = np.arange(n)
+    counts = np.asarray([n], dtype=np.int64)
+    level_start = 0  # BFS id of the first frontier node
+    n_alloc = 1
+
+    for depth in range(cfg.max_depth + 1):
+        F = counts.shape[0]
+        node_ids = level_start + np.arange(F)
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        at_root = depth == 0
+        gsort = grad if at_root else grad[srows]
+        hsort = hess if at_root else hess[srows]
+        # Per-node G/H as contiguous-slice sums: numpy's pairwise reduction
+        # over the same ascending-row sequence the reference sums, so the
+        # totals (and hence leaf values) are bit-identical to the oracle.
+        G = np.empty(F, np.float64)
+        H = np.empty(F, np.float64)
+        for i in range(F):
+            G[i] = gsort[starts[i] : starts[i + 1]].sum()
+            H[i] = hsort[starts[i] : starts[i + 1]].sum()
+        with np.errstate(divide="ignore", invalid="ignore"):
+            value = -G / (H + lam)
+            parent_score = G * G / (H + lam)
+
+        leaf_rule = (
+            (depth >= cfg.max_depth)
+            | (counts < cfg.min_samples_split)
+            | (H < 2 * mcw)
+        )
+        split_feature = np.full(F, -1, np.int64)
+        split_bin = np.zeros(F, np.int64)
+        split_gain = np.zeros(F, np.float64)
+        split_thr = np.zeros(F, np.float64)
+
+        cand = np.flatnonzero(~leaf_rule)
+        if cand.size and ncut > 0:
+            C = cand.size
+            is_cand = ~leaf_rule
+            n_active = int(starts[-1])
+            # One scatter-add over flattened (node, feature, bin) keys builds
+            # every frontier histogram at once. For a fixed key, bincount
+            # accumulates contributions in ascending-row order — exactly the
+            # order of the reference's per-node bincount.  Two key layouts:
+            #
+            # - dense (small frontier, most rows still active — the GBT d<=6
+            #   regime): no row gathers at all.  Per-row node offsets are
+            #   scattered into a reusable [n] buffer (settled rows point at a
+            #   dump block past the real histograms), keys are one in-place
+            #   broadcast add over the per-fit offset matrix, and weights are
+            #   the per-build feature-tiled grad/hess.  Zero-weight rows add
+            #   exact +0.0 and leaf-rule nodes' slots are simply never read.
+            # - compact (deep/sparse frontiers — the RF d10 regime): gather
+            #   candidate-node rows, drop exact-zero (grad, hess) pairs, and
+            #   scatter into candidate-compacted keys.
+            dense = F <= 96 and 4 * n_active >= 3 * n
+            if dense:
+                M = F
+                hist_nodes = np.arange(F)
+                if wg_all is None:
+                    wg_all = np.tile(grad, d)
+                    if not hess_all_one:
+                        wh_all = np.tile(hess, d)
+                keybuf, offs = data.scratch()
+                blk = d * nbmax
+                nkeys = (F + 1) * blk  # +1: dump block for settled rows
+                offs.fill(F * blk)
+                offs[srows] = np.repeat(np.arange(F) * blk, counts)
+                np.add(data.key_off, offs[None, :], out=keybuf)
+                flat = keybuf.reshape(-1)
+                Gh = np.bincount(flat, weights=wg_all, minlength=nkeys)[: F * blk]
+                if hess_all_one:
+                    Hh = np.bincount(flat, minlength=nkeys)[: F * blk].astype(
+                        np.float64
+                    )
+                else:
+                    Hh = np.bincount(flat, weights=wh_all, minlength=nkeys)[: F * blk]
+            else:
+                M = C
+                hist_nodes = cand
+                # Gather candidate rows (grouped by node, ascending in group).
+                if C == F:
+                    crows = srows
+                    cgrad = gsort
+                    chess = hsort
+                    cnodes = np.repeat(np.arange(F), counts) if F > 1 else None
+                else:
+                    row_mask = np.repeat(is_cand, counts)
+                    crows = srows[row_mask]
+                    cgrad = gsort[row_mask]
+                    chess = hsort[row_mask]
+                    cnodes = np.repeat(np.cumsum(is_cand) - 1, counts)[row_mask]
+                nz = (cgrad != 0.0) | (chess != 0.0)
+                if np.all(nz):
+                    hrows, hg, hh = crows, cgrad, chess
+                    hnodes = cnodes
+                else:
+                    hrows, hg, hh = crows[nz], cgrad[nz], chess[nz]
+                    hnodes = cnodes[nz] if cnodes is not None else None
+                nkeys = C * d * nbmax
+                keys = data.key_off[:, hrows]
+                if hnodes is not None:
+                    keys += (hnodes * (d * nbmax))[None, :]
+                flat = keys.reshape(-1)
+                Gh = np.bincount(flat, weights=np.tile(hg, d), minlength=nkeys)
+                if hess_is_01:
+                    Hh = np.bincount(flat, minlength=nkeys).astype(np.float64)
+                else:
+                    Hh = np.bincount(flat, weights=np.tile(hh, d), minlength=nkeys)
+            GL = np.cumsum(Gh.reshape(M, d, nbmax), axis=2)[:, :, :ncut]
+            HL = np.cumsum(Hh.reshape(M, d, nbmax), axis=2)[:, :, :ncut]
+            GR = G[hist_nodes, None, None] - GL
+            HR = H[hist_nodes, None, None] - HL
+            ok = (HL >= mcw) & (HR >= mcw) & data.cut_valid[None, :, :]
+            # In-place evaluation of the reference's gain expression
+            #   0.5 * (GL^2/(HL+lam) + GR^2/(HR+lam) - parent_score) - gamma
+            # with identical operation order at every element.
+            with np.errstate(divide="ignore", invalid="ignore"):
+                gain = GL * GL
+                gain /= HL + lam
+                np.multiply(GR, GR, out=GR)
+                HR += lam
+                GR /= HR
+                gain += GR
+                gain -= parent_score[hist_nodes, None, None]
+                gain *= 0.5
+                gain -= cfg.gamma
+            gain[~ok] = -np.inf
+            if sample_cols:
+                # Per-node column subsample over candidate nodes in frontier
+                # order (not the reference's DFS order — see module docstring).
+                col_mask = np.zeros((M, d), bool)
+                for i in (cand if dense else range(C)):
+                    col_mask[i, rng.choice(d, size=k_cols, replace=False)] = True
+                gain[~col_mask] = -np.inf
+            # First-occurrence argmax over row-major (feature, bin) replicates
+            # the reference tie-breaking: earliest feature whose max attains
+            # the global max, earliest bin within it.
+            flatg = gain.reshape(M, d * ncut)
+            bi_flat = np.argmax(flatg, axis=1)
+            best_gain = flatg[np.arange(M), bi_flat]
+            do_split = best_gain > 0.0
+            if dense:
+                do_split &= is_cand
+            j_sel = bi_flat // ncut
+            b_sel = bi_flat % ncut
+            tgt = hist_nodes[do_split]
+            split_feature[tgt] = j_sel[do_split]
+            split_bin[tgt] = b_sel[do_split]
+            split_gain[tgt] = best_gain[do_split]
+            split_thr[tgt] = data.thr_pad[j_sel[do_split], b_sel[do_split]]
+
+        is_split = split_feature >= 0
+        sn = np.flatnonzero(is_split)
+        S = sn.size
+        # Children are allocated all-left-then-all-right so next level's
+        # grouped row array is two boolean gathers, no sort. The final
+        # relabeling pass erases this internal numbering anyway.
+        lid = np.full(F, -1, np.int64)
+        rid = np.full(F, -1, np.int64)
+        lid[sn] = n_alloc + np.arange(S)
+        rid[sn] = n_alloc + S + np.arange(S)
+
+        feat_lv.append(split_feature)
+        thr_lv.append(split_thr)
+        left_lv.append(np.where(is_split, lid, node_ids))
+        right_lv.append(np.where(is_split, rid, node_ids))
+        val_lv.append(value)
+        gain_lv.append(np.where(is_split, split_gain, 0.0))
+        cov_lv.append(H)
+
+        # Vectorized partition: rows of leaf nodes settle; rows of split nodes
+        # route left/right on their node's (feature, bin) cut.
+        if S == 0:
+            leaf_of_row[srows] = np.repeat(node_ids, counts)
+            break
+        if S == F:
+            arows = srows
+            scounts = counts
+        else:
+            row_split = np.repeat(is_split, counts)
+            leaf_of_row[srows[~row_split]] = np.repeat(
+                node_ids[~is_split], counts[~is_split]
+            )
+            arows = srows[row_split]
+            scounts = counts[sn]
+        rj = np.repeat(split_feature[sn], scounts)
+        rb = np.repeat(split_bin[sn], scounts)
+        go_left = Xb[arows, rj] <= rb
+        # Per-parent left-row counts: reduceat over the grouped go_left flags
+        # (split parents always hold >= 1 row, so no empty segments).
+        seg = np.concatenate([[0], np.cumsum(scounts)[:-1]])
+        lcounts = np.add.reduceat(go_left.astype(np.int64), seg)
+        srows = np.concatenate([arows[go_left], arows[~go_left]])
+        counts = np.concatenate([lcounts, scounts - lcounts])
+        level_start = n_alloc
+        n_alloc += 2 * S
+
+    return _relabel_to_reference_order(
+        np.concatenate(feat_lv),
+        np.concatenate(thr_lv),
+        np.concatenate(left_lv),
+        np.concatenate(right_lv),
+        np.concatenate(val_lv),
+        np.concatenate(gain_lv),
+        np.concatenate(cov_lv),
+        leaf_of_row,
+    )
+
+
+_ENGINES = {"level": _build_levelwise, "reference": _build_reference}
+
+
+def build_tree_with_leaves(
+    Xb,
+    edges: Optional[list] = None,
+    grad: Optional[np.ndarray] = None,
+    hess: Optional[np.ndarray] = None,
+    cfg: Optional[TreeBuilderConfig] = None,
+    rng: Optional[np.random.Generator] = None,
+    colsample: float = 1.0,
+    engine: Optional[str] = None,
+) -> Tuple[TreeArrays, np.ndarray]:
+    """Build one tree and return ``(tree, leaf_of_row)``.
+
+    ``Xb`` is either a uint16 bin matrix (with ``edges``) or a prebuilt
+    :class:`BinnedData`.  ``leaf_of_row[i]`` is the node id row i settles in —
+    the builder already knows it from partitioning, so boosting can scatter
+    leaf values instead of re-descending every row (``predict_tree_np``) each
+    round.
+    """
+    name = engine or DEFAULT_ENGINE
+    try:
+        fn = _ENGINES[name]
+    except KeyError:
+        raise ValueError(f"unknown tree engine {name!r}; want one of {sorted(_ENGINES)}")
+    return fn(Xb, edges, grad, hess, cfg, rng, colsample)
+
+
+def build_tree(
+    Xb,
+    edges: Optional[list] = None,
+    grad: Optional[np.ndarray] = None,
+    hess: Optional[np.ndarray] = None,
+    cfg: Optional[TreeBuilderConfig] = None,
+    rng: Optional[np.random.Generator] = None,
+    colsample: float = 1.0,
+    engine: Optional[str] = None,
+) -> TreeArrays:
+    """Greedy histogram tree on pre-binned features ``Xb``."""
+    return build_tree_with_leaves(Xb, edges, grad, hess, cfg, rng, colsample, engine)[0]
 
 
 def predict_tree_np(tree: TreeArrays, X: np.ndarray, max_depth: int) -> np.ndarray:

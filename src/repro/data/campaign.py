@@ -56,6 +56,8 @@ __all__ = [
     "completed_keys",
     "rows_from_records",
     "shard_cases",
+    "merge_records",
+    "merge_files",
     "summarize",
     "format_summary",
     "simulated_compute",
@@ -428,6 +430,40 @@ class _MaxCasesReached(Exception):
     pass
 
 
+# ---------------------------------------------------------------- merge
+
+def merge_records(records: Iterable[dict]) -> List[dict]:
+    """Deduplicate records by (case_id, rep, seed), keeping the *latest*.
+
+    "Latest" is last-in-input order, so pass files in collection order; within
+    one file, appended resume re-runs naturally supersede earlier failures.
+    Output preserves first-seen key order (stable across re-merges).
+    """
+    latest: Dict[tuple, dict] = {}
+    for r in records:
+        latest[(r.get("case_id"), r.get("rep", 0), r.get("seed", 0))] = r
+    return list(latest.values())
+
+
+def merge_files(
+    inputs: Sequence[pathlib.Path], out_path: pathlib.Path
+) -> Tuple[int, List[dict]]:
+    """Merge + dedup sharded JSONL result files (multi-host ``--shard h/H``
+    runs) into one file.  Returns (n_read, merged_records)."""
+    records: List[dict] = []
+    for p in inputs:
+        records.extend(load_records(p))
+    merged = merge_records(records)
+    out_path = pathlib.Path(out_path)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = out_path.with_suffix(out_path.suffix + ".tmp")
+    with open(tmp, "w") as f:
+        for r in merged:
+            f.write(json.dumps(r) + "\n")
+    tmp.replace(out_path)  # atomic: a crashed merge never truncates results
+    return len(records), merged
+
+
 # ---------------------------------------------------------------- summarize
 
 def _dist(values: List[float]) -> dict:
@@ -554,12 +590,33 @@ def main(argv: Optional[List[str]] = None) -> int:
                        help="one or more campaign JSONL files (e.g. per-shard)")
     p_sum.add_argument("--json", action="store_true", help="print JSON, not a table")
 
+    p_merge = sub.add_parser(
+        "merge",
+        help="merge + dedup sharded JSONL results (latest per (case_id, rep, seed))",
+    )
+    p_merge.add_argument("inputs", type=pathlib.Path, nargs="+",
+                         help="shard JSONL files, in collection order")
+    p_merge.add_argument("--out", type=pathlib.Path, required=True,
+                         help="merged JSONL destination (written atomically)")
+
     args = ap.parse_args(argv)
 
     if args.cmd == "list":
         for c in list_campaigns():
             n = len(c.cases(args.fast))
             print(f"{c.name:24s} {n:>5d} cases  {c.description}")
+        return 0
+
+    if args.cmd == "merge":
+        missing = [p for p in args.inputs if not pathlib.Path(p).exists()]
+        if missing:
+            print(f"error: no such result file: {', '.join(map(str, missing))}",
+                  file=sys.stderr)
+            return 2
+        n_read, merged = merge_files(args.inputs, args.out)
+        print(f"merged {len(args.inputs)} files: {n_read} records -> "
+              f"{len(merged)} unique -> {args.out}")
+        print(format_summary(summarize(merged)))
         return 0
 
     if args.cmd == "summarize":

@@ -319,3 +319,80 @@ def test_campaign_registry_is_extensible():
             register_campaign(name, "dup")(_tmp)
     finally:
         CAMPAIGNS.pop(name, None)
+
+
+# ---------------------------------------------------------------- merge
+
+
+def _rec(case_id, rep, seed, status="ok", mark=None):
+    return {
+        "case_id": case_id, "rep": rep, "seed": seed, "status": status,
+        "row": {TARGET_NAME: 1.0} if status == "ok" else None,
+        "case": {"bench_type": "concurrent", "backend": "tmpfs"},
+        "mark": mark,
+    }
+
+
+def test_merge_records_keeps_latest_per_key():
+    from repro.data.campaign import merge_records
+
+    recs = [
+        _rec("a", 0, 0, status="error", mark=1),
+        _rec("b", 0, 0, mark=2),
+        _rec("a", 0, 0, mark=3),       # supersedes the error record
+        _rec("a", 0, 7, mark=4),       # different seed: kept separately
+        _rec("a", 1, 0, mark=5),       # different rep: kept separately
+        _rec("b", 0, 0, mark=6),       # supersedes mark=2
+    ]
+    merged = merge_records(recs)
+    by_key = {(r["case_id"], r["rep"], r["seed"]): r["mark"] for r in merged}
+    assert len(merged) == 4
+    assert by_key[("a", 0, 0)] == 3
+    assert by_key[("b", 0, 0)] == 6
+    assert by_key[("a", 0, 7)] == 4
+    assert by_key[("a", 1, 0)] == 5
+    # stable first-seen key order
+    assert [r["mark"] for r in merged] == [3, 6, 4, 5]
+
+
+def test_merge_files_dedups_across_shards(tmp_path):
+    """Two shard files + an overlapping re-run merge to one record per key."""
+    from repro.data.campaign import merge_files
+
+    log = []
+    for shard in (0, 1):
+        run_campaign(_fake_campaign(6), tmp_path / f"s{shard}.jsonl",
+                     shard=(shard, 2), executor=_ok_executor(log))
+    # simulate a re-collection of shard 0 with a new seed appended to s0
+    run_campaign(_fake_campaign(6), tmp_path / "s0.jsonl", shard=(0, 2),
+                 seed=9, executor=_ok_executor(log))
+    n_read, merged_ret = merge_files(
+        [tmp_path / "s0.jsonl", tmp_path / "s1.jsonl"], tmp_path / "merged.jsonl")
+    merged = load_records(tmp_path / "merged.jsonl")
+    assert n_read == 9 and len(merged_ret) == 9  # 6 cases + 3 seed-9 re-runs
+    assert merged == merged_ret  # what was returned is what was written
+    keys = {(r["case_id"], r["rep"], r["seed"]) for r in merged}
+    assert len(keys) == len(merged) == 9
+    # merging the merged file with a shard again is idempotent
+    n_read2, merged2 = merge_files(
+        [tmp_path / "merged.jsonl", tmp_path / "s1.jsonl"], tmp_path / "m2.jsonl")
+    assert len(merged2) == 9
+    rep = summarize(load_records(tmp_path / "m2.jsonl"))
+    assert rep["n_ok"] == 9 and rep["n_failed"] == 0
+
+
+def test_cli_merge(tmp_path, capsys):
+    log = []
+    for shard in (0, 1):
+        run_campaign(_fake_campaign(4), tmp_path / f"s{shard}.jsonl",
+                     shard=(shard, 2), executor=_ok_executor(log))
+    rc = campaign_main(
+        ["merge", str(tmp_path / "s0.jsonl"), str(tmp_path / "s1.jsonl"),
+         "--out", str(tmp_path / "all.jsonl")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "4 records -> 4 unique" in out
+    assert len(load_records(tmp_path / "all.jsonl")) == 4
+    rc = campaign_main(["merge", str(tmp_path / "nope.jsonl"),
+                        "--out", str(tmp_path / "x.jsonl")])
+    assert rc == 2

@@ -113,3 +113,49 @@ def test_format_classifier_rq3():
         m.fit(X, y)
         acc = accuracy(y, m.predict(X))
         assert acc > (0.85 if name != "logistic" else 0.7), (name, acc)
+
+
+def test_config_space_cached_grid_consistent():
+    """The cached zero-copy feature matrix must agree row-for-row with the
+    old per-candidate dict-merge featurization, and candidate(i) with
+    candidates()[i]."""
+    from repro.core.features import FeatureSpec
+
+    spec = FeatureSpec()
+    space = ConfigSpace(batch_size=(16, 64), num_workers=(0, 2), block_kb=(4, 64),
+                        n_threads=(1, 2), prefetch_depth=(1, 2))
+    ctx = {"throughput_mb_s": 800.0, "file_size_mb": 16.0}
+    X = space.feature_matrix(spec, ctx)
+    cands = space.candidates()
+    assert X.shape == (space.n_candidates, spec.n_features)
+    expected = np.stack([spec.row({**ctx, **c}) for c in cands])
+    np.testing.assert_array_equal(X, expected)
+    for i in (0, 7, len(cands) - 1):
+        assert space.candidate(i) == cands[i]
+    # a second call with new context rewrites only context columns
+    X2 = space.feature_matrix(spec, {"throughput_mb_s": 5.0})
+    expected2 = np.stack([spec.row({"throughput_mb_s": 5.0, **c}) for c in cands])
+    np.testing.assert_array_equal(X2, expected2)
+
+
+def test_online_autotuner_column_store_matches_rows():
+    """The incremental store's zero-copy matrix equals the stack-from-dicts
+    path the refit used to take."""
+    tuner = OnlineAutotuner(min_observations=4, refit_every=1,
+                            space=ConfigSpace(batch_size=(32,), num_workers=(0, 2),
+                                              block_kb=(64,), n_threads=(1,),
+                                              prefetch_depth=(1,)))
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        w = int(rng.choice([0, 2]))
+        tuner.observe({"batch_size": 32, "num_workers": w, "block_kb": 64,
+                       "file_size_mb": 8.0}, 100.0 * (1 + w))
+    cols = tuner._columns()
+    spec = tuner.spec
+    X_store = tuner._store.matrix(spec.names)
+    X_dict = spec.matrix(cols)
+    np.testing.assert_array_equal(X_store, X_dict)
+    assert tuner._store.column(spec.target).shape == (12,)
+    assert (tuner._store.column(spec.target) > 0).all()
+    assert tuner.maybe_refit()
+    assert tuner.n_observations == 12

@@ -112,7 +112,10 @@ with mesh:
     compiled = jax.jit(b.fn, in_shardings=named(b.in_shardings),
                        out_shardings=named(b.out_shardings),
                        donate_argnums=b.donate_argnums).lower(*b.abstract_inputs).compile()
-print(json.dumps({{"ok": True, "flops": compiled.cost_analysis().get("flops", 0)}}))
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):  # older jax returns one dict per program
+    ca = ca[0] if ca else {{}}
+print(json.dumps({{"ok": True, "flops": (ca or {{}}).get("flops", 0)}}))
 """
 
 

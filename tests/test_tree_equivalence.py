@@ -1,0 +1,205 @@
+"""Golden equivalence: the level-wise tree engine must reproduce the reference
+DFS builder *exactly* — same arrays, same node numbering, same leaf routing —
+on the paper model configs and across a property sweep of builder settings.
+(The oracle stays available via engine="reference" / REPRO_TREE_ENGINE.)"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import GBTBinaryClassifier, GBTConfig, GBTRegressor, RandomForestRegressor, RFConfig
+from repro.core.tree import (
+    BinnedData,
+    TreeBuilderConfig,
+    bin_features,
+    build_tree,
+    build_tree_with_leaves,
+    compute_bins,
+)
+
+TREE_FIELDS = ("feature", "threshold", "left", "right", "value", "gain", "cover")
+ENSEMBLE_FIELDS = ("feature", "threshold", "left", "right", "value")
+
+
+def _assert_trees_identical(ta, tb):
+    for f in TREE_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(ta, f), getattr(tb, f), err_msg=f"tree field {f!r} differs"
+        )
+
+
+def _assert_ensembles_identical(ea, eb):
+    for f in ENSEMBLE_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ea, f)), np.asarray(getattr(eb, f)),
+            err_msg=f"ensemble field {f!r} differs",
+        )
+    assert ea.base_score == eb.base_score and ea.scale == eb.scale
+
+
+def _data(n=260, d=11, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-2, 2, (n, d))
+    y = np.sin(2 * X[:, 0]) + X[:, 1] ** 2 + 0.5 * X[:, 2] * X[:, 3]
+    y = y + 0.05 * rng.normal(size=n)
+    return X, y
+
+
+# ---------------------------------------------------------------- paper configs
+
+
+def test_gbt_paper_config_engines_identical():
+    """Paper §3.3.2 GBT (depth 6, lr 0.1, subsample 0.8): byte-identical fit."""
+    X, y = _data()
+    cfg = GBTConfig(n_estimators=12, seed=3)  # paper hyperparams, fewer rounds
+    m_level = GBTRegressor(cfg, engine="level").fit(X, y)
+    m_ref = GBTRegressor(cfg, engine="reference").fit(X, y)
+    _assert_ensembles_identical(m_level.ensemble, m_ref.ensemble)
+    np.testing.assert_array_equal(
+        m_level.feature_importances_, m_ref.feature_importances_
+    )
+    np.testing.assert_array_equal(m_level.predict(X), m_ref.predict(X))
+
+
+def test_rf_paper_config_engines_identical():
+    """Paper §3.3.2 RF (depth 10, min_samples_split 5): byte-identical fit."""
+    X, y = _data()
+    cfg = RFConfig(n_estimators=8, seed=5)  # paper tree params, fewer trees
+    m_level = RandomForestRegressor(cfg, engine="level").fit(X, y)
+    m_ref = RandomForestRegressor(cfg, engine="reference").fit(X, y)
+    _assert_ensembles_identical(m_level.ensemble, m_ref.ensemble)
+    np.testing.assert_array_equal(m_level.predict(X), m_ref.predict(X))
+
+
+def test_gbt_classifier_engines_identical():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(220, 5))
+    y = (X[:, 0] + X[:, 1] ** 2 > 0.4).astype(np.float64)
+    cfg = GBTConfig(n_estimators=10, max_depth=3, seed=0)
+    m_level = GBTBinaryClassifier(cfg, engine="level").fit(X, y)
+    m_ref = GBTBinaryClassifier(cfg, engine="reference").fit(X, y)
+    _assert_ensembles_identical(m_level.ensemble, m_ref.ensemble)
+    np.testing.assert_array_equal(m_level.predict_proba(X), m_ref.predict_proba(X))
+
+
+def test_default_engine_is_levelwise_and_flag_gated():
+    from repro.core import tree as tree_mod
+
+    assert tree_mod.DEFAULT_ENGINE in tree_mod._ENGINES
+    with pytest.raises(ValueError, match="unknown tree engine"):
+        build_tree(np.zeros((4, 2), np.uint16), [np.array([0.5])] * 2,
+                   np.zeros(4), np.ones(4), TreeBuilderConfig(), engine="nope")
+
+
+# ---------------------------------------------------------------- single trees
+
+
+def _tree_case(n, d, depth, bins, seed, zero_frac=0.0, int_hess=False, round_X=False):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    if round_X:
+        X = np.round(X)  # heavy bin ties -> exercises tie-breaking
+    y = rng.normal(size=n)
+    g = -(y - y.mean())
+    h = np.ones(n)
+    if int_hess:  # RF-style bootstrap weights (including zeros)
+        h = rng.integers(0, 3, n).astype(np.float64)
+        g = g * h
+    elif zero_frac > 0.0:  # GBT subsample-style zeroed rows
+        mask = rng.random(n) < (1.0 - zero_frac)
+        g, h = np.where(mask, g, 0.0), np.where(mask, h, 0.0)
+    edges = compute_bins(X, bins)
+    Xb = bin_features(X, edges)
+    cfg = TreeBuilderConfig(max_depth=depth, max_bins=bins)
+    return Xb, edges, g, h, cfg
+
+
+def _assert_engines_match(Xb, edges, g, h, cfg):
+    t_ref, leaf_ref = build_tree_with_leaves(Xb, edges, g, h, cfg, engine="reference")
+    t_lvl, leaf_lvl = build_tree_with_leaves(Xb, edges, g, h, cfg, engine="level")
+    _assert_trees_identical(t_ref, t_lvl)
+    np.testing.assert_array_equal(leaf_ref, leaf_lvl)
+    # every routed leaf really is a leaf
+    assert (t_lvl.feature[leaf_lvl] == -1).all()
+    return t_lvl
+
+
+def test_leaf_assignment_matches_reference_and_is_terminal():
+    Xb, edges, g, h, cfg = _tree_case(300, 6, 6, 32, seed=1, zero_frac=0.25)
+    _assert_engines_match(Xb, edges, g, h, cfg)
+
+
+def test_binned_data_reuse_matches_plain_arrays():
+    """Passing a prebuilt BinnedData (the ensemble fast path) changes nothing."""
+    Xb, edges, g, h, cfg = _tree_case(200, 5, 5, 24, seed=2)
+    data = BinnedData.build(Xb, edges)
+    t_plain, leaf_plain = build_tree_with_leaves(Xb, edges, g, h, cfg)
+    for _ in range(2):  # scratch buffers are reused across calls
+        t_data, leaf_data = build_tree_with_leaves(data, None, g, h, cfg)
+        _assert_trees_identical(t_plain, t_data)
+        np.testing.assert_array_equal(leaf_plain, leaf_data)
+
+
+def test_constant_feature_and_tiny_n():
+    for n in (1, 2, 5):
+        rng = np.random.default_rng(n)
+        X = np.column_stack([np.ones(n), rng.normal(size=n)])
+        y = rng.normal(size=n)
+        edges = compute_bins(X, 8)
+        Xb = bin_features(X, edges)
+        cfg = TreeBuilderConfig(max_depth=3, max_bins=8)
+        _assert_engines_match(Xb, edges, -(y - y.mean()), np.ones(n), cfg)
+
+
+# ---------------------------------------------------------------- property sweep
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(5, 300),
+    d=st.integers(1, 7),
+    depth=st.integers(1, 10),
+    bins=st.integers(2, 72),
+    seed=st.integers(0, 10_000),
+    flavor=st.sampled_from(["plain", "rounded", "zeros", "int_hess"]),
+)
+def test_engine_equivalence_property(n, d, depth, bins, seed, flavor):
+    """Bit-identical trees across depths/bins/row-weight patterns.
+
+    Covers both histogram layouts of the level engine (dense frontier and
+    candidate-compacted) since depth ranges beyond the dense cutoff."""
+    Xb, edges, g, h, cfg = _tree_case(
+        n, d, depth, bins, seed,
+        zero_frac=0.3 if flavor == "zeros" else 0.0,
+        int_hess=flavor == "int_hess",
+        round_X=flavor == "rounded",
+    )
+    _assert_engines_match(Xb, edges, g, h, cfg)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    min_child_weight=st.sampled_from([1e-3, 0.5, 1.0, 5.0]),
+    reg_lambda=st.sampled_from([0.25, 1.0, 3.0]),
+    gamma=st.sampled_from([0.0, 0.05, 0.5]),
+    min_samples_split=st.integers(2, 12),
+)
+def test_engine_equivalence_regularizers_property(
+    seed, min_child_weight, reg_lambda, gamma, min_samples_split
+):
+    rng = np.random.default_rng(seed)
+    n = 180
+    X = rng.normal(size=(n, 5))
+    y = rng.normal(size=n)
+    edges = compute_bins(X, 32)
+    Xb = bin_features(X, edges)
+    cfg = TreeBuilderConfig(
+        max_depth=6,
+        min_samples_split=min_samples_split,
+        min_child_weight=min_child_weight,
+        reg_lambda=reg_lambda,
+        gamma=gamma,
+        max_bins=32,
+    )
+    _assert_engines_match(Xb, edges, -(y - y.mean()), np.ones(n), cfg)
