@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-fast campaign-smoke dev-deps
+.PHONY: test bench-fast campaign-smoke loop-smoke dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
@@ -11,6 +11,15 @@ bench-fast:  ## per-figure paper benchmarks, CI-sized
 
 campaign-smoke:  ## paper campaigns end-to-end (fast) + non-empty summary check
 	$(PYTHON) -m repro.data.campaign smoke --out /tmp/repro_io/campaign_smoke
+
+loop-smoke:  ## continuous tuning loop: 2 fast cycles, then resume runs a 3rd
+	$(PYTHON) -m repro.service.loop --fast --campaign paper_concurrent \
+	    --cycles 2 --min-observations 4 --refit-every 2 \
+	    --out-dir /tmp/repro_io/loop_smoke --force
+	$(PYTHON) -m repro.service.loop --fast --campaign paper_concurrent \
+	    --cycles 3 --min-observations 4 --refit-every 2 \
+	    --out-dir /tmp/repro_io/loop_smoke
+	$(PYTHON) -m repro.service.loop --status --out-dir /tmp/repro_io/loop_smoke
 
 dev-deps:  ## test-only dependencies (hypothesis, pytest)
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -19,11 +19,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import fit_bench
+    from . import loop_bench
     from . import paper_experiments as pe
     from . import roofline
 
     groups = {
         "fit": fit_bench.bench_fit,
+        "loop": loop_bench.bench_loop,
         "dataset": pe.bench_dataset,
         "campaign": pe.bench_campaign,
         "pca": pe.bench_pca,

@@ -7,7 +7,7 @@ Public API:
     FeatureSpec / StandardScaler / PCA / metrics
 """
 
-from .autotune import ConfigSpace, OnlineAutotuner, recommend  # noqa: F401
+from .autotune import AutotuneDecision, ConfigSpace, OnlineAutotuner, recommend  # noqa: F401
 from .classify import CLASSIFIER_ZOO, LogisticRegression, make_classifier  # noqa: F401
 from .ensemble_base import PackedEnsemble, predict_ensemble  # noqa: F401
 from .features import (  # noqa: F401

@@ -25,14 +25,20 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .features import FeatureSpec
 from .predictor import IOPerformancePredictor
 
-__all__ = ["ConfigSpace", "recommend", "OnlineAutotuner", "DEFAULT_SPACE"]
+__all__ = [
+    "ConfigSpace",
+    "recommend",
+    "OnlineAutotuner",
+    "AutotuneDecision",
+    "DEFAULT_SPACE",
+]
 
 KNOB_NAMES = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth")
 
@@ -207,6 +213,7 @@ class OnlineAutotuner:
         model: str = "xgboost",
         seed: int = 0,
         min_config_diversity: int = 3,  # explore until this many distinct configs seen
+        drift_threshold: float = 0.5,  # force refit if new-data median rel. error exceeds
     ):
         self.spec = spec or FeatureSpec()
         self.space = space
@@ -214,12 +221,16 @@ class OnlineAutotuner:
         self.min_observations = min_observations
         self.gain_threshold = gain_threshold
         self.min_config_diversity = min_config_diversity
+        self.drift_threshold = drift_threshold
         self.predictor = IOPerformancePredictor(self.spec, model=model, seed=seed)
         self._store = _ColumnStore(tuple(self.spec.names) + (self.spec.target,))
         self._since_fit = 0
         self._fitted = False
         self._explored: List[tuple] = []
         self._seen_keys: set = set()
+        self._ingested_keys: set = set()  # (case_id, rep, seed) of campaign records
+        self._drift_refit = False
+        self.last_drift = float("nan")
         # Exploration order: deterministic permutation over the (cached)
         # candidate list, computed once instead of per decide() call.
         self._explore_order: Optional[np.ndarray] = None
@@ -248,9 +259,58 @@ class OnlineAutotuner:
     def seed_observations(self, rows: List[dict]):
         """Warm-start from an offline benchmark sweep (the paper's 141-row
         dataset): gives the predictor cross-configuration signal before any
-        live telemetry arrives."""
+        live telemetry arrives.
+
+        Rows pass through the same endogenous-measurement filter as live
+        ``observe()`` rows: offline rows carry real values in columns (e.g.
+        ``samples_per_second``) that live telemetry zero-fills, and mixing the
+        two would train the model on features it never sees at decision time.
+        The *offline* ``IOPerformancePredictor`` keeps the paper's full
+        11-feature path — the filter applies only to this online store."""
         for r in rows:
-            self._ingest(r)
+            row = self._filter_features(r)
+            row[self.spec.target] = float(r.get(self.spec.target, 0.0))
+            self._ingest(row)
+
+    def ingest_records(self, records: Iterable[dict]) -> int:
+        """Incrementally ingest campaign JSONL records (``campaign.py``
+        schema: provenance + ``row``), skipping records already ingested.
+
+        Records are keyed by ``(case_id, rep, seed)`` — the same identity the
+        campaign runner and ``merge_records`` use — so the continuous loop can
+        hand over the *full* merged record list every cycle and only the new
+        rows land in the store.  Returns the number of rows ingested.
+
+        Drift trigger: if a model is fitted, the prediction error on the new
+        rows is measured *before* they are ingested; a median relative error
+        above ``drift_threshold`` marks the model stale, and the next
+        ``maybe_refit()`` fires regardless of the ``refit_every`` schedule.
+        """
+        fresh: List[dict] = []
+        for rec in records:
+            if rec.get("status") != "ok" or not rec.get("row"):
+                continue
+            key = (rec.get("case_id"), rec.get("rep", 0), rec.get("seed", 0))
+            if key in self._ingested_keys:
+                continue
+            self._ingested_keys.add(key)
+            fresh.append(rec["row"])
+        if fresh:
+            self._update_drift(fresh)
+            self.seed_observations(fresh)
+        return len(fresh)
+
+    def _update_drift(self, rows: List[dict]) -> None:
+        """Median relative prediction error of the current model on rows it
+        has not seen — measured on the filtered (online) feature view."""
+        if not self._fitted:
+            return
+        filtered = [self._filter_features(r) for r in rows]
+        X = np.stack([self.spec.row(f) for f in filtered])
+        y = np.asarray([float(r.get(self.spec.target, 0.0)) for r in rows])
+        self.last_drift = float(np.median(self.predictor.relative_errors(X, y)))
+        if self.last_drift > self.drift_threshold:
+            self._drift_refit = True
 
     @property
     def _varied_knobs(self) -> tuple:
@@ -261,6 +321,14 @@ class OnlineAutotuner:
 
     def _diversity(self) -> int:
         return len(self._seen_keys)
+
+    def mark_explored(self, config: dict) -> None:
+        """Record that an exploration proposal was already issued for
+        ``config`` — the resume path replays past explore decisions through
+        this so a restarted tuner doesn't re-propose the same candidates."""
+        key = self._config_key(config)
+        if key not in self._explored:
+            self._explored.append(key)
 
     def _next_unexplored(self, current: dict) -> Optional[dict]:
         seen = self._seen_keys | set(self._explored)
@@ -287,10 +355,18 @@ class OnlineAutotuner:
     def _columns(self) -> dict:
         return self._store.columns()
 
+    @property
+    def fitted(self) -> bool:
+        return self._fitted
+
     def maybe_refit(self) -> bool:
         if self._store.n < self.min_observations:
             return False
-        if self._fitted and self._since_fit < self.refit_every:
+        if (
+            self._fitted
+            and not self._drift_refit
+            and self._since_fit < self.refit_every
+        ):
             return False
         # Zero-copy views of the live store: [n, F] feature block + target.
         self.predictor.fit_matrix(
@@ -299,14 +375,33 @@ class OnlineAutotuner:
         )
         self._fitted = True
         self._since_fit = 0
+        self._drift_refit = False
         return True
 
-    def decide(self, current_config: dict, context: dict) -> AutotuneDecision:
+    def ranked(self, context: dict, top_k: int = 5) -> List[dict]:
+        """Ranked top-k candidate configs under the live (filtered) context —
+        the continuous loop's re-recommend report.  Empty until fitted."""
+        if not self._fitted:
+            return []
+        return recommend(
+            self.predictor, self._filter_features(context), self.space, top_k=top_k
+        )
+
+    def decide(
+        self,
+        current_config: dict,
+        context: dict,
+        best: Optional[dict] = None,
+    ) -> AutotuneDecision:
         """Given live context telemetry, propose the best predicted config.
 
         Cold start: until ``min_config_diversity`` distinct configs have been
         observed the model has no cross-config signal, so we EXPLORE —
         propose the next unexplored candidate instead of exploiting.
+
+        ``best`` short-circuits the internal top-1 grid inference with an
+        already-ranked winner (callers that just computed ``ranked()`` pass
+        ``ranked(...)[0]`` to avoid scoring the grid twice).
         """
         cur = float(context.get("throughput_mb_s", 0.0))
         if self._diversity() < self.min_config_diversity:
@@ -315,14 +410,18 @@ class OnlineAutotuner:
                 return AutotuneDecision(True, {**cand, "explore": True}, 0.0, cur)
         if not self._fitted:
             return AutotuneDecision(False, None, 0.0, cur)
-        static_ctx = self._filter_features(context)
-        best = recommend(self.predictor, static_ctx, self.space, top_k=1)[0]
+        if best is None:
+            best = self.ranked(context, top_k=1)[0]
         cur_pred = self.predictor.predict_throughput(
             self._filter_features(context, knobs=current_config)
         )
         base = max(cur_pred, 1e-9)
         gain = (best["predicted_throughput_mb_s"] - base) / base
-        same = all(best.get(k) == current_config.get(k) for k in current_config)
+        # Compare over the *varied knobs* only: a knob missing from the
+        # trainer's dict must count as a difference (not be skipped), and
+        # extra non-knob keys (labels, annotations) must not force a
+        # spurious "different config" verdict.
+        same = all(best.get(k) == current_config.get(k) for k in self._varied_knobs)
         if not same and gain >= self.gain_threshold:
             return AutotuneDecision(True, best, float(gain), cur)
         return AutotuneDecision(False, None, float(gain), cur)

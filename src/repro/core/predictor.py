@@ -160,6 +160,16 @@ class IOPerformancePredictor:
     def predict_throughput_batch(self, X: np.ndarray) -> np.ndarray:
         return expm1_inverse(self.predict_log(X))
 
+    def relative_errors(self, X: np.ndarray, y_raw: np.ndarray) -> np.ndarray:
+        """Per-row ``|predicted - actual| / actual`` in raw MB/s space.
+
+        The drift score of the continuous loop: measured on freshly collected
+        rows *before* they are ingested, a high median says the fitted model
+        no longer describes the storage it is tuning."""
+        pred = self.predict_throughput_batch(np.asarray(X, np.float64))
+        y = np.asarray(y_raw, np.float64)
+        return np.abs(pred - y) / np.maximum(np.abs(y), 1e-9)
+
     @property
     def feature_importances_(self):
         return getattr(self.model, "feature_importances_", None)

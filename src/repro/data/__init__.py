@@ -13,11 +13,18 @@ from .campaign import (  # noqa: F401
     RunResult,
     format_summary,
     load_records,
+    merge_files,
+    merge_records,
     run_campaign,
+    run_campaign_batch,
     run_case,
     summarize,
 )
-from .dataset import collect_observations, observations_to_columns  # noqa: F401
+from .dataset import (  # noqa: F401
+    collect_observations,
+    observations_from_jsonl,
+    observations_to_columns,
+)
 from .formats import FORMATS, DatasetReader, open_dataset, write_dataset  # noqa: F401
 from .pipeline import (  # noqa: F401
     DataPipeline,

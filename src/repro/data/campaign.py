@@ -52,6 +52,7 @@ __all__ = [
     "RunResult",
     "run_case",
     "run_campaign",
+    "run_campaign_batch",
     "load_records",
     "completed_keys",
     "rows_from_records",
@@ -346,13 +347,16 @@ def run_campaign(
     ctx: Optional[RunContext] = None,
     executor: Optional[Callable[[BenchCase, RunContext, int], dict]] = None,
     progress: Optional[Callable[[str], None]] = None,
+    on_record: Optional[Callable[[dict], None]] = None,
 ) -> RunResult:
     """Run (or resume) a campaign, appending one JSONL record per case.
 
     ``out_path=None`` keeps results in memory only (no resume across
     processes).  ``shard=(h, H)`` runs the h-th positional slice of the case
     list.  ``max_cases`` stops after that many executions (used by tests to
-    simulate a killed run).  ``executor`` overrides case execution (tests)."""
+    simulate a killed run).  ``executor`` overrides case execution (tests).
+    ``on_record`` is called with each completed record (ok or error) after it
+    is durably written — the continuous loop's streaming-ingest hook."""
     camp = get_campaign(campaign) if isinstance(campaign, str) else campaign
     cases = shard_cases(camp.cases(fast), *shard)
     ctx = ctx or RunContext()
@@ -415,6 +419,8 @@ def run_campaign(
                 if out_f is not None:
                     out_f.write(json.dumps(record) + "\n")
                     out_f.flush()
+                if on_record is not None:
+                    on_record(record)
                 if progress is not None:
                     progress(f"{record['status']:5s} {case.id}#r{rep} "
                              f"({record['elapsed_s']:.2f}s)")
@@ -428,6 +434,48 @@ def run_campaign(
 
 class _MaxCasesReached(Exception):
     pass
+
+
+def run_campaign_batch(
+    campaign: Union[str, Campaign],
+    out_path: Union[str, pathlib.Path],
+    seeds: Sequence[int],
+    fast: bool = False,
+    shard: Tuple[int, int] = (0, 1),
+    max_cases: Optional[int] = None,
+    ctx: Optional[RunContext] = None,
+    executor: Optional[Callable[[BenchCase, RunContext, int], dict]] = None,
+    progress: Optional[Callable[[str], None]] = None,
+    on_record: Optional[Callable[[dict], None]] = None,
+) -> List[RunResult]:
+    """Run a campaign once per seed in ``seeds`` (a *seed window*), appending
+    everything to one JSONL file.
+
+    Resume keys on ``(case_id, rep, seed)``, so a window of fresh seeds grows
+    the dataset by ``len(seeds) * n_cases`` rows while re-running the same
+    window resumes exactly the missing/failed cases — this is how the
+    continuous loop pushes the dataset past the paper's 141 rows toward its
+    500-1000 target, one batch per cycle.  One shared :class:`RunContext`
+    keeps per-seed test files and dataset manifests cached across the window.
+
+    ``max_cases`` bounds total executions across the whole window (kill
+    simulation in tests); the window stops early once it is exhausted.
+    """
+    ctx = ctx or RunContext()
+    results: List[RunResult] = []
+    remaining = max_cases
+    for s in seeds:
+        res = run_campaign(
+            campaign, out_path, fast=fast, seed=s, shard=shard, resume=True,
+            max_cases=remaining, ctx=ctx, executor=executor, progress=progress,
+            on_record=on_record,
+        )
+        results.append(res)
+        if remaining is not None:
+            remaining -= res.n_executed
+            if remaining <= 0:
+                break
+    return results
 
 
 # ---------------------------------------------------------------- merge

@@ -35,6 +35,7 @@ __all__ = [
     "collect_random_access",
     "collect_pipeline",
     "collect_concurrent",
+    "observations_from_jsonl",
     "observations_to_columns",
     "DEFAULT_CACHE",
 ]
@@ -103,6 +104,24 @@ def collect_observations(
         cache.parent.mkdir(parents=True, exist_ok=True)
         cache.write_text(json.dumps(rows))
     return rows
+
+
+def observations_from_jsonl(paths) -> List[dict]:
+    """Deduplicated observation rows from campaign JSONL result files — the
+    offline consumer of a loop/campaign-grown dataset (feed the result to
+    ``observations_to_columns`` and the full-featured
+    ``IOPerformancePredictor``, e.g. on ``merged.jsonl`` from the continuous
+    loop).
+
+    Loads every record from the given shard/merged files (in collection
+    order), dedups by ``(case_id, rep, seed)`` keeping the latest, and
+    returns the successful observation rows in stable first-seen order."""
+    from .campaign import load_records, merge_records, rows_from_records
+
+    records: List[dict] = []
+    for p in paths:
+        records.extend(load_records(pathlib.Path(p)))
+    return rows_from_records(merge_records(records))
 
 
 def observations_to_columns(rows: List[dict]) -> dict:

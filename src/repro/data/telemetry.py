@@ -26,15 +26,21 @@ class StepTelemetry:
 
     @contextlib.contextmanager
     def data_wait(self):
+        # try/finally: a raising step body must still record its sample, or the
+        # window's data/compute deques drift apart and every ratio is skewed
         t0 = time.perf_counter()
-        yield
-        self.data_times.append(time.perf_counter() - t0)
+        try:
+            yield
+        finally:
+            self.data_times.append(time.perf_counter() - t0)
 
     @contextlib.contextmanager
     def compute(self):
         t0 = time.perf_counter()
-        yield
-        self.compute_times.append(time.perf_counter() - t0)
+        try:
+            yield
+        finally:
+            self.compute_times.append(time.perf_counter() - t0)
 
     def record_batch(self, n_samples: int, n_bytes: int):
         self.batch_sizes.append(n_samples)
@@ -60,9 +66,13 @@ class StepTelemetry:
         return sum(self.batch_bytes) / 1e6 / tot if tot > 0 else 0.0
 
     def delivered_mb_s(self) -> float:
-        """Bytes per second of *data-wait* time: the pipeline's own speed."""
+        """Bytes per second of *data-wait* time: the pipeline's own speed.
+
+        With no data-wait recorded yet there is no measurement — return 0.0
+        (a finite "unknown"), never ``inf``: these values land in exported
+        features and JSONL rows, which must stay finite."""
         d = sum(self.data_times)
-        return sum(self.batch_bytes) / 1e6 / d if d > 0 else float("inf")
+        return sum(self.batch_bytes) / 1e6 / d if d > 0 else 0.0
 
     def simulated_utilization(self) -> float:
         """Paper Fig 1: fraction of wall time the accelerator computes."""

@@ -1,0 +1,32 @@
+"""repro.service — the continuous tuning loop: collect -> merge -> refit ->
+re-recommend, run as a resumable service (``python -m repro.service.loop``).
+
+Converts the standalone campaign runner (``repro.data.campaign``), the
+dataset merge CLI, and the ``OnlineAutotuner`` into one end-to-end system
+that keeps growing the observation dataset and keeps the recommendation
+fresh — the paper's "days -> minutes" claim, closed into a loop.
+
+Submodules are imported lazily so ``python -m repro.service.loop`` doesn't
+trigger runpy's double-import warning.
+"""
+
+__all__ = [
+    "ContinuousTuningLoop",
+    "LoopConfig",
+    "DEFAULT_LOOP_DIR",
+    "LoopState",
+    "STATE_SCHEMA_VERSION",
+]
+
+_LOOP = ("ContinuousTuningLoop", "LoopConfig", "DEFAULT_LOOP_DIR", "main")
+_STATE = ("LoopState", "STATE_SCHEMA_VERSION")
+
+
+def __getattr__(name: str):
+    if name in _LOOP:
+        from . import loop
+        return getattr(loop, name)
+    if name in _STATE:
+        from . import state
+        return getattr(state, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,432 @@
+"""Continuous collect -> merge -> refit -> re-recommend service (the paper's
+"days of trial-and-error -> minutes of prediction" claim, closed into a loop).
+
+Each *cycle*:
+
+1. **collect** — run a batch of campaign cases with a fresh seed window
+   (``run_campaign_batch``), appending to this cycle's shard JSONL; the
+   dataset grows past the paper's 141 rows toward its 500-1000 target.
+2. **merge**  — dedup all shard files into ``merged.jsonl``
+   (``merge_files``), the loop's canonical dataset.
+3. **refit**  — ingest only the *new* records into the ``OnlineAutotuner``'s
+   zero-copy column store (``ingest_records``) and refit on schedule or when
+   the drift score (median relative error on the new rows) exceeds the
+   threshold.
+4. **re-recommend** — rank the candidate grid under the live context
+   (``ranked``), take an ``AutotuneDecision`` against the config currently in
+   force, and adopt the proposal when the predicted gain clears the bar.
+
+Every completed cycle appends one provenance record to a resumable JSONL
+state file (``service/state.py``): a killed loop restarts at its last
+completed cycle, and a cycle killed mid-collection resumes case-by-case
+inside its shard file.
+
+CLI::
+
+    python -m repro.service.loop --fast                  # run (resumes)
+    python -m repro.service.loop --fast --cycles 6       # grow further
+    python -m repro.service.loop --status                # audit cycle log
+    python -m repro.service.loop --force --fast          # start over
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import pathlib
+import socket
+import sys
+import time
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.autotune import DEFAULT_SPACE, KNOB_NAMES, ConfigSpace, OnlineAutotuner
+from ..core.features import TARGET_NAME
+from ..data.campaign import (
+    RunContext,
+    RunResult,
+    completed_keys,
+    load_records,
+    merge_files,
+    merge_records,
+    rows_from_records,
+    run_campaign_batch,
+)
+from ..data.registry import Campaign
+from .state import STATE_SCHEMA_VERSION, LoopState
+
+__all__ = ["LoopConfig", "ContinuousTuningLoop", "main", "DEFAULT_LOOP_DIR"]
+
+DEFAULT_LOOP_DIR = pathlib.Path("/tmp/repro_io/loop")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    """Knobs of the continuous tuning loop (CLI flags mirror these)."""
+
+    campaign: Union[str, Campaign] = "paper_core"
+    cycles: int = 3                      # total cycles the state file targets
+    seeds_per_cycle: int = 1             # campaign passes per cycle
+    base_seed: int = 1000
+    seed_stride: int = 100               # cycle c uses seeds [base + c*stride, ...)
+    fast: bool = False                   # CI-sized campaign subsets
+    out_dir: pathlib.Path = DEFAULT_LOOP_DIR
+    model: str = "xgboost"
+    space: ConfigSpace = DEFAULT_SPACE
+    top_k: int = 5
+    refit_every: int = 20                # observations between scheduled refits
+    min_observations: int = 24
+    gain_threshold: float = 0.10
+    drift_threshold: float = 0.5
+    seed: int = 0                        # model seed (decisions deterministic)
+
+    def __post_init__(self):
+        self.out_dir = pathlib.Path(self.out_dir)
+        if self.seeds_per_cycle > self.seed_stride:
+            raise ValueError("seeds_per_cycle must be <= seed_stride "
+                             "(seed windows would overlap across cycles)")
+
+
+class ContinuousTuningLoop:
+    """Drives repeated collect -> merge -> refit -> re-recommend cycles.
+
+    ``executor`` overrides campaign case execution (tests); ``progress`` gets
+    one-line status strings.  All state that matters for resume lives on
+    disk — a fresh instance pointed at the same ``out_dir`` continues where
+    the previous process stopped, rebuilding the in-memory predictor by
+    re-ingesting the merged dataset.
+    """
+
+    def __init__(
+        self,
+        cfg: LoopConfig,
+        executor: Optional[Callable] = None,
+        progress: Optional[Callable[[str], None]] = None,
+    ):
+        self.cfg = cfg
+        self.state = LoopState(cfg.out_dir / "loop_state.jsonl")
+        self.shards_dir = cfg.out_dir / "shards"
+        self.merged_path = cfg.out_dir / "merged.jsonl"
+        self._executor = executor
+        self._progress = progress
+        self._ctx = RunContext()
+        self.tuner = OnlineAutotuner(
+            space=cfg.space,
+            refit_every=cfg.refit_every,
+            min_observations=cfg.min_observations,
+            gain_threshold=cfg.gain_threshold,
+            drift_threshold=cfg.drift_threshold,
+            model=cfg.model,
+            seed=cfg.seed,
+        )
+
+    # ------------------------------------------------------------------
+    def _log(self, msg: str) -> None:
+        if self._progress is not None:
+            self._progress(msg)
+
+    def _cycle_seeds(self, cycle: int) -> List[int]:
+        start = self.cfg.base_seed + cycle * self.cfg.seed_stride
+        return list(range(start, start + self.cfg.seeds_per_cycle))
+
+    def _shard_path(self, cycle: int) -> pathlib.Path:
+        return self.shards_dir / f"cycle_{cycle:04d}.jsonl"
+
+    def _shard_files(self) -> List[pathlib.Path]:
+        # sorted == cycle order == collection order, so the merged record
+        # order (and therefore the refit) matches a straight-through run
+        return sorted(self.shards_dir.glob("cycle_*.jsonl"))
+
+    def _default_config(self) -> dict:
+        return {k: getattr(self.cfg.space, k)[0] for k in KNOB_NAMES}
+
+    @staticmethod
+    def _knobs_only(config: dict) -> dict:
+        return {k: config[k] for k in KNOB_NAMES if k in config}
+
+    def _merge(self) -> List[dict]:
+        shards = self._shard_files()
+        if not shards:
+            return []
+        _, merged = merge_files(shards, self.merged_path)
+        return merged
+
+    def _repair_shards(self, upto: int) -> int:
+        """Re-run failed cases of already-completed cycles.
+
+        Campaign resume semantics inside each shard file re-run exactly the
+        (case, rep, seed) keys that never succeeded, so transient benchmark
+        crashes heal on the next invocation instead of leaving the dataset
+        permanently short.  Returns the number of cases re-executed."""
+        n = 0
+        for cycle in range(upto):
+            shard = self._shard_path(cycle)
+            if not shard.exists():
+                continue
+            records = load_records(shard)
+            done = completed_keys(records)
+            unresolved = any(
+                r.get("status") == "error"
+                and (r.get("case_id"), r.get("rep", 0), r.get("seed", 0)) not in done
+                for r in records
+            )
+            if not unresolved:
+                continue
+            results = run_campaign_batch(
+                self.cfg.campaign, shard, self._cycle_seeds(cycle),
+                fast=self.cfg.fast, ctx=self._ctx, executor=self._executor,
+                progress=self._progress,
+            )
+            n += sum(r.n_executed for r in results)
+        if n:
+            self._log(f"repair: re-ran {n} previously failed case(s)")
+        return n
+
+    def _warm_start(self, upto: int) -> None:
+        """Rebuild predictor state from already-collected shards (resume).
+
+        Replays the completed cycles' ingest/refit sequence shard by shard —
+        one ``ingest_records`` + ``maybe_refit`` per cycle, in cycle order —
+        so the resumed model, its ``refit_every`` schedule position, and the
+        drift bookkeeping all match the uninterrupted run exactly.  Past
+        explore proposals (from the state file) are replayed too, so the
+        cold-start exploration sequence continues instead of restarting."""
+        n = 0
+        for cycle in range(upto):
+            shard = self._shard_path(cycle)
+            if not shard.exists():
+                continue
+            n += self.tuner.ingest_records(merge_records(load_records(shard)))
+            self.tuner.maybe_refit()
+        for rec in self.state.cycles():
+            decision = rec.get("decision") or {}
+            if decision.get("explore") and decision.get("config"):
+                self.tuner.mark_explored(decision["config"])
+        if n:
+            self._merge()  # keep merged.jsonl fresh for external readers
+            self._log(f"warm-start: {n} rows re-ingested from "
+                      f"{upto} completed cycle(s), fitted={self.tuner.fitted}")
+
+    def _live_context(self, all_rows: List[dict], cycle_rows: List[dict]) -> dict:
+        """Workload descriptors for ``decide()``/``ranked()``: medians of the
+        merged dataset's exogenous features, plus the freshest measured
+        delivery rate as the 'current throughput' reference."""
+
+        def med(key: str, rows: List[dict]) -> float:
+            vals = [float(r.get(key, 0.0)) for r in rows
+                    if float(r.get(key, 0.0)) > 0]
+            return float(np.median(vals)) if vals else 0.0
+
+        return {
+            "file_size_mb": med("file_size_mb", all_rows),
+            "n_samples": med("n_samples", all_rows),
+            "throughput_mb_s": med(TARGET_NAME, cycle_rows or all_rows),
+        }
+
+    # ------------------------------------------------------------------
+    def run_cycle(self, cycle: int, current_config: dict) -> dict:
+        """One full collect -> merge -> refit -> re-recommend cycle."""
+        t_cycle = time.perf_counter()
+        seeds = self._cycle_seeds(cycle)
+
+        # 1. collect: this cycle's shard file; killed runs resume per case
+        results: List[RunResult] = run_campaign_batch(
+            self.cfg.campaign, self._shard_path(cycle), seeds,
+            fast=self.cfg.fast, ctx=self._ctx, executor=self._executor,
+            progress=self._progress,
+        )
+        n_executed = sum(r.n_executed for r in results)
+        n_failures = sum(len(r.failures) for r in results)
+
+        # 2. merge: all shards -> the canonical deduplicated dataset
+        merged = self._merge()
+        all_rows = rows_from_records(merged)
+        seed_set = set(seeds)
+        cycle_rows = rows_from_records(
+            [r for r in merged if r.get("seed") in seed_set])
+
+        # 3. refit: zero-copy ingest of the new rows, drift-aware schedule
+        n_new = self.tuner.ingest_records(merged)
+        t0 = time.perf_counter()
+        refit = self.tuner.maybe_refit()
+        refit_s = time.perf_counter() - t0
+        drift = self.tuner.last_drift
+
+        # 4. re-recommend: ranked report + decision against the live config
+        # (decide reuses the ranked winner — one grid inference per cycle)
+        context = self._live_context(all_rows, cycle_rows)
+        t0 = time.perf_counter()
+        top = self.tuner.ranked(context, top_k=self.cfg.top_k)
+        decision = self.tuner.decide(current_config, context,
+                                     best=top[0] if top else None)
+        recommend_s = time.perf_counter() - t0
+
+        explore = bool(decision.config and decision.config.get("explore"))
+        if decision.reconfigure and not explore:
+            new_config = self._knobs_only(decision.config)
+        else:
+            # exploration proposals come from cold-start candidate cycling,
+            # not the model — the loop's batch collection already explores,
+            # so only model-backed (exploit) proposals are adopted
+            new_config = dict(current_config)
+
+        self._log(
+            f"cycle {cycle}: +{n_new} rows (n={self.tuner.n_observations}) "
+            f"refit={refit} ({refit_s * 1e3:.0f}ms) "
+            f"drift={'n/a' if math.isnan(drift) else f'{drift:.2f}'} "
+            f"recommend={recommend_s * 1e3:.1f}ms "
+            f"gain={decision.predicted_gain:+.0%} "
+            f"reconfigure={decision.reconfigure and not explore}"
+        )
+
+        return {
+            "schema_version": STATE_SCHEMA_VERSION,
+            "cycle": cycle,
+            "status": "ok",
+            "campaign": (self.cfg.campaign if isinstance(self.cfg.campaign, str)
+                         else self.cfg.campaign.name),
+            "fast": self.cfg.fast,
+            "seeds": seeds,
+            "n_executed": n_executed,
+            "n_failures": n_failures,
+            "n_records_merged": len(merged),
+            "n_new_rows": n_new,
+            "n_observations": self.tuner.n_observations,
+            "refit": refit,
+            "drift": None if math.isnan(drift) else round(drift, 6),
+            "refit_s": round(refit_s, 6),
+            "recommend_s": round(recommend_s, 6),
+            "top": top,
+            "decision": {
+                "reconfigure": bool(decision.reconfigure and not explore),
+                "explore": explore,
+                "predicted_gain": round(float(decision.predicted_gain), 6),
+                "config": self._knobs_only(decision.config or {}),
+            },
+            "current_config": new_config,
+            "elapsed_s": round(time.perf_counter() - t_cycle, 6),
+            "host": socket.gethostname(),
+            "timestamp": time.time(),
+        }
+
+    def run(self, max_cycles: Optional[int] = None) -> List[dict]:
+        """Run (or resume) cycles until ``cfg.cycles`` are complete.
+
+        ``max_cycles`` bounds how many cycles *this invocation* runs — the
+        kill-between-cycles hook; a later call (or process) picks up the rest.
+        Returns the cycle records completed by this invocation."""
+        start = self.state.next_cycle()
+        end = self.cfg.cycles
+        if max_cycles is not None:
+            end = min(end, start + max_cycles)
+        # repair runs even when every cycle is complete — a failure in the
+        # *last* cycle must still heal on the next invocation
+        if start > 0 and self._repair_shards(start):
+            self._merge()
+        if start >= end:
+            return []
+        current = self.state.current_config() or self._default_config()
+        if start > 0:
+            self._warm_start(start)
+        completed: List[dict] = []
+        for cycle in range(start, end):
+            record = self.run_cycle(cycle, current)
+            self.state.append(record)
+            current = record["current_config"]
+            completed.append(record)
+        return completed
+
+
+# ---------------------------------------------------------------- CLI
+
+def _format_status(cycles: List[dict]) -> str:
+    if not cycles:
+        return "no completed cycles"
+    hdr = (f"{'cycle':>5s} {'rows':>6s} {'new':>5s} {'refit':>5s} {'drift':>7s} "
+           f"{'refit_ms':>8s} {'rec_ms':>7s} {'gain':>7s} {'config':s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in cycles:
+        drift = r.get("drift")
+        cfg = r.get("current_config", {})
+        abbrev = {"batch_size": "bs", "num_workers": "w", "block_kb": "kb",
+                  "n_threads": "t", "prefetch_depth": "pf"}
+        cfg_s = ",".join(f"{abbrev.get(k, k)}{v}" for k, v in cfg.items())
+        lines.append(
+            f"{r['cycle']:>5d} {r['n_observations']:>6d} {r['n_new_rows']:>5d} "
+            f"{str(r['refit']):>5s} {'n/a' if drift is None else f'{drift:.2f}':>7s} "
+            f"{r['refit_s'] * 1e3:>8.1f} {r['recommend_s'] * 1e3:>7.1f} "
+            f"{r['decision']['predicted_gain']:>+6.0%} {cfg_s}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service.loop",
+        description="Continuous collect -> merge -> refit -> re-recommend "
+                    "tuning loop (resumable).",
+    )
+    ap.add_argument("--campaign", default="paper_core")
+    ap.add_argument("--cycles", type=int, default=3,
+                    help="total cycles the state file targets")
+    ap.add_argument("--max-cycles", type=int, default=None,
+                    help="run at most N cycles this invocation (kill/resume testing)")
+    ap.add_argument("--seeds-per-cycle", type=int, default=1)
+    ap.add_argument("--base-seed", type=int, default=1000)
+    ap.add_argument("--fast", action="store_true", help="CI-sized campaign subsets")
+    ap.add_argument("--out-dir", type=pathlib.Path, default=DEFAULT_LOOP_DIR)
+    ap.add_argument("--model", default="xgboost")
+    ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--refit-every", type=int, default=20)
+    ap.add_argument("--min-observations", type=int, default=24)
+    ap.add_argument("--gain-threshold", type=float, default=0.10)
+    ap.add_argument("--drift-threshold", type=float, default=0.5)
+    ap.add_argument("--status", action="store_true",
+                    help="print the cycle log and exit")
+    ap.add_argument("--force", action="store_true",
+                    help="discard state + shards and start over")
+    args = ap.parse_args(argv)
+
+    cfg = LoopConfig(
+        campaign=args.campaign, cycles=args.cycles,
+        seeds_per_cycle=args.seeds_per_cycle, base_seed=args.base_seed,
+        fast=args.fast, out_dir=args.out_dir, model=args.model,
+        top_k=args.top_k, refit_every=args.refit_every,
+        min_observations=args.min_observations,
+        gain_threshold=args.gain_threshold,
+        drift_threshold=args.drift_threshold,
+    )
+    loop = ContinuousTuningLoop(cfg, progress=lambda m: print(f"[loop] {m}"))
+
+    if args.status:
+        print(_format_status(loop.state.cycles()))
+        return 0
+
+    if args.force:
+        loop.state.path.unlink(missing_ok=True)
+        loop.merged_path.unlink(missing_ok=True)
+        for p in loop._shard_files():
+            p.unlink()
+
+    start = loop.state.next_cycle()
+    if 0 < start < cfg.cycles:
+        print(f"[loop] resuming at cycle {start}/{cfg.cycles}")
+
+    completed = loop.run(max_cycles=args.max_cycles)
+    if not completed and start >= cfg.cycles:
+        print(f"[loop] all {cfg.cycles} cycles already complete "
+              f"(state: {loop.state.path}); use --cycles to extend or --force "
+              "to restart")
+    print(_format_status(loop.state.cycles()))
+    n_failures = sum(r["n_failures"] for r in completed)
+    if n_failures:
+        print(f"[loop] {n_failures} case failure(s) recorded; they re-run on "
+              "the next invocation", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

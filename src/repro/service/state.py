@@ -1,0 +1,86 @@
+"""Resumable per-cycle state for the continuous tuning loop.
+
+One JSONL line per *completed* cycle (the same durability model as the
+campaign runner: a killed loop loses at most the in-flight cycle, and its
+partially collected shard file resumes case-by-case anyway).  Each record
+carries the cycle's full provenance — seed window, dataset growth, refit and
+recommend latency, drift score, and the decision taken — so the state file
+doubles as the loop's audit log.
+
+Record schema (``STATE_SCHEMA_VERSION = 1``)::
+
+    {
+      "schema_version": 1,
+      "cycle": 0,                      # 0-based cycle index (the resume key)
+      "status": "ok",
+      "campaign": "paper_core",
+      "fast": true,
+      "seeds": [1000, 1001],           # the cycle's seed window
+      "n_executed": 26,                # cases run this cycle (0 after resume)
+      "n_failures": 0,
+      "n_records_merged": 52,          # records in merged.jsonl after merge
+      "n_new_rows": 26,                # rows newly ingested by the autotuner
+      "n_observations": 52,            # autotuner store size after ingest
+      "refit": true,                   # did maybe_refit() fit a model
+      "drift": 0.18,                   # median rel. error on new rows (null
+                                       #   until a previous model existed)
+      "refit_s": 0.41,
+      "recommend_s": 0.007,
+      "top": [{...top-k configs...}],  # ranked() report, predicted MB/s each
+      "decision": {"reconfigure": true, "predicted_gain": 0.31,
+                   "explore": false, "config": {...knobs...}},
+      "current_config": {...knobs...}, # config in force AFTER this cycle
+      "elapsed_s": 3.2,
+      "host": "...", "timestamp": 1780000000.0
+    }
+
+``LoopState`` dedups by cycle keeping the latest record, tolerating the
+torn-trailing-line artifacts of a killed writer (via the campaign loader).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional, Union
+
+from ..data.campaign import load_records
+
+__all__ = ["STATE_SCHEMA_VERSION", "LoopState"]
+
+STATE_SCHEMA_VERSION = 1
+
+
+class LoopState:
+    """Append-only JSONL cycle log with resume semantics."""
+
+    def __init__(self, path: Union[str, pathlib.Path]):
+        self.path = pathlib.Path(path)
+
+    def cycles(self) -> List[dict]:
+        """Completed cycle records, deduplicated by cycle (latest wins),
+        ordered by cycle index."""
+        latest: Dict[int, dict] = {}
+        for r in load_records(self.path):
+            if r.get("status") == "ok" and "cycle" in r:
+                latest[int(r["cycle"])] = r
+        return [latest[c] for c in sorted(latest)]
+
+    def next_cycle(self) -> int:
+        """First cycle index not yet completed (cycles run in order, so this
+        is one past the highest completed index)."""
+        done = self.cycles()
+        return int(done[-1]["cycle"]) + 1 if done else 0
+
+    def current_config(self) -> Optional[dict]:
+        """The config in force after the last completed cycle — restored on
+        resume so a killed loop keeps tuning from where it left off."""
+        done = self.cycles()
+        return dict(done[-1]["current_config"]) if done else None
+
+    def append(self, record: dict) -> None:
+        """Durably append one completed-cycle record."""
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+            f.flush()

@@ -138,6 +138,135 @@ def test_config_space_cached_grid_consistent():
     np.testing.assert_array_equal(X2, expected2)
 
 
+def _two_worker_tuner(gain_threshold=0.10, **kw):
+    """Fitted tuner on a world where num_workers=4 beats num_workers=0 5x."""
+    tuner = OnlineAutotuner(
+        refit_every=1, min_observations=5, gain_threshold=gain_threshold,
+        space=ConfigSpace(batch_size=(32,), num_workers=(0, 4), block_kb=(64,),
+                          n_threads=(1,), prefetch_depth=(1,)),
+        **kw,
+    )
+    for w, thr in [(0, 100.0), (4, 500.0)] * 5:
+        tuner.observe({"batch_size": 32, "num_workers": w, "block_kb": 64,
+                       "throughput_mb_s": thr}, thr)
+    assert tuner.maybe_refit()
+    return tuner
+
+
+def test_decide_missing_knob_counts_as_difference():
+    """Regression: a varied knob absent from the trainer's config dict used to
+    be skipped by the same-config check, so the genuinely better config was
+    reported as 'same' and never proposed."""
+    tuner = _two_worker_tuner()
+    d = tuner.decide(
+        current_config={"batch_size": 32, "block_kb": 64},  # num_workers missing
+        context={"batch_size": 32, "block_kb": 64, "throughput_mb_s": 100.0},
+    )
+    assert d.reconfigure
+    assert d.config["num_workers"] == 4
+
+
+def test_decide_extra_keys_do_not_force_mismatch():
+    """Regression: non-knob keys (labels, annotations) in the trainer's config
+    used to force a spurious 'different config' verdict; with the current
+    config already the best, no reconfiguration must be proposed even at a
+    zero gain threshold."""
+    tuner = _two_worker_tuner(gain_threshold=0.0)
+    d = tuner.decide(
+        current_config={"batch_size": 32, "num_workers": 4, "block_kb": 64,
+                        "label": "trial-7", "explore": True},
+        context={"batch_size": 32, "num_workers": 4, "block_kb": 64,
+                 "throughput_mb_s": 500.0},
+    )
+    assert not d.reconfigure
+
+
+def test_seeded_and_live_rows_produce_identical_store_columns():
+    """Regression: seed_observations used to ingest raw offline rows, leaving
+    real values in endogenous columns that live observe() rows zero-fill — a
+    train/serve skew that poisoned every refit of the continuous loop."""
+    space = ConfigSpace(batch_size=(32,), num_workers=(0, 2), block_kb=(64,),
+                        n_threads=(1,), prefetch_depth=(1,))
+    offline_row = {
+        "batch_size": 32, "num_workers": 2, "block_kb": 64,
+        "file_size_mb": 8.0, "n_samples": 100,
+        # endogenous measurements a live row can't provide as features:
+        "samples_per_second": 123.0, "data_loading_ratio": 0.4,
+        "throughput_mb_s": 456.0, "iops": 1e4,
+        "target_throughput": 300.0, "backend": "tmpfs", "bench_type": "pipeline",
+    }
+    seeded = OnlineAutotuner(space=space)
+    seeded.seed_observations([offline_row])
+    live = OnlineAutotuner(space=space)
+    live.observe({k: v for k, v in offline_row.items()
+                  if k != "target_throughput"}, 300.0)
+    np.testing.assert_array_equal(
+        seeded._store.matrix(seeded.spec.names),
+        live._store.matrix(live.spec.names),
+    )
+    np.testing.assert_array_equal(
+        seeded._store.column(seeded.spec.target),
+        live._store.column(live.spec.target),
+    )
+    # the endogenous columns specifically must be zero in the seeded store
+    for col in ("samples_per_second", "data_loading_ratio",
+                "throughput_mb_s", "iops"):
+        assert (seeded._store.column(col) == 0).all(), col
+
+
+def _campaign_record(case_id, seed, row):
+    return {"case_id": case_id, "rep": 0, "seed": seed, "status": "ok",
+            "row": row}
+
+
+def _worker_rows(seed, scale=1.0):
+    return [
+        _campaign_record(f"c-w{w}-b{b}", seed, {
+            "batch_size": b, "num_workers": w, "block_kb": 64,
+            "file_size_mb": 8.0, "target_throughput": scale * 100.0 * (1 + w),
+        })
+        for w in (0, 2, 4) for b in (16, 32)
+    ]
+
+
+def test_ingest_records_dedups_by_key():
+    tuner = OnlineAutotuner(min_observations=4,
+                            space=ConfigSpace(batch_size=(16, 32),
+                                              num_workers=(0, 2, 4),
+                                              block_kb=(64,), n_threads=(1,),
+                                              prefetch_depth=(1,)))
+    recs = _worker_rows(seed=0)
+    assert tuner.ingest_records(recs) == 6
+    assert tuner.ingest_records(recs) == 0  # same (case_id, rep, seed) keys
+    assert tuner.n_observations == 6
+    # error records and new seeds behave as expected
+    recs2 = _worker_rows(seed=1)
+    recs2[0]["status"] = "error"
+    recs2[0]["row"] = None
+    assert tuner.ingest_records(recs2) == 5
+    assert tuner.n_observations == 11
+
+
+def test_drift_forces_refit_off_schedule():
+    """A regime shift in new data must trigger a refit even when the
+    refit_every schedule is nowhere near due."""
+    space = ConfigSpace(batch_size=(16, 32), num_workers=(0, 2, 4),
+                        block_kb=(64,), n_threads=(1,), prefetch_depth=(1,))
+    tuner = OnlineAutotuner(space=space, refit_every=10_000,
+                            min_observations=4, drift_threshold=0.3)
+    tuner.ingest_records(_worker_rows(seed=0))
+    assert tuner.maybe_refit()  # initial fit
+    # same-regime data: low drift, schedule far away -> no refit
+    tuner.ingest_records(_worker_rows(seed=1))
+    assert tuner.last_drift < 0.3
+    assert not tuner.maybe_refit()
+    # regime shift: storage got 5x faster -> drift fires a refit
+    tuner.ingest_records(_worker_rows(seed=2, scale=5.0))
+    assert tuner.last_drift > 0.3
+    assert tuner.maybe_refit()
+    assert not tuner.maybe_refit()  # drift flag cleared by the refit
+
+
 def test_online_autotuner_column_store_matches_rows():
     """The incremental store's zero-copy matrix equals the stack-from-dicts
     path the refit used to take."""

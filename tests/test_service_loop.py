@@ -1,0 +1,263 @@
+"""Continuous tuning loop (repro.service): dataset growth, refit, kill/resume
+semantics, decision determinism, and the CLI end-to-end."""
+
+import pytest
+
+from repro.core.autotune import ConfigSpace
+from repro.core.features import TARGET_NAME
+from repro.data.campaign import load_records, run_campaign_batch
+from repro.data.registry import Campaign, matrix_cases
+from repro.service.loop import ContinuousTuningLoop, LoopConfig
+from repro.service.loop import main as loop_main
+from repro.service.state import LoopState
+
+# A deterministic synthetic world (no real I/O): more workers -> faster, with
+# a small seed-dependent wiggle so each cycle's rows are distinct but exactly
+# reproducible.
+
+
+def _campaign():
+    return Campaign(
+        "loop_fake", "test campaign",
+        lambda fast=False: tuple(matrix_cases(
+            "pipeline", id_prefix="lf", backend=["tmpfs"], format=["raw"],
+            batch_size=[16, 32], num_workers=[0, 2, 4],
+        )),
+    )
+
+
+def _executor(calls=None):
+    def ex(case, ctx, seed):
+        if calls is not None:
+            calls.append((case.id, seed))
+        thr = 100.0 * (1 + case.num_workers) * (1 + 0.002 * (seed % 5))
+        return {TARGET_NAME: thr, "batch_size": case.batch_size,
+                "num_workers": case.num_workers, "block_kb": case.block_kb,
+                "file_size_mb": 8.0, "bench_type": "pipeline",
+                "backend": "tmpfs"}
+    return ex
+
+
+def _cfg(out_dir, **kw):
+    kw.setdefault("campaign", _campaign())
+    kw.setdefault("cycles", 3)
+    kw.setdefault("space", ConfigSpace(
+        batch_size=(16, 32), num_workers=(0, 2, 4), block_kb=(64,),
+        n_threads=(1,), prefetch_depth=(1,)))
+    kw.setdefault("min_observations", 6)
+    kw.setdefault("refit_every", 6)
+    kw.setdefault("seed", 0)
+    return LoopConfig(out_dir=out_dir, **kw)
+
+
+def _decision_view(record):
+    """The decision-relevant slice of a cycle record (provenance like
+    timestamps and latency excluded)."""
+    return {k: record[k] for k in
+            ("cycle", "n_observations", "refit", "current_config", "top")} | {
+            "decision": record["decision"]}
+
+
+# ---------------------------------------------------------------- core loop
+
+
+def test_loop_grows_dataset_refits_and_recommends(tmp_path):
+    cfg = _cfg(tmp_path / "loop")
+    records = ContinuousTuningLoop(cfg, executor=_executor()).run()
+    assert [r["cycle"] for r in records] == [0, 1, 2]
+    assert [r["n_observations"] for r in records] == [6, 12, 18]  # grows
+    assert all(r["refit"] for r in records)  # refit_every == rows per cycle
+    assert records[1]["drift"] is not None  # drift measured once a model exists
+    # the loop discovered the best knob setting and adopted it
+    assert records[-1]["current_config"]["num_workers"] == 4
+    assert records[-1]["top"][0]["num_workers"] == 4
+    scores = [t["predicted_throughput_mb_s"] for t in records[-1]["top"]]
+    assert scores == sorted(scores, reverse=True)
+    # per-cycle provenance carries the refit/recommend latency split
+    assert all(r["refit_s"] >= 0 and r["recommend_s"] >= 0 for r in records)
+    # the state file mirrors what run() returned
+    st = LoopState(cfg.out_dir / "loop_state.jsonl")
+    assert [c["cycle"] for c in st.cycles()] == [0, 1, 2]
+    assert st.next_cycle() == 3
+    assert st.current_config() == records[-1]["current_config"]
+
+
+# refit_every == rows-per-cycle (6) refits every cycle; 8 leaves the schedule
+# mid-window at the kill point, exercising the warm-start replay that must
+# restore the exact refit-schedule position (not just the data).
+@pytest.mark.parametrize("refit_every", [6, 8])
+def test_loop_kill_between_cycles_resumes(tmp_path, refit_every):
+    cfg = _cfg(tmp_path / "killed", refit_every=refit_every)
+    first = ContinuousTuningLoop(cfg, executor=_executor()).run(max_cycles=1)
+    assert [r["cycle"] for r in first] == [0]
+    # "new process": a fresh instance pointed at the same out_dir
+    calls = []
+    rest = ContinuousTuningLoop(cfg, executor=_executor(calls)).run()
+    assert [r["cycle"] for r in rest] == [1, 2]
+    # cycle 0's seed window was not re-collected
+    assert cfg.base_seed not in {s for _, s in calls}
+    # and the killed+resumed run reaches the same decisions, refit points,
+    # and drift values as an uninterrupted run with the same seed
+    cfg2 = _cfg(tmp_path / "straight", refit_every=refit_every)
+    straight = ContinuousTuningLoop(cfg2, executor=_executor()).run()
+    resumed = LoopState(cfg.out_dir / "loop_state.jsonl").cycles()
+    assert len(straight) == len(resumed) == 3
+    for a, b in zip(straight, resumed):
+        assert _decision_view(a) == _decision_view(b)
+        assert a["drift"] == b["drift"]
+
+
+def test_loop_repairs_failed_cases_on_next_invocation(tmp_path):
+    """A transient benchmark crash in a completed cycle re-runs (and only it)
+    on the next invocation, healing the dataset."""
+    cfg = _cfg(tmp_path / "flaky", cycles=2)
+
+    def flaky_one(case, ctx, seed):
+        if case.id == "lf-tmpfs-raw-b32-w4":
+            raise RuntimeError("transient storage error")
+        return _executor()(case, ctx, seed)
+
+    first = ContinuousTuningLoop(cfg, executor=flaky_one).run(max_cycles=1)
+    assert first[0]["n_failures"] == 1
+    assert first[0]["n_observations"] == 5  # one row short
+
+    calls = []
+    rest = ContinuousTuningLoop(cfg, executor=_executor(calls)).run()
+    # the repair pass re-ran exactly the failed case from cycle 0's window
+    assert ("lf-tmpfs-raw-b32-w4", cfg.base_seed) in calls
+    assert len(calls) == 1 + 6  # 1 repaired + cycle 1's full window
+    assert rest[-1]["n_observations"] == 12  # dataset healed + grown
+
+
+def test_loop_repairs_failure_in_final_cycle(tmp_path):
+    """A failure in the LAST cycle still heals: the repair pass runs before
+    the 'all cycles complete' early exit."""
+    from repro.data.campaign import rows_from_records
+
+    cfg = _cfg(tmp_path / "lastfail", cycles=1)
+
+    def flaky_one(case, ctx, seed):
+        if case.id == "lf-tmpfs-raw-b32-w4":
+            raise RuntimeError("transient storage error")
+        return _executor()(case, ctx, seed)
+
+    first = ContinuousTuningLoop(cfg, executor=flaky_one).run()
+    assert first[0]["n_failures"] == 1
+    calls = []
+    loop = ContinuousTuningLoop(cfg, executor=_executor(calls))
+    assert loop.run() == []  # all cycles complete -> no new cycle records
+    assert calls == [("lf-tmpfs-raw-b32-w4", cfg.base_seed)]  # but it healed
+    assert len(rows_from_records(load_records(loop.merged_path))) == 6
+
+
+def test_loop_resume_replays_exploration(tmp_path):
+    """With too few observed configs for the model (cold start), decisions
+    come from the exploration sequence — which must survive kill+resume
+    instead of restarting and re-proposing the same candidates."""
+    two_case = Campaign(
+        "loop_two", "2-case campaign (diversity below min_config_diversity)",
+        lambda fast=False: tuple(matrix_cases(
+            "pipeline", id_prefix="lt", backend=["tmpfs"], format=["raw"],
+            batch_size=[16], num_workers=[0, 2],
+        )),
+    )
+    space = ConfigSpace(batch_size=(16, 32), num_workers=(0, 2, 4),
+                        block_kb=(64,), n_threads=(1,), prefetch_depth=(1,))
+    kw = dict(campaign=two_case, cycles=3, space=space,
+              min_observations=2, refit_every=2, seed=0)
+    straight = ContinuousTuningLoop(
+        _cfg(tmp_path / "straight", **kw), executor=_executor()).run()
+    assert any(r["decision"]["explore"] for r in straight)  # cold start active
+    cfg = _cfg(tmp_path / "killed", **kw)
+    ContinuousTuningLoop(cfg, executor=_executor()).run(max_cycles=1)
+    ContinuousTuningLoop(cfg, executor=_executor()).run()
+    resumed = LoopState(cfg.out_dir / "loop_state.jsonl").cycles()
+    assert [r["decision"] for r in resumed] == [r["decision"] for r in straight]
+
+
+def test_loop_kill_mid_cycle_resumes_remaining_cases(tmp_path):
+    """A loop killed during collection re-runs only the missing cases of the
+    in-flight cycle (campaign-level resume inside the cycle's shard file)."""
+    cfg = _cfg(tmp_path / "midkill", cycles=1)
+    loop = ContinuousTuningLoop(cfg, executor=_executor())
+    # simulate the kill: 2 of 6 cases already collected into the shard file
+    run_campaign_batch(cfg.campaign, loop._shard_path(0), loop._cycle_seeds(0),
+                       executor=_executor(), max_cases=2)
+    calls = []
+    records = ContinuousTuningLoop(cfg, executor=_executor(calls)).run()
+    assert len(calls) == 4  # only the remaining cases executed
+    assert records[0]["n_executed"] == 4
+    assert records[0]["n_observations"] == 6  # full cycle dataset regardless
+
+
+def test_loop_determinism_under_fixed_seed(tmp_path):
+    views = []
+    for d in ("a", "b"):
+        cfg = _cfg(tmp_path / d)
+        records = ContinuousTuningLoop(cfg, executor=_executor()).run()
+        views.append([_decision_view(r) for r in records])
+    assert views[0] == views[1]
+
+
+def test_loop_merged_dataset_dedups_shards(tmp_path):
+    from repro.data.dataset import observations_from_jsonl
+
+    cfg = _cfg(tmp_path / "merged")
+    loop = ContinuousTuningLoop(cfg, executor=_executor())
+    loop.run()
+    merged = load_records(loop.merged_path)
+    keys = {(r["case_id"], r["rep"], r["seed"]) for r in merged}
+    assert len(keys) == len(merged) == 18  # 6 cases x 3 seed windows
+    # the JSONL observation reader agrees with the loop's ingested store
+    rows = observations_from_jsonl([loop.merged_path])
+    assert len(rows) == loop.tuner.n_observations == 18
+    assert all(row[TARGET_NAME] > 0 for row in rows)
+
+
+# ---------------------------------------------------------------- state
+
+
+def test_loop_state_resume_points(tmp_path):
+    st = LoopState(tmp_path / "state.jsonl")
+    assert st.cycles() == [] and st.next_cycle() == 0
+    assert st.current_config() is None
+    st.append({"schema_version": 1, "cycle": 0, "status": "ok",
+               "current_config": {"num_workers": 0}})
+    st.append({"schema_version": 1, "cycle": 1, "status": "ok",
+               "current_config": {"num_workers": 2}})
+    assert st.next_cycle() == 2
+    assert st.current_config() == {"num_workers": 2}
+    # a re-run cycle record supersedes the earlier one (latest wins)
+    st.append({"schema_version": 1, "cycle": 1, "status": "ok",
+               "current_config": {"num_workers": 4}})
+    assert [c["cycle"] for c in st.cycles()] == [0, 1]
+    assert st.current_config() == {"num_workers": 4}
+    # a torn trailing line (killed writer) is tolerated
+    with open(st.path, "a") as f:
+        f.write('{"cycle": 2, "status": "ok"')
+    assert st.next_cycle() == 2
+
+
+# ---------------------------------------------------------------- CLI
+
+
+def test_loop_cli_end_to_end(tmp_path, capsys):
+    """Real (tiny) campaign through the CLI: 2 cycles, then resume no-ops,
+    then --status renders the cycle log."""
+    out = tmp_path / "cli"
+    args = ["--campaign", "paper_concurrent", "--fast", "--cycles", "2",
+            "--min-observations", "4", "--refit-every", "2",
+            "--out-dir", str(out), "--base-seed", "3000"]
+    assert loop_main(args) == 0
+    st = LoopState(out / "loop_state.jsonl")
+    cycles = st.cycles()
+    assert [c["cycle"] for c in cycles] == [0, 1]
+    assert cycles[-1]["n_observations"] == 4  # 2 fast concurrent cases/cycle
+    assert cycles[-1]["refit"]
+    capsys.readouterr()
+    # second invocation: everything complete, exits cleanly
+    assert loop_main(args) == 0
+    assert "already complete" in capsys.readouterr().out
+    assert loop_main(["--status", "--out-dir", str(out)]) == 0
+    status = capsys.readouterr().out
+    assert "cycle" in status and " 0 " in status

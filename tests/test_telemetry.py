@@ -1,0 +1,51 @@
+"""StepTelemetry correctness: exception-safe timing windows and finite
+exports (regression tests for the continuous-loop bugfixes)."""
+
+import numpy as np
+import pytest
+
+from repro.data.telemetry import StepTelemetry
+
+
+def test_exception_in_step_body_still_records_sample():
+    t = StepTelemetry()
+    with pytest.raises(RuntimeError):
+        with t.data_wait():
+            raise RuntimeError("loader crashed")
+    with pytest.raises(ValueError):
+        with t.compute():
+            raise ValueError("step blew up")
+    assert len(t.data_times) == 1 and len(t.compute_times) == 1
+    assert t.data_times[0] >= 0.0 and t.compute_times[0] >= 0.0
+
+
+def test_windows_stay_paired_across_failures():
+    """A mid-run failure must not desynchronize the data/compute windows."""
+    t = StepTelemetry()
+    for i in range(5):
+        try:
+            with t.data_wait():
+                if i == 2:
+                    raise RuntimeError("transient read error")
+        except RuntimeError:
+            pass
+        with t.compute():
+            pass
+        t.record_batch(4, 4096)
+    assert len(t.data_times) == len(t.compute_times) == 5
+    assert 0.0 <= t.data_loading_ratio() <= 1.0
+
+
+def test_delivered_mb_s_finite_without_samples():
+    t = StepTelemetry()
+    assert t.delivered_mb_s() == 0.0  # no data at all
+    t.record_batch(4, 1_000_000)
+    assert t.delivered_mb_s() == 0.0  # bytes but no data-wait time yet
+    t.data_times.append(0.5)
+    assert t.delivered_mb_s() == pytest.approx(2.0)  # 1 MB / 0.5 s
+
+
+def test_exported_features_always_finite():
+    t = StepTelemetry()
+    feats = t.features(batch_size=32, num_workers=2, block_kb=64)
+    assert all(np.isfinite(float(v)) for v in feats.values())
