@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-fast campaign-smoke loop-smoke dev-deps
+.PHONY: test bench-fast campaign-smoke loop-smoke fleet-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
@@ -20,6 +20,16 @@ loop-smoke:  ## continuous tuning loop: 2 fast cycles, then resume runs a 3rd
 	    --cycles 3 --min-observations 4 --refit-every 2 \
 	    --out-dir /tmp/repro_io/loop_smoke
 	$(PYTHON) -m repro.service.loop --status --out-dir /tmp/repro_io/loop_smoke
+
+fleet-smoke:  ## 2-collector fleet, synthetic dry-run rows, then --status
+	$(PYTHON) -m repro.service.fleet --collectors 2 --executor synthetic \
+	    --fast --campaign paper_concurrent --cycles 2 \
+	    --min-observations 4 --refit-every 2 \
+	    --out-dir /tmp/repro_io/fleet_smoke --force
+	$(PYTHON) -m repro.service.fleet --status --out-dir /tmp/repro_io/fleet_smoke
+
+docs-check:  ## docs CLI references + intra-repo links (tools/docs_check.py)
+	$(PYTHON) tools/docs_check.py
 
 dev-deps:  ## test-only dependencies (hypothesis, pytest)
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -1,0 +1,72 @@
+"""Fleet scaling benchmark: rows-per-wallclock at 1/2/4 collectors.
+
+Runs one collection cycle of the ``fleet_probe`` campaign (random-access
+I/O on the calibrated network/object-store simulators — wall time is I/O
+wait, the fleet's real-world regime) under ``FleetCoordinator`` with 1, 2,
+and 4 collector subprocesses, and reports rows collected per second of
+cycle wall time.  Refitting is disabled (``min_observations`` out of reach)
+so the number isolates the collect + lease-supervision + merge path; worker
+spawn/import overhead is deliberately *included* — it is part of what a
+real fleet pays per cycle.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only fleet``.  The full
+run writes ``BENCH_fleet.json`` at the repo root so collector scaling is
+tracked across PRs; ``--fast`` keeps everything CI-sized (1/2 collectors,
+one seed) and skips the artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
+SCRATCH = pathlib.Path("/tmp/repro_io/bench_fleet")
+
+
+def bench_fleet(fast: bool) -> List[Row]:
+    from repro.service.fleet import FleetConfig, FleetCoordinator
+
+    rows: List[Row] = []
+    art = {"schema": 1, "campaign": "fleet_probe",
+           "metric": "rows collected per second of cycle wall time", "runs": []}
+    counts = (1, 2) if fast else (1, 2, 4)
+    base_rps = None
+    for n in counts:
+        out = SCRATCH / f"c{n}"
+        shutil.rmtree(out, ignore_errors=True)
+        cfg = FleetConfig(
+            campaign="fleet_probe", fast=fast, collectors=n, cycles=1,
+            seeds_per_cycle=1 if fast else 3, base_seed=9000, out_dir=out,
+            min_observations=10_000,  # never refit: measure collection
+            poll_interval_s=0.05,
+        )
+        t0 = time.perf_counter()
+        records = FleetCoordinator(cfg).run()
+        wall = time.perf_counter() - t0
+        r = records[0]
+        n_rows = r["n_executed"]
+        rps = n_rows / wall
+        if base_rps is None:
+            base_rps = rps
+        speedup = rps / base_rps
+        rows.append((
+            f"fleet_collect_c{n}", wall * 1e6,
+            f"rows={n_rows} rows_per_s={rps:.2f} speedup={speedup:.2f}x "
+            f"failures={r['n_failures']} releases={r['releases']}",
+        ))
+        art["runs"].append({
+            "collectors": n, "rows": n_rows, "wall_s": round(wall, 3),
+            "rows_per_s": round(rps, 3), "speedup_vs_1": round(speedup, 3),
+            "n_failures": r["n_failures"], "releases": r["releases"],
+        })
+
+    if not fast:
+        ARTIFACT.write_text(json.dumps(art, indent=2) + "\n")
+        rows.append(("fleet_artifact", 0.0, f"wrote {ARTIFACT.name}"))
+    return rows

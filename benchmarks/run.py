@@ -19,12 +19,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import fit_bench
+    from . import fleet_bench
     from . import loop_bench
     from . import paper_experiments as pe
     from . import roofline
 
     groups = {
         "fit": fit_bench.bench_fit,
+        "fleet": fleet_bench.bench_fleet,
         "loop": loop_bench.bench_loop,
         "dataset": pe.bench_dataset,
         "campaign": pe.bench_campaign,

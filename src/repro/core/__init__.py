@@ -5,34 +5,45 @@ Public API:
     recommend / OnlineAutotuner — configuration recommendation (paper §5.2)
     GBTRegressor / RandomForestRegressor / linear models / MLPRegressor
     FeatureSpec / StandardScaler / PCA / metrics
+
+Submodules load lazily (PEP 562): the modeling stack pulls in jax, and the
+fleet's collector processes — which import ``repro.data.campaign`` and
+therefore touch this package for ``core.features`` — must not pay jax's
+import cost per spawned worker just to run I/O benchmarks.
 """
 
-from .autotune import AutotuneDecision, ConfigSpace, OnlineAutotuner, recommend  # noqa: F401
-from .classify import CLASSIFIER_ZOO, LogisticRegression, make_classifier  # noqa: F401
-from .ensemble_base import PackedEnsemble, predict_ensemble  # noqa: F401
-from .features import (  # noqa: F401
-    FEATURE_NAMES,
-    PCA,
-    FeatureSpec,
-    StandardScaler,
-    expm1_inverse,
-    log1p_transform,
-)
-from .forest import RandomForestClassifier, RandomForestRegressor, RFConfig  # noqa: F401
-from .gbt import GBTBinaryClassifier, GBTConfig, GBTRegressor  # noqa: F401
-from .importance import permutation_importance, rank_features  # noqa: F401
-from .linear import ElasticNet, Lasso, LinearRegression, Ridge  # noqa: F401
-from .metrics import (  # noqa: F401
-    accuracy,
-    cross_val_r2,
-    f1_binary,
-    kfold_indices,
-    mae,
-    pct_errors,
-    r2_score,
-    rmse,
-    train_test_split,
-)
-from .mlp import MLPConfig, MLPRegressor  # noqa: F401
-from .predictor import MODEL_ZOO, IOPerformancePredictor, ModelReport, make_model  # noqa: F401
-from .uncertainty import ConformalRegressor, StackingRegressor, rf_prediction_interval  # noqa: F401
+_EXPORTS = {
+    "autotune": ("AutotuneDecision", "ConfigSpace", "OnlineAutotuner", "recommend"),
+    "classify": ("CLASSIFIER_ZOO", "LogisticRegression", "make_classifier"),
+    "ensemble_base": ("PackedEnsemble", "predict_ensemble"),
+    "features": ("FEATURE_NAMES", "TARGET_NAME", "PCA", "FeatureSpec",
+                 "StandardScaler", "expm1_inverse", "log1p_transform"),
+    "forest": ("RandomForestClassifier", "RandomForestRegressor", "RFConfig"),
+    "gbt": ("GBTBinaryClassifier", "GBTConfig", "GBTRegressor"),
+    "importance": ("permutation_importance", "rank_features"),
+    "linear": ("ElasticNet", "Lasso", "LinearRegression", "Ridge"),
+    "metrics": ("accuracy", "cross_val_r2", "f1_binary", "kfold_indices",
+                "mae", "pct_errors", "r2_score", "rmse", "train_test_split"),
+    "mlp": ("MLPConfig", "MLPRegressor"),
+    "predictor": ("MODEL_ZOO", "IOPerformancePredictor", "ModelReport", "make_model"),
+    "uncertainty": ("ConformalRegressor", "StackingRegressor", "rf_prediction_interval"),
+}
+
+_NAME_TO_MODULE = {name: mod for mod, names in _EXPORTS.items() for name in names}
+
+__all__ = sorted(_NAME_TO_MODULE)
+
+
+def __getattr__(name: str):
+    module = _NAME_TO_MODULE.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    from importlib import import_module
+
+    value = getattr(import_module(f".{module}", __name__), name)
+    globals()[name] = value  # cache: subsequent lookups skip __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

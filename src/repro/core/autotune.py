@@ -10,15 +10,15 @@ Two layers:
    ``ConfigSpace`` and reused across calls — per ``decide()`` only the scalar
    context columns are rewritten in place (zero per-candidate Python work).
 
-2. ``OnlineAutotuner`` — the framework integration: lives inside the trainer,
-   ingests live pipeline telemetry as new observations, periodically refits,
-   and proposes a reconfiguration whenever the predicted gain over the current
-   config exceeds a threshold. This is the paper's "days -> minutes" loop run
-   continuously at step granularity, and doubles as straggler mitigation (a
-   slow host re-tunes its own pipeline from its own telemetry).  Observations
-   land in an incremental column store (amortized-doubling buffer), so a refit
-   hands the model a zero-copy view of history instead of re-materializing
-   every row.
+2. ``OnlineAutotuner`` — the framework integration: lives inside the trainer
+   (step-granularity telemetry) or behind the ``repro.service`` loop/fleet
+   (cycle-granularity campaign batches via ``ingest_records``), periodically
+   refits, and proposes a reconfiguration whenever the predicted gain over the
+   current config exceeds a threshold. This is the paper's "days -> minutes"
+   loop run continuously, and doubles as straggler mitigation (a slow host
+   re-tunes its own pipeline from its own telemetry).  Observations land in an
+   incremental column store (amortized-doubling buffer), so a refit hands the
+   model a zero-copy view of history instead of re-materializing every row.
 """
 
 from __future__ import annotations

@@ -1,12 +1,16 @@
 """Feature engineering (paper §3.2): the 11-feature spec, log1p target
-transform, StandardScaler, and PCA — all JAX-backed."""
+transform, StandardScaler, and PCA (JAX-backed).
+
+jax is imported lazily (only ``PCA.fit`` needs it): this module sits on the
+fleet collector's import path via ``repro.data.campaign``, and collector
+processes — spawned once per cycle per shard — should not pay jax's import
+cost just to run I/O benchmarks."""
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
@@ -122,6 +126,8 @@ class PCA:
         self.mean_ = None
 
     def fit(self, X: np.ndarray):
+        import jax.numpy as jnp  # deferred: see module docstring
+
         X = jnp.asarray(np.asarray(X, np.float64))
         self.mean_ = np.asarray(X.mean(axis=0))
         Xc = X - X.mean(axis=0)

@@ -19,6 +19,7 @@ CLI::
     python -m repro.data.campaign run --campaign paper_core --fast
     python -m repro.data.campaign resume --campaign extended --shard 0/4
     python -m repro.data.campaign summarize --out /tmp/repro_io/campaigns/extended.jsonl
+    python -m repro.data.campaign merge shard0.jsonl shard1.jsonl --out merged.jsonl
 
 The JSONL record schema is documented in ``docs/benchmark-matrix.md``.
 """
@@ -59,6 +60,9 @@ __all__ = [
     "shard_cases",
     "merge_records",
     "merge_files",
+    "canonical_records",
+    "case_index",
+    "CANONICAL_VOLATILE_KEYS",
     "summarize",
     "format_summary",
     "simulated_compute",
@@ -493,15 +497,78 @@ def merge_records(records: Iterable[dict]) -> List[dict]:
     return list(latest.values())
 
 
+# Per-record provenance that varies run to run (wall time) or with the
+# collection topology (which shard/host/process executed the case).  The
+# canonical dataset strips these so its bytes depend only on *what was
+# measured*, never on *who measured it* — the full provenance stays in the
+# per-shard files and the fleet/loop state logs.
+CANONICAL_VOLATILE_KEYS = ("elapsed_s", "shard", "host", "git", "collector")
+
+
+def case_index(campaign: Union[str, Campaign], fast: bool = False) -> Dict[str, int]:
+    """``case_id -> position`` in the campaign's declared case order — the
+    sort key that lets :func:`canonical_records` reconstruct single-host
+    execution order from arbitrarily sharded collections."""
+    camp = get_campaign(campaign) if isinstance(campaign, str) else campaign
+    return {c.id: i for i, c in enumerate(camp.cases(fast))}
+
+
+def canonical_records(
+    records: Iterable[dict], index: Dict[str, int]
+) -> List[dict]:
+    """Topology-independent view of a record set: dedup latest-wins by
+    ``(case_id, rep, seed)``, order by ``(seed window, case position, rep)``,
+    and strip :data:`CANONICAL_VOLATILE_KEYS`.
+
+    ``seed - rep`` recovers the campaign pass's base seed (rep ``r`` executes
+    with ``seed + r``), so the sort key ``(seed - rep, case position, rep)``
+    is exactly the order a single uninterrupted host would have executed the
+    cases in.  With a deterministic executor this makes the serialized
+    dataset **byte-identical no matter how many collectors produced it** —
+    the invariant the fleet layer (``repro.service.fleet``) is built on.
+
+    Unlike the positional ``merge_records``, duplicates here resolve
+    status-aware: a success is never shadowed by an error record for the same
+    key.  Resume semantics only ever re-run keys that never succeeded, so any
+    error duplicated against an ``ok`` is by construction stale — but after a
+    fleet is re-sharded mid-cycle (``--collectors`` changed under a killed
+    coordinator), the stale error can sit in a *later-sorted* shard file than
+    the success, and input order alone would pick the wrong record.
+    """
+    latest: Dict[tuple, dict] = {}
+    for r in records:
+        key = (r.get("case_id"), r.get("rep", 0), r.get("seed", 0))
+        prev = latest.get(key)
+        if prev is not None and prev.get("status") == "ok" and r.get("status") != "ok":
+            continue  # stale failure never supersedes a success
+        latest[key] = r
+    merged = list(latest.values())
+    merged.sort(key=lambda r: (
+        r.get("seed", 0) - r.get("rep", 0),
+        index.get(r.get("case_id"), len(index)),
+        r.get("rep", 0),
+    ))
+    return [{k: v for k, v in r.items() if k not in CANONICAL_VOLATILE_KEYS}
+            for r in merged]
+
+
 def merge_files(
-    inputs: Sequence[pathlib.Path], out_path: pathlib.Path
+    inputs: Sequence[pathlib.Path],
+    out_path: pathlib.Path,
+    index: Optional[Dict[str, int]] = None,
 ) -> Tuple[int, List[dict]]:
     """Merge + dedup sharded JSONL result files (multi-host ``--shard h/H``
-    runs) into one file.  Returns (n_read, merged_records)."""
+    runs) into one file.  Returns (n_read, merged_records).
+
+    With ``index`` (from :func:`case_index`) the output is *canonicalized*
+    via :func:`canonical_records`: stable order and stable bytes regardless
+    of how the inputs were sharded.  Without it, records keep first-seen
+    order and full provenance (the standalone ``merge`` CLI behavior)."""
     records: List[dict] = []
     for p in inputs:
         records.extend(load_records(p))
-    merged = merge_records(records)
+    merged = (canonical_records(records, index) if index is not None
+              else merge_records(records))
     out_path = pathlib.Path(out_path)
     out_path.parent.mkdir(parents=True, exist_ok=True)
     tmp = out_path.with_suffix(out_path.suffix + ".tmp")

@@ -312,3 +312,35 @@ def extended(fast: bool = False) -> List[BenchCase]:
         for t in (1, 2, 4, 8, 16)
     ]
     return ra + pl + cc
+
+
+@register_campaign(
+    "fleet_probe",
+    "simulated-network I/O probe sized for fleet scaling runs",
+)
+def fleet_probe(fast: bool = False) -> List[BenchCase]:
+    """Random-access cases on the *simulated* network/object backends only.
+
+    Per-case wall time here is dominated by the simulators' calibrated
+    latency/bandwidth waits rather than CPU, mirroring the fleet's real
+    target (network/object storage, where collection time is I/O wait) — so
+    rows-per-wallclock scales with collector count even on small CI boxes.
+    The ``fleet`` bench group runs this campaign at 1/2/4 collectors and
+    commits the scaling curve to ``BENCH_fleet.json``."""
+    tags = ("fleet-probe",)
+    if fast:
+        combos = [("network_sim", 300, 4), ("object_sim", 120, 4)]
+    else:
+        # object_sim first, network_sim second: positional sharding then
+        # deals every collector one slow and one fast case alike
+        combos = [
+            ("object_sim", 200, 4), ("object_sim", 200, 16),
+            ("object_sim", 150, 64), ("object_sim", 100, 256),
+            ("network_sim", 400, 4), ("network_sim", 400, 16),
+            ("network_sim", 300, 64), ("network_sim", 300, 256),
+        ]
+    return [
+        BenchCase(id=f"fp-{b}-n{n}-k{kb}", bench_type="io_random", backend=b,
+                  block_kb=kb, file_size_mb=4, n_samples=n, tags=tags)
+        for b, n, kb in combos
+    ]

@@ -1,10 +1,14 @@
 """repro.service — the continuous tuning loop: collect -> merge -> refit ->
-re-recommend, run as a resumable service (``python -m repro.service.loop``).
+re-recommend, run as a resumable service (``python -m repro.service.loop``),
+and its multi-host collection fleet (``python -m repro.service.fleet``).
 
 Converts the standalone campaign runner (``repro.data.campaign``), the
 dataset merge CLI, and the ``OnlineAutotuner`` into one end-to-end system
 that keeps growing the observation dataset and keeps the recommendation
-fresh — the paper's "days -> minutes" claim, closed into a loop.
+fresh — the paper's "days -> minutes" claim, closed into a loop.  The fleet
+layer fans each cycle's collection out over leased campaign shards while
+guaranteeing the merged dataset stays byte-identical to a single-host run
+(see ``docs/fleet.md``).
 
 Submodules are imported lazily so ``python -m repro.service.loop`` doesn't
 trigger runpy's double-import warning.
@@ -14,18 +18,27 @@ __all__ = [
     "ContinuousTuningLoop",
     "LoopConfig",
     "DEFAULT_LOOP_DIR",
+    "FleetConfig",
+    "FleetCoordinator",
+    "DEFAULT_FLEET_DIR",
     "LoopState",
+    "FleetLog",
     "STATE_SCHEMA_VERSION",
 ]
 
 _LOOP = ("ContinuousTuningLoop", "LoopConfig", "DEFAULT_LOOP_DIR", "main")
-_STATE = ("LoopState", "STATE_SCHEMA_VERSION")
+_FLEET = ("FleetConfig", "FleetCoordinator", "DEFAULT_FLEET_DIR",
+          "run_collector", "collector_shard_path", "synthetic_executor")
+_STATE = ("LoopState", "FleetLog", "STATE_SCHEMA_VERSION")
 
 
 def __getattr__(name: str):
     if name in _LOOP:
         from . import loop
         return getattr(loop, name)
+    if name in _FLEET:
+        from . import fleet
+        return getattr(fleet, name)
     if name in _STATE:
         from . import state
         return getattr(state, name)

@@ -1,0 +1,96 @@
+"""Shared argparse definitions for the service CLIs (loop + fleet).
+
+Import-light on purpose: the fleet's collector role parses the full fleet
+parser at startup, and that path must not touch the jax model stack (see
+``fleet.py``).  Keeping every flag defined exactly once here is also what
+prevents the coordinator's spawn argv from drifting away from what a worker
+accepts — a worker rejecting its own spawn arguments would read as a crash
+and burn through lease attempts."""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+__all__ = ["add_tuning_args", "add_fleet_args", "parse_shard"]
+
+
+def add_tuning_args(ap: argparse.ArgumentParser) -> None:
+    """Install the flags shared by the single-host loop and the fleet
+    coordinator CLIs (``python -m repro.service.loop`` / ``.fleet``)."""
+    ap.add_argument("--campaign", default="paper_core",
+                    help="registered campaign name (see repro.data.campaign list)")
+    ap.add_argument("--cycles", type=int, default=3,
+                    help="total cycles the state file targets")
+    ap.add_argument("--max-cycles", type=int, default=None,
+                    help="run at most N cycles this invocation (kill/resume testing)")
+    ap.add_argument("--seeds-per-cycle", type=int, default=1,
+                    help="campaign passes per cycle (rows added = cases x this)")
+    ap.add_argument("--base-seed", type=int, default=1000,
+                    help="first seed of cycle 0's window")
+    ap.add_argument("--fast", action="store_true", help="CI-sized campaign subsets")
+    ap.add_argument("--model", default="xgboost",
+                    help="predictor model key (default: xgboost)")
+    ap.add_argument("--top-k", type=int, default=5,
+                    help="configs kept in each cycle's ranked() report")
+    ap.add_argument("--refit-every", type=int, default=20,
+                    help="observations between scheduled refits")
+    ap.add_argument("--min-observations", type=int, default=24,
+                    help="observations required before the first fit")
+    ap.add_argument("--gain-threshold", type=float, default=0.10,
+                    help="predicted gain needed to adopt a proposal")
+    ap.add_argument("--drift-threshold", type=float, default=0.5,
+                    help="median relative error on new rows that forces a refit")
+    ap.add_argument("--status", action="store_true",
+                    help="print the cycle log (with per-host provenance) and exit")
+    ap.add_argument("--force", action="store_true",
+                    help="discard state + shards and start over")
+
+
+def parse_shard(s: str):
+    try:
+        h, n = s.split("/")
+        return int(h), int(n)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"--shard wants 'i/N', got {s!r}") from None
+
+
+def add_fleet_args(ap: argparse.ArgumentParser,
+                   default_out_dir: pathlib.Path) -> None:
+    """The fleet CLI's own flags (coordinator supervision + collector role).
+
+    One definition serves both roles, so everything the coordinator forwards
+    to a spawned worker is a flag the worker's parser accepts by construction."""
+    ap.add_argument("--role", choices=("coordinator", "collector"),
+                    default="coordinator",
+                    help="coordinator supervises a full fleet run; collector "
+                         "is the internal per-shard worker entry")
+    ap.add_argument("--out-dir", type=pathlib.Path, default=default_out_dir,
+                    help="shared state + shard directory (resume key)")
+    ap.add_argument("--collectors", type=int, default=2,
+                    help="collector worker processes (= campaign shards)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
+                    help="seconds of heartbeat silence before a live worker "
+                         "is declared stale (dead/frozen process) and its "
+                         "shard re-leased")
+    ap.add_argument("--heartbeat-every", type=float, default=5.0,
+                    help="collector liveness-tick cadence, seconds (ticks "
+                         "continue during long-running cases)")
+    ap.add_argument("--poll-interval", type=float, default=0.2,
+                    help="coordinator supervision poll cadence, seconds")
+    ap.add_argument("--max-leases", type=int, default=3,
+                    help="lease attempts per shard per cycle before giving up")
+    ap.add_argument("--executor", choices=("real", "synthetic"), default="real",
+                    help="synthetic = deterministic dry-run rows, no storage "
+                         "I/O (fleet plumbing tests and demos)")
+    ap.add_argument("--sleep-per-case", type=float, default=0.0,
+                    help="pacing sleep before each case, seconds (scaling "
+                         "experiments and kill/recovery tests)")
+    ap.add_argument("--cycle", type=int, default=None,
+                    help="collector role: cycle index being collected")
+    ap.add_argument("--shard", type=parse_shard, default=None, metavar="i/N",
+                    help="collector role: leased shard i of N")
+    ap.add_argument("--seeds", type=int, nargs="+", default=None,
+                    help="collector role: explicit seed window for the cycle")
+    ap.add_argument("--attempt", type=int, default=0,
+                    help="collector role: lease attempt index (internal)")

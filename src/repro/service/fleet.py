@@ -1,0 +1,280 @@
+"""Multi-host collection fleet for the continuous tuning loop.
+
+The single-host loop (``repro.service.loop``) grows the dataset one campaign
+pass per cycle — fine for CI, too slow for the paper's "days -> minutes"
+claim at fleet scale.  This module fans the *collect* step of each cycle out
+over N **collector** processes while keeping the cycle tail (merge -> refit
+-> re-recommend) on one **coordinator**, exactly once per cycle:
+
+- The coordinator partitions the campaign with the positional ``--shard h/H``
+  slicing collection has used since PR 1 (disjoint and complete), and
+  *leases* shard ``i`` to collector ``i``.
+- Each collector is a separate process (``--role collector --shard i/N``)
+  appending to its own ``shards/host_<i>/cycle_<c>.jsonl`` — no two writers
+  ever touch one file — and heartbeating into the shared ``fleet_state.jsonl``.
+- The coordinator watches worker exit codes and heartbeat ages; a crashed
+  (``kill -9``) or stalled collector gets its shard **re-leased**: campaign
+  resume keys ``(case_id, rep, seed)`` mean the replacement re-runs only the
+  cases the dead worker never finished.
+- After every shard completes, the coordinator merges all shard files into
+  the canonical ``merged.jsonl`` and runs refit + re-recommend — the
+  ``ContinuousTuningLoop`` cycle tail, unchanged.
+
+**The invariant this layer preserves:** the merged dataset after cycle ``c``
+is *byte-identical* no matter how many collectors ran it (and identical to a
+single-host ``repro.service.loop`` run), because the canonical merge orders
+records by ``(seed window, campaign case position, rep)`` and strips
+collection-topology provenance (``campaign.canonical_records``).  Tests
+assert this for 1/2/4 collectors and across ``kill -9`` + re-lease
+(``tests/test_fleet.py``); ``docs/fleet.md`` documents it.
+
+This module stays import-light on purpose: the collector role needs only the
+campaign runner (numpy), not the jax model stack, and collectors are spawned
+once per cycle per shard — their interpreter startup is fleet overhead.  The
+coordinator half (which does need the full loop) lives in ``_coordinator.py``
+and loads lazily.
+
+CLI::
+
+    python -m repro.service.fleet --collectors 4 --fast      # coordinator
+    python -m repro.service.fleet --status                   # audit log
+    python -m repro.service.fleet --collectors 4 --executor synthetic  # dry run
+
+    # internal, spawned by the coordinator (one per leased shard):
+    python -m repro.service.fleet --role collector --cycle 0 --shard 1/4 ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import socket
+import sys
+import threading
+import time
+import zlib
+from typing import Callable, List, Optional, Sequence
+
+from ..data.campaign import run_campaign_batch
+from ._cli import add_fleet_args, add_tuning_args
+from .state import FleetLog
+
+__all__ = [
+    "DEFAULT_FLEET_DIR",
+    "CollectorConfig",
+    "FleetConfig",
+    "FleetCoordinator",
+    "run_collector",
+    "collector_shard_path",
+    "synthetic_executor",
+    "main",
+]
+
+DEFAULT_FLEET_DIR = pathlib.Path("/tmp/repro_io/fleet")
+
+_COORDINATOR_NAMES = ("FleetConfig", "FleetCoordinator")
+
+
+def __getattr__(name: str):
+    # the coordinator half needs the model stack; collectors never touch it
+    if name in _COORDINATOR_NAMES:
+        from . import _coordinator
+        return getattr(_coordinator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+@dataclasses.dataclass
+class CollectorConfig:
+    """The slice of ``FleetConfig`` a collector process needs.
+
+    Deliberately free of ``LoopConfig``/model-stack types so constructing it
+    (the ``--role collector`` hot path) stays jax-free."""
+
+    campaign: str
+    out_dir: pathlib.Path
+    collectors: int
+    fast: bool = False
+    base_seed: int = 1000
+    seed_stride: int = 100
+    seeds_per_cycle: int = 1
+    executor_kind: str = "real"   # "real" I/O or "synthetic" dry-run rows
+    sleep_per_case: float = 0.0   # pacing sleep (scaling experiments/tests)
+    heartbeat_every_s: float = 5.0  # liveness tick cadence while collecting
+
+
+def collector_shard_path(out_dir, shard: int, cycle: int) -> pathlib.Path:
+    """Collector ``shard``'s private JSONL for ``cycle`` — one writer per file."""
+    return pathlib.Path(out_dir) / "shards" / f"host_{shard}" / f"cycle_{cycle:04d}.jsonl"
+
+
+def synthetic_executor(case, ctx, seed: int) -> dict:
+    """Deterministic dry-run measurement (no storage I/O).
+
+    A fixed performance model of the knob axes plus seed/case-keyed jitter
+    (crc32, not ``hash()``, so rows are stable across processes regardless of
+    ``PYTHONHASHSEED``).  This is what makes fleet plumbing testable: any
+    collector topology must reproduce these rows byte-for-byte."""
+    from ..core.features import TARGET_NAME
+
+    w = case.num_workers
+    b = case.batch_size or 64
+    thr = 80.0 * (1 + 0.9 * w ** 0.7) * (1 + 0.15 * (case.prefetch_depth - 1))
+    thr *= (b / 64.0) ** 0.2 * (1 + 0.1 * (case.n_threads - 1))
+    jitter = (seed * 2654435761 + zlib.crc32(case.id.encode())) % 97 - 48
+    thr *= 1 + 0.02 * jitter / 48.0
+    return {
+        TARGET_NAME: thr, "batch_size": b, "num_workers": w,
+        "block_kb": case.block_kb, "file_size_mb": case.file_size_mb or 8.0,
+        "n_samples": case.n_samples, "n_threads": case.n_threads,
+        "bench_type": case.bench_type, "backend": case.backend,
+    }
+
+
+def _configured_executor(cfg, executor: Optional[Callable]) -> Optional[Callable]:
+    """Resolve the case executor from config: injected > synthetic > real,
+    with the optional per-case pacing sleep wrapped around it."""
+    base = executor
+    if base is None and cfg.executor_kind == "synthetic":
+        base = synthetic_executor
+    if cfg.sleep_per_case > 0:
+        from ..data.campaign import run_case
+        inner = base or run_case
+
+        def paced(case, ctx, seed):
+            time.sleep(cfg.sleep_per_case)
+            return inner(case, ctx, seed)
+        return paced
+    return base
+
+
+def run_collector(
+    cfg,
+    cycle: int,
+    shard: int,
+    seeds: Optional[Sequence[int]] = None,
+    executor: Optional[Callable] = None,
+    progress: Optional[Callable[[str], None]] = None,
+    max_cases: Optional[int] = None,
+    attempt: int = 0,
+) -> List:
+    """Collect one leased shard of one cycle (the ``--role collector`` entry).
+
+    ``cfg`` is a :class:`CollectorConfig` or :class:`FleetConfig` (duck-typed
+    on the collection fields).  Appends campaign records to this shard's
+    private file and heartbeat records (``start`` / per-case / ``shard_done``)
+    to the shared fleet log; every record carries the lease ``attempt`` so the
+    coordinator can tell this attempt's progress and completion from an
+    earlier crashed one's.  The ``shard_done`` record — not the process exit
+    code — is what marks the shard complete: case failures are recorded data
+    (resume keys re-run them later), not worker crashes.  Re-running after a
+    crash resumes case-by-case via campaign resume keys.  ``max_cases`` stops
+    after that many executions *without* a ``shard_done`` record — the tests'
+    deterministic stand-in for a mid-shard ``kill -9``."""
+    log = FleetLog(pathlib.Path(cfg.out_dir) / "fleet_state.jsonl")
+    out = collector_shard_path(cfg.out_dir, shard, cycle)
+    if seeds is None:
+        start = cfg.base_seed + cycle * cfg.seed_stride
+        seeds = list(range(start, start + cfg.seeds_per_cycle))
+    host = socket.gethostname()
+    exec_fn = _configured_executor(cfg, executor)
+    n_done = 0
+
+    def on_record(record: dict) -> None:
+        nonlocal n_done
+        n_done += 1
+        log.append({"type": "heartbeat", "event": "case", "cycle": cycle,
+                    "shard": shard, "attempt": attempt, "n_done": n_done,
+                    "host": host})
+
+    log.append({"type": "heartbeat", "event": "start", "cycle": cycle,
+                "shard": shard, "attempt": attempt, "n_done": 0, "host": host})
+    # Liveness ticks on a timer thread, independent of case completion: a
+    # single slow case (minutes of network/object I/O) must not read as a
+    # stale worker.  What staleness then detects is a dead or frozen
+    # *process* (kill -9, OOM, SIGSTOP, dead machine) — exit codes catch
+    # clean crashes faster, this catches the rest.
+    every = getattr(cfg, "heartbeat_every_s", 5.0)
+    stop_ticks = threading.Event()
+
+    def _tick():
+        while not stop_ticks.wait(every):
+            log.append({"type": "heartbeat", "event": "tick", "cycle": cycle,
+                        "shard": shard, "attempt": attempt, "n_done": n_done,
+                        "host": host})
+
+    ticker = threading.Thread(target=_tick, daemon=True)
+    ticker.start()
+    try:
+        results = run_campaign_batch(
+            cfg.campaign, out, seeds, fast=cfg.fast,
+            shard=(shard, cfg.collectors), max_cases=max_cases,
+            executor=exec_fn, progress=progress, on_record=on_record,
+        )
+    finally:
+        stop_ticks.set()
+        ticker.join(timeout=2)
+    if max_cases is None:  # a simulated kill dies before reporting completion
+        log.append({
+            "type": "shard_done", "cycle": cycle, "shard": shard,
+            "attempt": attempt,
+            "n_executed": sum(r.n_executed for r in results),
+            "n_failures": sum(len(r.failures) for r in results),
+            "n_skipped": sum(r.skipped for r in results),
+            "host": host,
+        })
+    return results
+
+
+# ---------------------------------------------------------------- CLI
+
+def build_parser() -> argparse.ArgumentParser:
+    """One parser for both roles — every flag is defined exactly once in
+    ``_cli.py``, so the coordinator's spawn argv cannot drift from what a
+    worker accepts, and parsing stays import-light for the collector role."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service.fleet",
+        description="Multi-host collection fleet: a coordinator leases "
+                    "campaign shards to collector processes, re-leases on "
+                    "crash/stall, and runs the merge -> refit -> re-recommend "
+                    "cycle tail exactly once per cycle.",
+    )
+    add_tuning_args(ap)
+    add_fleet_args(ap, default_out_dir=DEFAULT_FLEET_DIR)
+    return ap
+
+
+def _collector_main(args: argparse.Namespace,
+                    ap: argparse.ArgumentParser) -> int:
+    if args.cycle is None or args.shard is None:
+        ap.error("--role collector requires --cycle and --shard i/N")
+    shard, n = args.shard
+    cfg = CollectorConfig(
+        campaign=args.campaign, out_dir=args.out_dir, collectors=n,
+        fast=args.fast, base_seed=args.base_seed,
+        seeds_per_cycle=args.seeds_per_cycle,
+        executor_kind=args.executor, sleep_per_case=args.sleep_per_case,
+        heartbeat_every_s=args.heartbeat_every,
+    )
+    results = run_collector(cfg, args.cycle, shard, seeds=args.seeds,
+                            attempt=args.attempt,
+                            progress=lambda m: print(m, flush=True))
+    # non-zero only informs a human caller: the coordinator keys completion
+    # on the shard_done record, so recorded case failures never read as a
+    # worker crash (they re-run via resume/repair, like the single-host loop)
+    return 1 if any(r.failures for r in results) else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.role == "collector":
+        return _collector_main(args, ap)
+    # only the coordinator needs the loop/model stack — imported on demand
+    # so collector startup (per cycle per shard) stays jax-free
+    from ._coordinator import coordinator_main
+    return coordinator_main(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,11 @@ CLI::
     python -m repro.service.loop --fast --cycles 6       # grow further
     python -m repro.service.loop --status                # audit cycle log
     python -m repro.service.loop --force --fast          # start over
+
+To run the *collect* step on many processes/hosts at once, see the fleet
+coordinator (``python -m repro.service.fleet``, ``docs/fleet.md``): it reuses
+this module's cycle tail (merge -> refit -> re-recommend) unchanged while
+fanning collection out over leased campaign shards.
 """
 
 from __future__ import annotations
@@ -47,17 +52,20 @@ from ..core.features import TARGET_NAME
 from ..data.campaign import (
     RunContext,
     RunResult,
+    canonical_records,
+    case_index,
     completed_keys,
     load_records,
     merge_files,
-    merge_records,
     rows_from_records,
     run_campaign_batch,
 )
 from ..data.registry import Campaign
+from ._cli import add_tuning_args
 from .state import STATE_SCHEMA_VERSION, LoopState
 
-__all__ = ["LoopConfig", "ContinuousTuningLoop", "main", "DEFAULT_LOOP_DIR"]
+__all__ = ["LoopConfig", "ContinuousTuningLoop", "main", "DEFAULT_LOOP_DIR",
+           "add_tuning_args", "config_kwargs_from_args"]
 
 DEFAULT_LOOP_DIR = pathlib.Path("/tmp/repro_io/loop")
 
@@ -112,6 +120,7 @@ class ContinuousTuningLoop:
         self._executor = executor
         self._progress = progress
         self._ctx = RunContext()
+        self._case_order: Optional[dict] = None  # case_id -> campaign position
         self.tuner = OnlineAutotuner(
             space=cfg.space,
             refit_every=cfg.refit_every,
@@ -135,9 +144,27 @@ class ContinuousTuningLoop:
         return self.shards_dir / f"cycle_{cycle:04d}.jsonl"
 
     def _shard_files(self) -> List[pathlib.Path]:
-        # sorted == cycle order == collection order, so the merged record
-        # order (and therefore the refit) matches a straight-through run
-        return sorted(self.shards_dir.glob("cycle_*.jsonl"))
+        # both layouts: flat per-cycle files (single host) and per-host
+        # subdirectories (fleet collectors); the canonical merge makes the
+        # result independent of which produced them
+        return (sorted(self.shards_dir.glob("cycle_*.jsonl"))
+                + sorted(self.shards_dir.glob("host_*/cycle_*.jsonl")))
+
+    def _cycle_shard_files(self, cycle: int) -> List[pathlib.Path]:
+        """Every shard file holding cycle ``cycle``'s records, either layout."""
+        name = f"cycle_{cycle:04d}.jsonl"
+        paths = [self.shards_dir / name] + sorted(self.shards_dir.glob(f"host_*/{name}"))
+        return [p for p in paths if p.exists()]
+
+    def _repair_specs(self, cycle: int) -> List[tuple]:
+        """(shard_file, (h, H)) pairs to re-run failed cases against — the
+        shard spec must match collection so resume keys line up."""
+        return [(self._shard_path(cycle), (0, 1))]
+
+    def _case_positions(self) -> dict:
+        if self._case_order is None:
+            self._case_order = case_index(self.cfg.campaign, self.cfg.fast)
+        return self._case_order
 
     def _default_config(self) -> dict:
         return {k: getattr(self.cfg.space, k)[0] for k in KNOB_NAMES}
@@ -150,7 +177,8 @@ class ContinuousTuningLoop:
         shards = self._shard_files()
         if not shards:
             return []
-        _, merged = merge_files(shards, self.merged_path)
+        _, merged = merge_files(shards, self.merged_path,
+                                index=self._case_positions())
         return merged
 
     def _repair_shards(self, upto: int) -> int:
@@ -162,24 +190,24 @@ class ContinuousTuningLoop:
         permanently short.  Returns the number of cases re-executed."""
         n = 0
         for cycle in range(upto):
-            shard = self._shard_path(cycle)
-            if not shard.exists():
-                continue
-            records = load_records(shard)
-            done = completed_keys(records)
-            unresolved = any(
-                r.get("status") == "error"
-                and (r.get("case_id"), r.get("rep", 0), r.get("seed", 0)) not in done
-                for r in records
-            )
-            if not unresolved:
-                continue
-            results = run_campaign_batch(
-                self.cfg.campaign, shard, self._cycle_seeds(cycle),
-                fast=self.cfg.fast, ctx=self._ctx, executor=self._executor,
-                progress=self._progress,
-            )
-            n += sum(r.n_executed for r in results)
+            for shard, shard_spec in self._repair_specs(cycle):
+                if not shard.exists():
+                    continue
+                records = load_records(shard)
+                done = completed_keys(records)
+                unresolved = any(
+                    r.get("status") == "error"
+                    and (r.get("case_id"), r.get("rep", 0), r.get("seed", 0)) not in done
+                    for r in records
+                )
+                if not unresolved:
+                    continue
+                results = run_campaign_batch(
+                    self.cfg.campaign, shard, self._cycle_seeds(cycle),
+                    fast=self.cfg.fast, shard=shard_spec, ctx=self._ctx,
+                    executor=self._executor, progress=self._progress,
+                )
+                n += sum(r.n_executed for r in results)
         if n:
             self._log(f"repair: re-ran {n} previously failed case(s)")
         return n
@@ -195,10 +223,14 @@ class ContinuousTuningLoop:
         cold-start exploration sequence continues instead of restarting."""
         n = 0
         for cycle in range(upto):
-            shard = self._shard_path(cycle)
-            if not shard.exists():
+            records = [r for p in self._cycle_shard_files(cycle)
+                       for r in load_records(p)]
+            if not records:
                 continue
-            n += self.tuner.ingest_records(merge_records(load_records(shard)))
+            # canonical order == single-host execution order, so the replay
+            # is identical no matter how many collectors produced the cycle
+            n += self.tuner.ingest_records(
+                canonical_records(records, self._case_positions()))
             self.tuner.maybe_refit()
         for rec in self.state.cycles():
             decision = rec.get("decision") or {}
@@ -226,12 +258,13 @@ class ContinuousTuningLoop:
         }
 
     # ------------------------------------------------------------------
-    def run_cycle(self, cycle: int, current_config: dict) -> dict:
-        """One full collect -> merge -> refit -> re-recommend cycle."""
-        t_cycle = time.perf_counter()
-        seeds = self._cycle_seeds(cycle)
+    def _collect(self, cycle: int, seeds: List[int]) -> dict:
+        """Collect this cycle's observations; returns collection stats.
 
-        # 1. collect: this cycle's shard file; killed runs resume per case
+        The single-host implementation runs the whole campaign into one flat
+        shard file.  ``FleetCoordinator`` overrides this to lease campaign
+        shards to collector processes (``docs/fleet.md``); everything after
+        collection — merge, refit, re-recommend — is shared."""
         results: List[RunResult] = run_campaign_batch(
             self.cfg.campaign, self._shard_path(cycle), seeds,
             fast=self.cfg.fast, ctx=self._ctx, executor=self._executor,
@@ -239,6 +272,26 @@ class ContinuousTuningLoop:
         )
         n_executed = sum(r.n_executed for r in results)
         n_failures = sum(len(r.failures) for r in results)
+        return {
+            "n_executed": n_executed,
+            "n_failures": n_failures,
+            "collectors": 1,
+            "releases": 0,
+            "hosts": {"host_0": {"host": self._ctx.host,
+                                 "n_executed": n_executed,
+                                 "n_failures": n_failures,
+                                 "releases": 0}},
+        }
+
+    def run_cycle(self, cycle: int, current_config: dict) -> dict:
+        """One full collect -> merge -> refit -> re-recommend cycle."""
+        t_cycle = time.perf_counter()
+        seeds = self._cycle_seeds(cycle)
+
+        # 1. collect: this cycle's shard file(s); killed runs resume per case
+        collect = self._collect(cycle, seeds)
+        n_executed = collect["n_executed"]
+        n_failures = collect["n_failures"]
 
         # 2. merge: all shards -> the canonical deduplicated dataset
         merged = self._merge()
@@ -291,6 +344,9 @@ class ContinuousTuningLoop:
             "seeds": seeds,
             "n_executed": n_executed,
             "n_failures": n_failures,
+            "collectors": collect["collectors"],
+            "releases": collect["releases"],
+            "hosts": collect["hosts"],
             "n_records_merged": len(merged),
             "n_new_rows": n_new,
             "n_observations": self.tuner.n_observations,
@@ -344,8 +400,8 @@ class ContinuousTuningLoop:
 def _format_status(cycles: List[dict]) -> str:
     if not cycles:
         return "no completed cycles"
-    hdr = (f"{'cycle':>5s} {'rows':>6s} {'new':>5s} {'refit':>5s} {'drift':>7s} "
-           f"{'refit_ms':>8s} {'rec_ms':>7s} {'gain':>7s} {'config':s}")
+    hdr = (f"{'cycle':>5s} {'rows':>6s} {'new':>5s} {'hosts':>6s} {'refit':>5s} "
+           f"{'drift':>7s} {'refit_ms':>8s} {'rec_ms':>7s} {'gain':>7s} {'config':s}")
     lines = [hdr, "-" * len(hdr)]
     for r in cycles:
         drift = r.get("drift")
@@ -353,43 +409,45 @@ def _format_status(cycles: List[dict]) -> str:
         abbrev = {"batch_size": "bs", "num_workers": "w", "block_kb": "kb",
                   "n_threads": "t", "prefetch_depth": "pf"}
         cfg_s = ",".join(f"{abbrev.get(k, k)}{v}" for k, v in cfg.items())
+        hosts_s = str(r.get("collectors", 1))
+        if r.get("releases"):
+            hosts_s += f"+{r['releases']}r"  # shards re-leased after a crash
         lines.append(
             f"{r['cycle']:>5d} {r['n_observations']:>6d} {r['n_new_rows']:>5d} "
+            f"{hosts_s:>6s} "
             f"{str(r['refit']):>5s} {'n/a' if drift is None else f'{drift:.2f}':>7s} "
             f"{r['refit_s'] * 1e3:>8.1f} {r['recommend_s'] * 1e3:>7.1f} "
             f"{r['decision']['predicted_gain']:>+6.0%} {cfg_s}"
         )
+    # per-host provenance aggregated over the cycle log (schema v2; v1
+    # records are upgraded by LoopState so this renders for old files too)
+    agg: dict = {}
+    for r in cycles:
+        for slot, h in (r.get("hosts") or {}).items():
+            a = agg.setdefault(slot, {"host": h.get("host", ""),
+                                      "n_executed": 0, "n_failures": 0,
+                                      "releases": 0})
+            a["host"] = h.get("host", "") or a["host"]
+            a["n_executed"] += int(h.get("n_executed", 0))
+            a["n_failures"] += int(h.get("n_failures", 0))
+            a["releases"] += int(h.get("releases", 0))
+    if agg:
+        lines.append("per-host provenance:")
+        # numeric-aware: host_10 sorts after host_9, not after host_1
+        def slot_key(s):
+            tail = s.rsplit("_", 1)[-1]
+            return (0, int(tail)) if tail.isdigit() else (1, tail)
+        for slot in sorted(agg, key=slot_key):
+            a = agg[slot]
+            lines.append(f"  {slot}: host={a['host'] or '?'} "
+                         f"executed={a['n_executed']} failures={a['n_failures']} "
+                         f"releases={a['releases']}")
     return "\n".join(lines)
 
 
-def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.service.loop",
-        description="Continuous collect -> merge -> refit -> re-recommend "
-                    "tuning loop (resumable).",
-    )
-    ap.add_argument("--campaign", default="paper_core")
-    ap.add_argument("--cycles", type=int, default=3,
-                    help="total cycles the state file targets")
-    ap.add_argument("--max-cycles", type=int, default=None,
-                    help="run at most N cycles this invocation (kill/resume testing)")
-    ap.add_argument("--seeds-per-cycle", type=int, default=1)
-    ap.add_argument("--base-seed", type=int, default=1000)
-    ap.add_argument("--fast", action="store_true", help="CI-sized campaign subsets")
-    ap.add_argument("--out-dir", type=pathlib.Path, default=DEFAULT_LOOP_DIR)
-    ap.add_argument("--model", default="xgboost")
-    ap.add_argument("--top-k", type=int, default=5)
-    ap.add_argument("--refit-every", type=int, default=20)
-    ap.add_argument("--min-observations", type=int, default=24)
-    ap.add_argument("--gain-threshold", type=float, default=0.10)
-    ap.add_argument("--drift-threshold", type=float, default=0.5)
-    ap.add_argument("--status", action="store_true",
-                    help="print the cycle log and exit")
-    ap.add_argument("--force", action="store_true",
-                    help="discard state + shards and start over")
-    args = ap.parse_args(argv)
-
-    cfg = LoopConfig(
+def config_kwargs_from_args(args: argparse.Namespace) -> dict:
+    """LoopConfig keyword arguments from an ``add_tuning_args`` namespace."""
+    return dict(
         campaign=args.campaign, cycles=args.cycles,
         seeds_per_cycle=args.seeds_per_cycle, base_seed=args.base_seed,
         fast=args.fast, out_dir=args.out_dir, model=args.model,
@@ -398,6 +456,21 @@ def main(argv: Optional[List[str]] = None) -> int:
         gain_threshold=args.gain_threshold,
         drift_threshold=args.drift_threshold,
     )
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service.loop",
+        description="Continuous collect -> merge -> refit -> re-recommend "
+                    "tuning loop (resumable, single host; see "
+                    "repro.service.fleet for multi-collector runs).",
+    )
+    add_tuning_args(ap)
+    ap.add_argument("--out-dir", type=pathlib.Path, default=DEFAULT_LOOP_DIR,
+                    help="state + shard directory (resume key)")
+    args = ap.parse_args(argv)
+
+    cfg = LoopConfig(**config_kwargs_from_args(args))
     loop = ContinuousTuningLoop(cfg, progress=lambda m: print(f"[loop] {m}"))
 
     if args.status:

@@ -1,16 +1,17 @@
-"""Resumable per-cycle state for the continuous tuning loop.
+"""Resumable per-cycle state for the continuous tuning loop + the fleet's
+shared lease/heartbeat log.
 
 One JSONL line per *completed* cycle (the same durability model as the
 campaign runner: a killed loop loses at most the in-flight cycle, and its
 partially collected shard file resumes case-by-case anyway).  Each record
 carries the cycle's full provenance — seed window, dataset growth, refit and
-recommend latency, drift score, and the decision taken — so the state file
-doubles as the loop's audit log.
+recommend latency, drift score, per-host collection stats, and the decision
+taken — so the state file doubles as the loop's audit log.
 
-Record schema (``STATE_SCHEMA_VERSION = 1``)::
+Record schema (``STATE_SCHEMA_VERSION = 2``)::
 
     {
-      "schema_version": 1,
+      "schema_version": 2,
       "cycle": 0,                      # 0-based cycle index (the resume key)
       "status": "ok",
       "campaign": "paper_core",
@@ -18,6 +19,12 @@ Record schema (``STATE_SCHEMA_VERSION = 1``)::
       "seeds": [1000, 1001],           # the cycle's seed window
       "n_executed": 26,                # cases run this cycle (0 after resume)
       "n_failures": 0,
+      "collectors": 1,                 # collection processes (1 = single host)
+      "releases": 0,                   # shard re-leases after crash/stall
+      "hosts": {                       # per-host provenance, keyed by shard
+        "host_0": {"host": "box-a", "n_executed": 26, "n_failures": 0,
+                   "releases": 0}
+      },
       "n_records_merged": 52,          # records in merged.jsonl after merge
       "n_new_rows": 26,                # rows newly ingested by the autotuner
       "n_observations": 52,            # autotuner store size after ingest
@@ -34,21 +41,61 @@ Record schema (``STATE_SCHEMA_VERSION = 1``)::
       "host": "...", "timestamp": 1780000000.0
     }
 
+Version 1 records (pre-fleet) had no ``collectors``/``releases``/``hosts``;
+:func:`upgrade_record` synthesizes them from the flat ``host``/``n_executed``
+fields, so old ``loop_state.jsonl`` files keep resuming and rendering under
+the v2 readers — fleet and single-host cycles share one schema.
+
 ``LoopState`` dedups by cycle keeping the latest record, tolerating the
 torn-trailing-line artifacts of a killed writer (via the campaign loader).
+
+``FleetLog`` is the fleet's shared append-only JSONL (``fleet_state.jsonl``):
+the coordinator appends one ``lease`` record per shard lease, collectors
+append ``heartbeat`` records as they work and one ``shard_done`` at the end.
+Every write is one short ``O_APPEND`` line flushed in a single ``write()``
+call — on local POSIX filesystems (the shipped subprocess transport)
+concurrent appenders don't interleave within a line, and the reader skips
+any malformed line defensively.  Sharing the out-dir over NFS-style network
+filesystems is NOT safe for concurrent appends (``O_APPEND`` is not atomic
+there); a cross-machine transport should give each host its own log file or
+route records through the coordinator (see docs/fleet.md).
 """
 
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import threading
+import time
 from typing import Dict, List, Optional, Union
 
 from ..data.campaign import load_records
 
-__all__ = ["STATE_SCHEMA_VERSION", "LoopState"]
+__all__ = ["STATE_SCHEMA_VERSION", "LoopState", "FleetLog", "upgrade_record"]
 
-STATE_SCHEMA_VERSION = 1
+STATE_SCHEMA_VERSION = 2
+
+
+def upgrade_record(record: dict) -> dict:
+    """Migrate a cycle record to the current schema (no-op when current).
+
+    v1 -> v2: synthesize the per-host provenance block (``collectors``,
+    ``releases``, ``hosts``) from the flat single-host fields, so state files
+    written before the fleet subsystem keep working unmodified on disk."""
+    if record.get("schema_version", 1) >= STATE_SCHEMA_VERSION:
+        return record
+    record = dict(record)
+    record.setdefault("collectors", 1)
+    record.setdefault("releases", 0)
+    record.setdefault("hosts", {"host_0": {
+        "host": record.get("host", ""),
+        "n_executed": record.get("n_executed", 0),
+        "n_failures": record.get("n_failures", 0),
+        "releases": 0,
+    }})
+    record["schema_version"] = STATE_SCHEMA_VERSION
+    return record
 
 
 class LoopState:
@@ -59,11 +106,11 @@ class LoopState:
 
     def cycles(self) -> List[dict]:
         """Completed cycle records, deduplicated by cycle (latest wins),
-        ordered by cycle index."""
+        ordered by cycle index and migrated to the current schema."""
         latest: Dict[int, dict] = {}
         for r in load_records(self.path):
             if r.get("status") == "ok" and "cycle" in r:
-                latest[int(r["cycle"])] = r
+                latest[int(r["cycle"])] = upgrade_record(r)
         return [latest[c] for c in sorted(latest)]
 
     def next_cycle(self) -> int:
@@ -84,3 +131,93 @@ class LoopState:
         with open(self.path, "a") as f:
             f.write(json.dumps(record) + "\n")
             f.flush()
+
+
+class FleetLog:
+    """Shared lease/heartbeat JSONL for one fleet out-dir.
+
+    Multiple processes append concurrently (coordinator + every collector);
+    each record is one short ``O_APPEND`` line written in a single call,
+    which local POSIX filesystems keep un-interleaved (network filesystems
+    are not supported for concurrent appends — see the module docstring).
+    Reads are *incremental*: the coordinator polls this log
+    several times a second for the whole run, so each instance remembers its
+    file offset and parses only bytes appended since the last read (a
+    shrunken file — ``--force`` — resets the cache).  Only complete lines are
+    consumed, which also handles the torn trailing line a killed writer (or
+    an append racing this read) can leave."""
+
+    def __init__(self, path: Union[str, pathlib.Path]):
+        self.path = pathlib.Path(path)
+        self._lock = threading.Lock()
+        self._offset = 0
+        self._parsed: List[dict] = []
+        # (cycle, shard) -> newest heartbeat ts, maintained incrementally:
+        # the coordinator asks per live shard every poll tick, and scanning
+        # the whole log each time would grow quadratic over a long run
+        self._last_hb: dict = {}
+
+    def append(self, record: dict) -> dict:
+        record.setdefault("ts", time.time())
+        record.setdefault("pid", os.getpid())
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+            f.flush()
+        return record
+
+    def _refresh(self) -> None:
+        try:
+            size = os.path.getsize(self.path)
+        except OSError:
+            self._offset, self._parsed, self._last_hb = 0, [], {}
+            return
+        if size < self._offset:  # truncated/replaced: start over
+            self._offset, self._parsed, self._last_hb = 0, [], {}
+        if size == self._offset:
+            return
+        with open(self.path, "rb") as f:
+            f.seek(self._offset)
+            chunk = f.read()
+        end = chunk.rfind(b"\n")
+        if end < 0:  # no complete new line yet
+            return
+        self._offset += end + 1
+        for line in chunk[:end + 1].splitlines():
+            if not line.strip():
+                continue
+            try:
+                record = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # foreign corruption; skip like the campaign loader
+            self._parsed.append(record)
+            if record.get("type") == "heartbeat":
+                key = (record.get("cycle"), record.get("shard"))
+                ts = float(record.get("ts", 0.0))
+                if ts > self._last_hb.get(key, 0.0):
+                    self._last_hb[key] = ts
+
+    def records(self, type: Optional[str] = None,
+                cycle: Optional[int] = None,
+                shard: Optional[int] = None) -> List[dict]:
+        """Log records filtered by type/cycle/shard, in append order."""
+        with self._lock:  # reader cache is shared across threads
+            self._refresh()
+            snapshot = list(self._parsed)
+        out = []
+        for r in snapshot:
+            if type is not None and r.get("type") != type:
+                continue
+            if cycle is not None and r.get("cycle") != cycle:
+                continue
+            if shard is not None and r.get("shard") != shard:
+                continue
+            out.append(r)
+        return out
+
+    def last_heartbeat(self, cycle: int, shard: int) -> Optional[float]:
+        """Timestamp of the newest heartbeat for (cycle, shard), or None —
+        an O(1) lookup against the incrementally maintained index."""
+        with self._lock:
+            self._refresh()
+            return self._last_hb.get((cycle, shard))

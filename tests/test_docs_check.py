@@ -1,0 +1,97 @@
+"""The docs-check tool (tools/docs_check.py, `make docs-check`): the repo's
+own docs must pass, and deliberately broken docs must fail — a broken link,
+an undefined CLI flag, and an unimportable module each trip it."""
+
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _tool():
+    spec = importlib.util.spec_from_file_location(
+        "docs_check", ROOT / "tools" / "docs_check.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _tree(tmp_path, readme: str) -> pathlib.Path:
+    (tmp_path / "docs").mkdir(exist_ok=True)
+    (tmp_path / "README.md").write_text(readme)
+    # the real package tree, so `python -m repro...` resolves under the
+    # fake doc root and only the *documented flags* are wrong
+    (tmp_path / "src").symlink_to(ROOT / "src")
+    return tmp_path
+
+
+def test_repo_docs_pass():
+    """The committed docs reference only real modules, real flags, and
+    resolvable links (the same check `make docs-check` runs in CI)."""
+    assert _tool().main([str(ROOT)]) == 0
+
+
+def test_broken_link_fails(tmp_path, capsys):
+    tool = _tool()
+    root = _tree(tmp_path, "see [missing](docs/nope.md)\n")
+    assert tool.main([str(root)]) == 1
+    assert "broken link -> docs/nope.md" in capsys.readouterr().err
+
+
+def test_link_inside_code_fence_is_ignored(tmp_path):
+    tool = _tool()
+    root = _tree(tmp_path,
+                 "```python\nrows[0][\"x\"](docs/not-a-link.md)\n```\n")
+    assert tool.main([str(root)]) == 0
+
+
+def test_undefined_cli_flag_fails(tmp_path, capsys):
+    tool = _tool()
+    root = _tree(tmp_path, "```bash\n"
+                 "PYTHONPATH=src python -m repro.service.loop --definitely-not-a-flag\n"
+                 "```\n")
+    assert tool.main([str(root)]) == 1
+    err = capsys.readouterr().err
+    assert "does not define --definitely-not-a-flag" in err
+
+
+def test_unimportable_module_fails(tmp_path, capsys):
+    tool = _tool()
+    root = _tree(tmp_path, "```bash\n"
+                 "PYTHONPATH=src python -m repro.no_such_module --fast\n"
+                 "```\n")
+    assert tool.main([str(root)]) == 1
+    assert "module missing or CLI broken" in capsys.readouterr().err
+
+
+def test_subcommand_flags_resolve_against_subparser(tmp_path):
+    """`campaign run --force` is only defined on the `run` subparser — the
+    checker must consult the subcommand's help, not the top-level parser's."""
+    tool = _tool()
+    root = _tree(tmp_path, "```bash\n"
+                 "PYTHONPATH=src python -m repro.data.campaign run --force --fast\n"
+                 "```\n")
+    assert tool.main([str(root)]) == 0
+
+
+def test_extract_cli_commands_parsing():
+    tool = _tool()
+    text = (
+        "prose python -m not.in.a.fence --skip\n"
+        "```console\n"
+        "$ PYTHONPATH=src python -m repro.data.campaign list\n"
+        "extended   724 cases   output line, not a command\n"
+        "```\n"
+        "```bash\n"
+        "PYTHONPATH=src python -m repro.data.campaign merge \\\n"
+        "    a.jsonl --out b.jsonl\n"
+        "```\n"
+    )
+    cmds = tool.extract_cli_commands(text)
+    assert cmds == [
+        ("repro.data.campaign", ["list"]),
+        ("repro.data.campaign", ["merge", "a.jsonl", "--out", "b.jsonl"]),
+    ]

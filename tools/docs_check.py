@@ -1,0 +1,178 @@
+#!/usr/bin/env python
+"""Keep the docs honest: verify CLI references and intra-repo links.
+
+Two checks over ``README.md`` + ``docs/**/*.md`` (``make docs-check``, wired
+into CI):
+
+1. **CLI references** — every ``python -m <module> ...`` line inside a
+   fenced ``bash``/``console`` block must name a module whose ``--help``
+   actually works under ``PYTHONPATH=src``, and every ``-f``/``--flag`` the
+   line passes must appear in that help text.  Subcommands (``campaign run``)
+   are resolved to the subparser's help.  Docs drift the moment a flag is
+   renamed; this turns that drift into a CI failure.
+2. **Intra-repo links** — every relative markdown link target (outside code
+   fences) must resolve to an existing file or directory.
+
+Exit status: 0 clean, 1 with one line per problem on stderr.
+
+Usage::
+
+    python tools/docs_check.py            # check the repo this file lives in
+    python tools/docs_check.py <root>     # check another tree (tests)
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FLAG_RE = re.compile(r"^-{1,2}[A-Za-z][\w-]*$")
+_CMD_RE = re.compile(
+    r"^(?:\$\s+)?(?:[A-Z_][A-Z0-9_]*=\S+\s+)*python\s+-m\s+(\S+)\s*(.*)$")
+
+
+def markdown_files(root: pathlib.Path) -> List[pathlib.Path]:
+    files = []
+    if (root / "README.md").exists():
+        files.append(root / "README.md")
+    files.extend(sorted((root / "docs").rglob("*.md")) if (root / "docs").exists() else [])
+    return files
+
+
+def _split_fences(text: str) -> Tuple[str, List[Tuple[str, List[str]]]]:
+    """(prose with code fences stripped, [(fence language, lines), ...])."""
+    prose: List[str] = []
+    blocks: List[Tuple[str, List[str]]] = []
+    lang: Optional[str] = None
+    lines: List[str] = []
+    for line in text.splitlines():
+        m = _FENCE_RE.match(line.strip())
+        if m:
+            if lang is None:
+                lang, lines = m.group(1), []
+            else:
+                blocks.append((lang, lines))
+                lang = None
+            continue
+        (lines if lang is not None else prose).append(line)
+    return "\n".join(prose), blocks
+
+
+def _join_continuations(lines: List[str]) -> List[str]:
+    out: List[str] = []
+    for line in lines:
+        if out and out[-1].endswith("\\"):
+            out[-1] = out[-1][:-1] + " " + line.strip()
+        else:
+            out.append(line.rstrip())
+    return out
+
+
+def extract_cli_commands(text: str) -> List[Tuple[str, List[str]]]:
+    """(module, argv-tokens) for every ``python -m`` line in bash/console
+    fences (``$``-prefixed prompt lines included, output lines ignored)."""
+    cmds = []
+    _, blocks = _split_fences(text)
+    for lang, lines in blocks:
+        if lang not in ("bash", "sh", "shell", "console"):
+            continue
+        for line in _join_continuations(lines):
+            m = _CMD_RE.match(line.strip())
+            if m:
+                cmds.append((m.group(1), m.group(2).split()))
+    return cmds
+
+
+class HelpCache:
+    """``python -m <module> [subcommand] --help`` output, one subprocess per
+    distinct (module, subcommand), run with src/ on PYTHONPATH."""
+
+    def __init__(self, root: pathlib.Path):
+        self.root = root
+        self._cache: Dict[Tuple[str, Optional[str]], Optional[str]] = {}
+
+    def help_text(self, module: str, sub: Optional[str]) -> Optional[str]:
+        key = (module, sub)
+        if key not in self._cache:
+            argv = [sys.executable, "-m", module] + ([sub] if sub else []) + ["--help"]
+            env = dict(os.environ)
+            src = str(self.root / "src")
+            env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else src)
+            try:
+                proc = subprocess.run(argv, capture_output=True, text=True,
+                                      timeout=120, env=env, cwd=self.root)
+            except (OSError, subprocess.SubprocessError):
+                proc = None
+            ok = proc is not None and proc.returncode == 0
+            self._cache[key] = (proc.stdout + proc.stderr) if ok else None
+        return self._cache[key]
+
+
+def check_cli_commands(files: List[pathlib.Path],
+                       root: pathlib.Path) -> List[str]:
+    errors = []
+    cache = HelpCache(root)
+    for path in files:
+        rel = path.relative_to(root)
+        for module, argv in extract_cli_commands(path.read_text()):
+            # the subcommand, if any, is the first non-flag token
+            sub = next((t for t in argv if not t.startswith("-")), None)
+            sub = sub if sub and re.fullmatch(r"[\w-]+", sub) else None
+            help_text = cache.help_text(module, sub)
+            if help_text is None and sub is not None:
+                help_text = cache.help_text(module, None)  # positional arg, not a subcommand
+            if help_text is None:
+                errors.append(f"{rel}: `python -m {module}"
+                              f"{' ' + sub if sub else ''} --help` failed "
+                              "(module missing or CLI broken)")
+                continue
+            for token in argv:
+                flag = token.split("=", 1)[0]
+                if not _FLAG_RE.match(flag):
+                    continue
+                if not re.search(rf"(?<![\w-]){re.escape(flag)}(?![\w-])",
+                                 help_text):
+                    errors.append(f"{rel}: `python -m {module}` does not "
+                                  f"define {flag} (per --help)")
+    return errors
+
+
+def check_links(files: List[pathlib.Path], root: pathlib.Path) -> List[str]:
+    errors = []
+    for path in files:
+        rel = path.relative_to(root)
+        prose, _ = _split_fences(path.read_text())
+        for target in _LINK_RE.findall(prose):
+            if re.match(r"^(https?:|mailto:|#)", target):
+                continue
+            resolved = (path.parent / target.split("#", 1)[0]).resolve()
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    root = pathlib.Path(args[0]).resolve() if args else REPO_ROOT
+    files = markdown_files(root)
+    if not files:
+        print(f"docs-check: no markdown under {root}", file=sys.stderr)
+        return 1
+    errors = check_links(files, root) + check_cli_commands(files, root)
+    for err in errors:
+        print(f"docs-check: {err}", file=sys.stderr)
+    print(f"docs-check: {len(files)} file(s), {len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
