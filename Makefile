@@ -1,13 +1,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+BENCH_FAST_DIR ?= /tmp/repro_io/bench_fast
+BENCH_GATE_FLAGS ?=
 
-.PHONY: test bench-fast campaign-smoke loop-smoke fleet-smoke docs-check dev-deps
+.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
 
-bench-fast:  ## per-figure paper benchmarks, CI-sized
-	$(PYTHON) -m benchmarks.run --fast
+bench-fast:  ## per-figure paper benchmarks, CI-sized; leaves fresh BENCH_*.json in $(BENCH_FAST_DIR)
+	$(PYTHON) -m benchmarks.run --fast --artifact-dir $(BENCH_FAST_DIR)
+
+bench-gate:  ## compare the fresh fast run in $(BENCH_FAST_DIR) against committed BENCH_*.json (run bench-fast first)
+	$(PYTHON) tools/bench_gate.py --fresh $(BENCH_FAST_DIR) $(BENCH_GATE_FLAGS)
 
 campaign-smoke:  ## paper campaigns end-to-end (fast) + non-empty summary check
 	$(PYTHON) -m repro.data.campaign smoke --out /tmp/repro_io/campaign_smoke

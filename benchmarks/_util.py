@@ -1,0 +1,30 @@
+"""Small helpers shared by the benchmark groups."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Optional, Tuple
+
+
+def time_once(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def emit_artifact(art: dict, name: str, fast: bool, artifact_dir,
+                  full_path: pathlib.Path, label: str) -> Optional[Tuple[str, float, str]]:
+    """Write the group's JSON artifact: to the repo root in full mode, to
+    ``artifact_dir`` (the bench-gate's fresh-run input) in fast mode.
+    Returns the CSV row to append, or None if nothing was written."""
+    if not fast:
+        full_path.write_text(json.dumps(art, indent=2) + "\n")
+        return (label, 0.0, f"wrote {full_path.name}")
+    if artifact_dir is not None:
+        out = pathlib.Path(artifact_dir) / name
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(art, indent=2) + "\n")
+        return (label, 0.0, f"wrote {out}")
+    return None

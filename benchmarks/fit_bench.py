@@ -1,20 +1,26 @@
-"""Fit-path benchmarks: the level-wise tree engine vs the reference builder,
-and the zero-copy ``recommend()`` serving path.
+"""Fit-path benchmarks: the batched ensemble engine vs the level-wise and
+reference builders, and the zero-copy ``recommend()`` serving path.
 
 Run via ``PYTHONPATH=src python -m benchmarks.run --only fit``.  The full run
 writes a ``BENCH_fit.json`` artifact at the repo root so the fit-performance
 trajectory is tracked across PRs; ``--fast`` keeps everything CI-sized and
-skips the artifact.
+writes the artifact only when ``--artifact-dir`` is given (the bench-gate's
+fresh-run input).
+
+Engines are timed alternately (each takes its best of ``reps`` runs) so
+background load on a shared box biases no engine, and every row asserts the
+engines produced byte-identical ensembles — a false ``identical_trees`` is a
+correctness regression and hard-fails the CI gate (``tools/bench_gate.py``).
 """
 
 from __future__ import annotations
 
-import json
 import pathlib
-import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from ._util import emit_artifact, time_once as _time_once
 
 Row = Tuple[str, float, str]
 
@@ -29,33 +35,26 @@ def _synth(n: int, d: int = 11, seed: int = 0):
     return X, y + 0.1 * rng.normal(size=n)
 
 
-def _time_once(fn) -> float:
-    t0 = time.perf_counter()
-    fn()
-    return time.perf_counter() - t0
-
-
-def _fit_speedup(model_ctor, X, y, reps: int = 2) -> Tuple[float, float, bool]:
-    """(level_s, reference_s, identical) for one model config.
-
-    Engines are timed alternately and each takes its best of ``reps`` runs, so
-    background load on a shared box biases neither side."""
-    t_level, t_ref = [], []
-    m_level = m_ref = None
+def _fit_times(model_ctor, X, y, engines, reps: int = 2):
+    """({engine: best_fit_seconds}, identical) for one model config."""
+    times: Dict[str, List[float]] = {e: [] for e in engines}
+    models: Dict[str, object] = {}
     for _ in range(reps):
-        m_level = model_ctor(engine="level")
-        t_level.append(_time_once(lambda: m_level.fit(X, y)))
-        m_ref = model_ctor(engine="reference")
-        t_ref.append(_time_once(lambda: m_ref.fit(X, y)))
+        for e in engines:
+            m = model_ctor(engine=e)
+            times[e].append(_time_once(lambda: m.fit(X, y)))
+            models[e] = m
+    ref = models[engines[0]].ensemble
     identical = all(
-        np.array_equal(np.asarray(getattr(m_level.ensemble, f)),
-                       np.asarray(getattr(m_ref.ensemble, f)))
+        np.array_equal(np.asarray(getattr(ref, f)),
+                       np.asarray(getattr(models[e].ensemble, f)))
+        for e in engines[1:]
         for f in ("feature", "threshold", "left", "right", "value")
     )
-    return min(t_level), min(t_ref), identical
+    return {e: min(ts) for e, ts in times.items()}, identical
 
 
-def bench_fit(fast: bool) -> List[Row]:
+def bench_fit(fast: bool, artifact_dir: Optional[pathlib.Path] = None) -> List[Row]:
     from repro.core import (
         ConfigSpace,
         GBTConfig,
@@ -65,19 +64,24 @@ def bench_fit(fast: bool) -> List[Row]:
         RFConfig,
         recommend,
     )
+    from repro.core import _native
 
     rows: List[Row] = []
-    art: Dict[str, dict] = {"schema": 1, "fit": {}, "recommend": {}}
+    art: Dict[str, dict] = {
+        "schema": 2,
+        "native_kernels": _native.available(),
+        "fit": {},
+        "recommend": {},
+    }
 
-    # -- GBT / RF fit wall time + engine speedup ------------------------
+    # -- engine comparison: batched vs level vs reference ----------------
     sizes = (141, 1024) if fast else (141, 1024, 10_000)
     # Round counts chosen so the reference fit stays tractable at n=10^4;
-    # both engines always run the SAME config, so the ratio is unaffected.
-    gbt_rounds = {141: 100, 1024: 100, 10_000: 20}
+    # all engines always run the SAME config, so ratios are unaffected.
     configs = [
-        # (name, per-n model ctor, estimators-per-n)
         ("gbt_paper", lambda ne, engine: GBTRegressor(
-            GBTConfig(n_estimators=ne, seed=0), engine=engine), gbt_rounds),
+            GBTConfig(n_estimators=ne, seed=0), engine=engine),
+            {141: 100, 1024: 100, 10_000: 20}),
         # Deep-tree GBT: the dataset-growth / autotuner stress shape where
         # the reference's per-node Python overhead dominates.
         ("gbt_deep_d10", lambda ne, engine: GBTRegressor(
@@ -87,30 +91,75 @@ def bench_fit(fast: bool) -> List[Row]:
             RFConfig(n_estimators=ne, seed=0), engine=engine),
             {141: 50, 1024: 20, 10_000: 8}),
     ]
-    # warm the kernels/allocator once so neither engine eats the cold start
+    # warm the kernels/allocator once so no engine eats the cold start
     Xw, yw = _synth(141)
     GBTRegressor(GBTConfig(n_estimators=3, seed=0)).fit(Xw, yw)
+    RandomForestRegressor(RFConfig(n_estimators=2, seed=0)).fit(Xw, yw)
 
     for name, ctor, per_n in configs:
-        if fast and name != "gbt_paper":
+        if fast and name == "gbt_deep_d10":
             continue
         for n in sizes:
+            if fast and name == "rf_paper_d10" and n != 141:
+                continue
             ne = per_n[n]
             X, y = _synth(n)
-            t_level, t_ref, identical = _fit_speedup(
-                lambda engine: ctor(ne, engine), X, y
+            t, identical = _fit_times(
+                lambda engine: ctor(ne, engine), X, y,
+                engines=("batched", "level", "reference"),
             )
-            speedup = t_ref / t_level
-            rows_s = n * ne / t_level
+            sp_level = t["reference"] / t["level"]
+            sp_batched = t["level"] / t["batched"]
+            rows_s = n * ne / t["batched"]
             rows.append((
-                f"fit_{name}_n{n}", t_level * 1e6,
-                f"estimators={ne} rows_per_s={rows_s:.0f} ref_us={t_ref * 1e6:.0f} "
-                f"speedup={speedup:.1f}x identical={identical}",
+                f"fit_{name}_n{n}", t["batched"] * 1e6,
+                f"estimators={ne} rows_per_s={rows_s:.0f} "
+                f"level_us={t['level'] * 1e6:.0f} ref_us={t['reference'] * 1e6:.0f} "
+                f"speedup_batched={sp_batched:.1f}x identical={identical}",
             ))
             art["fit"][f"{name}_n{n}"] = {
                 "n": n, "estimators": ne,
-                "level_s": round(t_level, 4), "reference_s": round(t_ref, 4),
-                "speedup": round(speedup, 2), "rows_per_s": round(rows_s),
+                "batched_s": round(t["batched"], 4),
+                "level_s": round(t["level"], 4),
+                "reference_s": round(t["reference"], 4),
+                "speedup_level": round(sp_level, 2),
+                "speedup_batched": round(sp_batched, 2),
+                "rows_per_s": round(rows_s),
+                "identical_trees": identical,
+            }
+
+    # -- paper-scale ensembles (100 trees): batched vs level only --------
+    # (the reference engine would take ~30 s per fit at this size)
+    big = [
+        ("rf_paper", lambda engine: RandomForestRegressor(
+            RFConfig(n_estimators=100, seed=0), engine=engine)),
+        ("gbt_paper_full", lambda engine: GBTRegressor(
+            GBTConfig(n_estimators=100, seed=0), engine=engine)),
+    ]
+    big_sizes = (1024,) if fast else (1024, 10_000)
+    for name, ctor in big:
+        if fast and name == "gbt_paper_full":
+            continue
+        for n in big_sizes:
+            X, y = _synth(n)
+            t, identical = _fit_times(
+                ctor, X, y, engines=("batched", "level"),
+                reps=1 if fast else 2,
+            )
+            sp = t["level"] / t["batched"]
+            rows_s = n * 100 / t["batched"]
+            rows.append((
+                f"fit_{name}_n{n}_b100", t["batched"] * 1e6,
+                f"estimators=100 rows_per_s={rows_s:.0f} "
+                f"level_us={t['level'] * 1e6:.0f} "
+                f"speedup_batched={sp:.1f}x identical={identical}",
+            ))
+            art["fit"][f"{name}_n{n}_b100"] = {
+                "n": n, "estimators": 100,
+                "batched_s": round(t["batched"], 4),
+                "level_s": round(t["level"], 4),
+                "speedup_batched": round(sp, 2),
+                "rows_per_s": round(rows_s),
                 "identical_trees": identical,
             }
 
@@ -150,7 +199,8 @@ def bench_fit(fast: bool) -> List[Row]:
                 "configs_per_s": round(ncand / best),
             }
 
-    if not fast:
-        ARTIFACT.write_text(json.dumps(art, indent=2) + "\n")
-        rows.append(("fit_artifact", 0.0, f"wrote {ARTIFACT.name}"))
+    row = emit_artifact(art, "BENCH_fit.json", fast, artifact_dir, ARTIFACT,
+                        "fit_artifact")
+    if row:
+        rows.append(row)
     return rows

@@ -23,13 +23,15 @@ import shutil
 import time
 from typing import List, Tuple
 
+from ._util import emit_artifact
+
 Row = Tuple[str, float, str]
 
 ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fleet.json"
 SCRATCH = pathlib.Path("/tmp/repro_io/bench_fleet")
 
 
-def bench_fleet(fast: bool) -> List[Row]:
+def bench_fleet(fast: bool, artifact_dir=None) -> List[Row]:
     from repro.service.fleet import FleetConfig, FleetCoordinator
 
     rows: List[Row] = []
@@ -66,7 +68,8 @@ def bench_fleet(fast: bool) -> List[Row]:
             "n_failures": r["n_failures"], "releases": r["releases"],
         })
 
-    if not fast:
-        ARTIFACT.write_text(json.dumps(art, indent=2) + "\n")
-        rows.append(("fleet_artifact", 0.0, f"wrote {ARTIFACT.name}"))
+    row = emit_artifact(art, "BENCH_fleet.json", fast, artifact_dir, ARTIFACT,
+                        "fleet_artifact")
+    if row:
+        rows.append(row)
     return rows

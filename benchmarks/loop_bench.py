@@ -18,11 +18,12 @@ skips the artifact.
 
 from __future__ import annotations
 
-import json
 import pathlib
 import shutil
 import zlib
 from typing import List, Tuple
+
+from ._util import emit_artifact, time_once
 
 Row = Tuple[str, float, str]
 
@@ -68,7 +69,7 @@ def _run_loop(cfg, executor=None) -> List[dict]:
     return ContinuousTuningLoop(cfg, executor=executor).run()
 
 
-def bench_loop(fast: bool) -> List[Row]:
+def bench_loop(fast: bool, artifact_dir=None) -> List[Row]:
     from repro.core.autotune import ConfigSpace
     from repro.service.loop import LoopConfig
 
@@ -120,7 +121,38 @@ def bench_loop(fast: bool) -> List[Row]:
             "cycle_s": r["elapsed_s"], "drift": r["drift"],
         })
 
-    if not fast:
-        ARTIFACT.write_text(json.dumps(art, indent=2) + "\n")
-        rows.append(("loop_artifact", 0.0, f"wrote {ARTIFACT.name}"))
+    # -- refit-stage engine A/B on the final synthetic store -------------
+    # Same-run comparison (immune to machine drift across PRs): refit the
+    # loop's model on the grown dataset once per tree engine.
+    from repro.core import IOPerformancePredictor
+    from repro.data.dataset import observations_from_jsonl, observations_to_columns
+
+    obs_rows = observations_from_jsonl([out / "merged.jsonl"])
+    obs = observations_to_columns(obs_rows)
+    n_obs = len(obs_rows)
+    if n_obs:
+        refit_t = {}
+        for engine in ("batched", "level"):
+            pred = IOPerformancePredictor(model="xgboost", engine=engine)
+            pred.fit(obs)  # warm
+            refit_t[engine] = min(
+                time_once(lambda: pred.fit(obs)) for _ in range(3)
+            )
+        sp = refit_t["level"] / refit_t["batched"]
+        rows.append((
+            "loop_refit_engine_ab", refit_t["batched"] * 1e6,
+            f"n_obs={n_obs} batched_ms={refit_t['batched'] * 1e3:.1f} "
+            f"level_ms={refit_t['level'] * 1e3:.1f} speedup={sp:.2f}x",
+        ))
+        art["refit_engine_ab"] = {
+            "n_observations": n_obs,
+            "batched_ms": round(refit_t["batched"] * 1e3, 2),
+            "level_ms": round(refit_t["level"] * 1e3, 2),
+            "speedup_batched": round(sp, 2),
+        }
+
+    row = emit_artifact(art, "BENCH_loop.json", fast, artifact_dir, ARTIFACT,
+                        "loop_artifact")
+    if row:
+        rows.append(row)
     return rows

@@ -1,22 +1,34 @@
 """Benchmark harness — one function per paper table/figure plus the dry-run
 roofline table. Prints ``name,us_per_call,derived`` CSV.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--only GROUP]
+       [--artifact-dir DIR]
+
+``--artifact-dir`` makes the artifact-writing groups (fit/loop/fleet) emit
+their CI-sized JSON artifacts there even in ``--fast`` mode — the input of
+the bench regression gate (``tools/bench_gate.py``).  Any group that raises
+marks the whole run failed (non-zero exit), so CI cannot green-light a run
+that silently skipped a benchmark; an unknown ``--only`` group is an error,
+not an empty no-op run.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import pathlib
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="small observation set, skip CV/MLP (CI mode)")
     ap.add_argument("--only", default=None, help="run a single benchmark group")
-    args = ap.parse_args()
+    ap.add_argument("--artifact-dir", default=None,
+                    help="write fast-mode BENCH_*.json artifacts to this dir")
+    args = ap.parse_args(argv)
 
     from . import fit_bench
     from . import fleet_bench
@@ -40,13 +52,24 @@ def main() -> None:
         "kernels": pe.bench_kernels,
     }
     if args.only:
+        if args.only not in groups and args.only != "roofline":
+            ap.error(
+                f"unknown benchmark group {args.only!r}; "
+                f"choose from {sorted(groups) + ['roofline']}"
+            )
         groups = {args.only: groups[args.only]} if args.only in groups else {}
 
     print("name,us_per_call,derived")
     failures = 0
     for gname, fn in groups.items():
+        kwargs = {}
+        if (
+            args.artifact_dir
+            and "artifact_dir" in inspect.signature(fn).parameters
+        ):
+            kwargs["artifact_dir"] = pathlib.Path(args.artifact_dir)
         try:
-            for name, us, derived in fn(args.fast):
+            for name, us, derived in fn(args.fast, **kwargs):
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:  # noqa: BLE001
             failures += 1

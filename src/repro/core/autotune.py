@@ -214,6 +214,7 @@ class OnlineAutotuner:
         seed: int = 0,
         min_config_diversity: int = 3,  # explore until this many distinct configs seen
         drift_threshold: float = 0.5,  # force refit if new-data median rel. error exceeds
+        engine: Optional[str] = None,  # tree engine for refits (None = default)
     ):
         self.spec = spec or FeatureSpec()
         self.space = space
@@ -222,7 +223,9 @@ class OnlineAutotuner:
         self.gain_threshold = gain_threshold
         self.min_config_diversity = min_config_diversity
         self.drift_threshold = drift_threshold
-        self.predictor = IOPerformancePredictor(self.spec, model=model, seed=seed)
+        self.predictor = IOPerformancePredictor(
+            self.spec, model=model, seed=seed, engine=engine
+        )
         self._store = _ColumnStore(tuple(self.spec.names) + (self.spec.target,))
         self._since_fit = 0
         self._fitted = False

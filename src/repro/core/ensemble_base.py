@@ -52,25 +52,31 @@ def pack_trees(
 ) -> PackedEnsemble:
     """Stack trees into [B, max_nodes] arrays, padding in place.
 
-    Writes each tree's arrays straight into preallocated [B, N] buffers
-    (padded slots are self-looping zero-value leaves) instead of materializing
-    a padded copy of all seven arrays per tree and re-stacking.
+    One flat scatter per field instead of 5 slice-assignments per tree: the
+    batched engine fits a 100-tree paper forest in tens of milliseconds, at
+    which point 500 small ``__setitem__`` calls are a visible fraction of the
+    whole fit.  Padded slots are self-looping zero-value leaves.
     """
     B = len(trees)
-    N = max(t.n_nodes for t in trees)
-    feature = np.full((B, N), -1, np.int32)
-    threshold = np.zeros((B, N), np.float32)
-    value = np.zeros((B, N), np.float32)
+    ks = np.asarray([t.n_nodes for t in trees], np.int64)
+    N = int(ks.max())
+    # flat positions of every real node: tree b's node i at b*N + i
+    starts = np.concatenate([[0], np.cumsum(ks)[:-1]])
+    pos = np.repeat(np.arange(B, dtype=np.int64) * N, ks) + (
+        np.arange(int(ks.sum())) - np.repeat(starts, ks)
+    )
+
+    def scat(field, fill, dtype):
+        buf = np.full(B * N, fill, dtype) if np.isscalar(fill) else fill
+        buf[pos] = np.concatenate([getattr(t, field) for t in trees])
+        return buf.reshape(B, N)
+
     # Padded nodes self-loop so the fixed-depth descent stays put on them.
-    left = np.broadcast_to(np.arange(N, dtype=np.int32), (B, N)).copy()
-    right = left.copy()
-    for b, t in enumerate(trees):
-        k = t.n_nodes
-        feature[b, :k] = t.feature
-        threshold[b, :k] = t.threshold
-        left[b, :k] = t.left
-        right[b, :k] = t.right
-        value[b, :k] = t.value
+    feature = scat("feature", -1, np.int32)
+    threshold = scat("threshold", 0.0, np.float32)
+    value = scat("value", 0.0, np.float32)
+    left = scat("left", np.tile(np.arange(N, dtype=np.int32), B), np.int32)
+    right = scat("right", np.tile(np.arange(N, dtype=np.int32), B), np.int32)
     return PackedEnsemble(
         feature=jnp.asarray(feature),
         threshold=jnp.asarray(threshold),

@@ -14,7 +14,15 @@ from typing import Optional
 import numpy as np
 
 from .ensemble_base import PackedEnsemble, pack_trees, predict_ensemble
-from .tree import BinnedData, TreeBuilderConfig, bin_features, build_tree, compute_bins
+from .tree import (
+    BinnedData,
+    TreeBuilderConfig,
+    bin_features,
+    build_forest_batched,
+    build_tree,
+    compute_bins,
+    resolve_engine,
+)
 
 __all__ = ["RFConfig", "RandomForestRegressor", "RandomForestClassifier"]
 
@@ -52,17 +60,38 @@ class RandomForestRegressor:
             gamma=0.0,
             max_bins=cfg.max_bins,
         )
-        trees = []
-        imp = np.zeros(d)
         ybar = float(y.mean())
-        for _ in range(cfg.n_estimators):
-            rows = rng.integers(0, n, size=n)  # bootstrap
-            w = np.bincount(rows, minlength=n).astype(np.float64)
-            # weighted residual target: g = -(y - ybar) * w, h = w
-            g = -(y - ybar) * w
-            h = w
-            tree = build_tree(binned, edges, g, h, tcfg, rng, cfg.colsample, engine=self.engine)
-            trees.append(tree)
+        engine = resolve_engine(self.engine)
+        if engine == "batched" and cfg.colsample >= 1.0:
+            # All B trees in one lockstep ensemble build: the bootstrap draw
+            # order is the per-tree loop's, so these fits are bit-identical
+            # to the level/reference engines.  colsample < 1.0 keeps the
+            # per-tree loop below instead: single-tree batched builds replay
+            # the level engine's RNG stream exactly, so the seeded ensemble
+            # stays identical across batched/level regardless of engine.
+            W = np.empty((cfg.n_estimators, n))
+            for t in range(cfg.n_estimators):
+                W[t] = np.bincount(rng.integers(0, n, size=n), minlength=n)
+            grads = -(y - ybar)[None, :] * W
+            trees = [
+                t for t, _ in build_forest_batched(
+                    binned, grads, W, tcfg, colsample=cfg.colsample
+                )
+            ]
+        else:
+            trees = []
+            for _ in range(cfg.n_estimators):
+                rows = rng.integers(0, n, size=n)  # bootstrap
+                w = np.bincount(rows, minlength=n).astype(np.float64)
+                # weighted residual target: g = -(y - ybar) * w, h = w
+                g = -(y - ybar) * w
+                h = w
+                trees.append(
+                    build_tree(binned, edges, g, h, tcfg, rng, cfg.colsample,
+                               engine=engine)
+                )
+        imp = np.zeros(d)
+        for tree in trees:
             split = tree.feature >= 0
             np.add.at(imp, tree.feature[split], tree.gain[split])
         tot = imp.sum()

@@ -4,6 +4,14 @@ Implements the paper's winning model (§3.3.2: 100 estimators, max_depth=6,
 learning_rate=0.1, subsample=0.8) with second-order gradients, L2 leaf
 regularization (lambda), min-split-gain (gamma), and row/column subsampling.
 
+Boosting rounds are sequential (each tree fits the previous rounds'
+residuals), so every round runs the tree engine with a single tree; the
+default ``"batched"`` engine still pays off because all 100 rounds share the
+``BinnedData`` precomputes and scratch, its native split kernel, and the
+builder's own leaf assignments for the prediction update (see
+``docs/fit-engine.md``).  ``engine=`` / REPRO_TREE_ENGINE select the
+level/reference oracles, resolved at fit time.
+
 Supports squared-error regression and binary logistic classification (the
 paper's RQ3 classifiers); multiclass via one-vs-rest in classify.py.
 """

@@ -23,25 +23,29 @@ from .mlp import MLPConfig, MLPRegressor
 __all__ = ["MODEL_ZOO", "make_model", "ModelReport", "IOPerformancePredictor"]
 
 
-# Paper hyperparameters (§3.3).
+# Paper hyperparameters (§3.3).  ``engine`` selects the tree-fitting engine
+# for the ensemble models (None = tree.resolve_engine's default, which honors
+# REPRO_TREE_ENGINE at fit time); the other models ignore it.
 MODEL_ZOO: Dict[str, Callable] = {
-    "linear": lambda seed=0: LinearRegression(),
-    "ridge": lambda seed=0: Ridge(alpha=1.0),
-    "lasso": lambda seed=0: Lasso(alpha=0.1),
-    "elasticnet": lambda seed=0: ElasticNet(alpha=0.1, l1_ratio=0.5),
-    "random_forest": lambda seed=0: RandomForestRegressor(
-        RFConfig(n_estimators=100, max_depth=10, min_samples_split=5, seed=seed)
+    "linear": lambda seed=0, engine=None: LinearRegression(),
+    "ridge": lambda seed=0, engine=None: Ridge(alpha=1.0),
+    "lasso": lambda seed=0, engine=None: Lasso(alpha=0.1),
+    "elasticnet": lambda seed=0, engine=None: ElasticNet(alpha=0.1, l1_ratio=0.5),
+    "random_forest": lambda seed=0, engine=None: RandomForestRegressor(
+        RFConfig(n_estimators=100, max_depth=10, min_samples_split=5, seed=seed),
+        engine=engine,
     ),
-    "xgboost": lambda seed=0: GBTRegressor(
+    "xgboost": lambda seed=0, engine=None: GBTRegressor(
         GBTConfig(
             n_estimators=100,
             max_depth=6,
             learning_rate=0.1,
             subsample=0.8,
             seed=seed,
-        )
+        ),
+        engine=engine,
     ),
-    "mlp": lambda seed=0: _ScaledMLP(seed),
+    "mlp": lambda seed=0, engine=None: _ScaledMLP(seed),
 }
 
 
@@ -60,8 +64,8 @@ class _ScaledMLP:
         return self.mlp.predict(self.scaler.transform(X))
 
 
-def make_model(name: str, seed: int = 0):
-    return MODEL_ZOO[name](seed=seed)
+def make_model(name: str, seed: int = 0, engine: Optional[str] = None):
+    return MODEL_ZOO[name](seed=seed, engine=engine)
 
 
 @dataclasses.dataclass
@@ -87,10 +91,17 @@ class IOPerformancePredictor:
     canonical features plus ``target_throughput`` (MB/s, raw space).
     """
 
-    def __init__(self, spec: Optional[FeatureSpec] = None, model: str = "xgboost", seed: int = 0):
+    def __init__(
+        self,
+        spec: Optional[FeatureSpec] = None,
+        model: str = "xgboost",
+        seed: int = 0,
+        engine: Optional[str] = None,
+    ):
         self.spec = spec or FeatureSpec()
         self.model_name = model
         self.seed = seed
+        self.engine = engine  # tree engine for ensemble models (None = default)
         self.model = None
         self.reports: Dict[str, ModelReport] = {}
 
@@ -108,7 +119,7 @@ class IOPerformancePredictor:
         y = log1p_transform(y_raw)
         tr, te = train_test_split(X.shape[0], test_frac, split_seed)
         for name in models or list(MODEL_ZOO):
-            m = make_model(name, self.seed)
+            m = make_model(name, self.seed, engine=self.engine)
             m.fit(X[tr], y[tr])
             pred_tr = m.predict(X[tr])
             pred_te = m.predict(X[te])
@@ -123,7 +134,9 @@ class IOPerformancePredictor:
                 median_pct_err=pe["median_pct_err"],
             )
             if with_cv and name in ("xgboost", "random_forest", "lasso"):
-                scores = cross_val_r2(lambda: make_model(name, self.seed), X, y, k=5)
+                scores = cross_val_r2(
+                    lambda: make_model(name, self.seed, engine=self.engine), X, y, k=5
+                )
                 rep.cv_mean = float(scores.mean())
                 rep.cv_std = float(scores.std())
             self.reports[name] = rep
@@ -144,7 +157,7 @@ class IOPerformancePredictor:
         dict-of-columns restacking entirely.
         """
         y = log1p_transform(np.asarray(y_raw, np.float64))
-        self.model = make_model(self.model_name, self.seed)
+        self.model = make_model(self.model_name, self.seed, engine=self.engine)
         self.model.fit(np.asarray(X, np.float64), y)
         return self
 

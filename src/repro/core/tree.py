@@ -49,6 +49,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from . import _native
+
 __all__ = [
     "TreeArrays",
     "TreeBuilderConfig",
@@ -56,13 +58,24 @@ __all__ = [
     "DEFAULT_ENGINE",
     "build_tree",
     "build_tree_with_leaves",
+    "build_forest_batched",
     "compute_bins",
     "bin_features",
     "predict_tree_np",
+    "resolve_engine",
 ]
 
-# Flag-gated engine default: REPRO_TREE_ENGINE=reference restores the oracle.
-DEFAULT_ENGINE = os.environ.get("REPRO_TREE_ENGINE", "level")
+# The builder used when neither ``engine=`` nor REPRO_TREE_ENGINE says
+# otherwise.  ``resolve_engine`` re-reads the environment on every build, so
+# flipping REPRO_TREE_ENGINE mid-process (e.g. around an ``OnlineAutotuner``
+# refit) takes effect immediately.
+_BUILTIN_DEFAULT = "batched"
+DEFAULT_ENGINE = os.environ.get("REPRO_TREE_ENGINE", _BUILTIN_DEFAULT)
+
+
+def resolve_engine(engine: Optional[str] = None) -> str:
+    """Explicit ``engine=`` beats REPRO_TREE_ENGINE beats the built-in."""
+    return engine or os.environ.get("REPRO_TREE_ENGINE", _BUILTIN_DEFAULT)
 
 
 @dataclasses.dataclass
@@ -302,19 +315,22 @@ def _relabel_to_reference_order(
     over the finished structure yields the exact id permutation.
     """
     nn = feature.shape[0]
-    perm = np.empty(nn, np.int64)  # bfs id -> reference id
-    perm[0] = 0
-    stack = [0]
-    nxt = 1
-    while stack:
-        b = stack.pop()
-        if feature[b] >= 0:
-            l, r = int(left[b]), int(right[b])
-            perm[l] = nxt
-            perm[r] = nxt + 1
-            nxt += 2
-            stack.append(l)
-            stack.append(r)
+    if nn > 64 and _native.available():
+        perm = _native.relabel_dfs(feature, left, right)  # bfs -> reference
+    else:
+        perm = np.empty(nn, np.int64)  # bfs id -> reference id
+        perm[0] = 0
+        stack = [0]
+        nxt = 1
+        while stack:
+            b = stack.pop()
+            if feature[b] >= 0:
+                l, r = int(left[b]), int(right[b])
+                perm[l] = nxt
+                perm[r] = nxt + 1
+                nxt += 2
+                stack.append(l)
+                stack.append(r)
     inv = np.empty(nn, np.int64)  # reference id -> bfs id
     inv[perm] = np.arange(nn)
     tree = TreeArrays(
@@ -582,7 +598,657 @@ def _build_levelwise(
     )
 
 
-_ENGINES = {"level": _build_levelwise, "reference": _build_reference}
+# ======================================================================
+# Batched engine: all B trees of an ensemble level-by-level in lockstep
+# ======================================================================
+#
+# Random forests build B *independent* trees from one binning; the level
+# engine still pays its ~40 numpy-call per-level overhead B times over.  The
+# batched engine grows every tree of the ensemble in lockstep — one fused
+# histogram scatter over flattened (tree, node, feature, bin) keys, one gain
+# evaluation, one partition per depth for the whole forest — so the per-level
+# launch overhead is paid once, not B times.  Bit-exactness with the
+# reference follows the same invariants as the level engine (ascending-row
+# accumulation order, identical elementwise gain ops, DFS relabeling), plus
+# one new one: per-node G/H sums replicate numpy's pairwise summation
+# blocking (``_segment_sums``), verified against ``np.sum`` at runtime with a
+# per-segment fallback if this numpy build sums differently.
+
+_PAIRWISE_OK: Optional[bool] = None
+
+
+def _segment_sums_loop(vals, starts, counts, out):
+    for i in range(counts.shape[0]):
+        out[i] = vals[starts[i] : starts[i] + counts[i]].sum()
+    return out
+
+
+def _sums_upto128(vals, starts, counts):
+    """Pairwise-emulated sums for segments of length 0..128 (numpy's
+    non-recursive regime): n < 8 sequential, else eight accumulators over
+    8-strided lanes, combined ``((r0+r1)+(r2+r3))+((r4+r5)+(r6+r7))`` with a
+    sequential remainder tail.  Vectorized across segments (sorted descending
+    so each unrolled step works on a plain prefix)."""
+    out = np.zeros(counts.shape[0])
+    small = np.flatnonzero((counts > 0) & (counts < 8))
+    if small.size:
+        sst = starts[small]
+        acc = vals[sst].copy()
+        scnt = counts[small]
+        for k in range(1, 7):
+            sel = scnt > k
+            if not sel.any():
+                break
+            acc[sel] += vals[sst[sel] + k]
+        out[small] = acc
+    mid = np.flatnonzero(counts >= 8)
+    if mid.size:
+        order = mid[np.argsort(-counts[mid], kind="stable")]
+        st = starts[order]
+        cnt = counts[order]
+        nblk = cnt >> 3  # full 8-blocks; block 0 initializes the lanes
+        r = vals[st[:, None] + np.arange(8)]
+        for b in range(1, int(nblk[0])):
+            pref = int(np.searchsorted(-nblk, -(b + 1), side="right"))
+            if pref == 0:
+                break
+            r[:pref] += vals[st[:pref, None] + (8 * b + np.arange(8))]
+        res = ((r[:, 0] + r[:, 1]) + (r[:, 2] + r[:, 3])) + (
+            (r[:, 4] + r[:, 5]) + (r[:, 6] + r[:, 7])
+        )
+        rem = cnt & 7
+        if rem.any():
+            tail = st + (nblk << 3)
+            for k in range(7):
+                sel = rem > k
+                if not sel.any():
+                    break
+                res[sel] += vals[tail[sel] + k]
+        out[order] = res
+    return out
+
+
+def _segment_sums_fast(vals, starts, counts, out):
+    starts = np.asarray(starts)
+    small = counts <= 128
+    if small.all():
+        out[:] = _sums_upto128(vals, starts, counts)
+        return out
+    out[small] = _sums_upto128(vals, starts[small], counts[small])
+    # Long segments are few (near-root frontiers); numpy's own pairwise sum
+    # is the oracle, so a per-segment loop is both exact and cheap here.
+    for i in np.flatnonzero(~small):
+        out[i] = vals[starts[i] : starts[i] + counts[i]].sum()
+    return out
+
+
+def _pairwise_emulation_ok() -> bool:
+    """Does the vectorized emulation reproduce this numpy's ``np.sum`` bits?"""
+    global _PAIRWISE_OK
+    if _PAIRWISE_OK is None:
+        rng = np.random.default_rng(20260729)
+        lens = np.asarray(
+            list(range(1, 130)) * 2 + [130, 200, 1000], np.int64
+        )
+        vals = rng.normal(size=int(lens.sum())) * 10.0 ** rng.integers(
+            -8, 8, size=int(lens.sum())
+        )
+        starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        want = np.empty(lens.size)
+        _segment_sums_loop(vals, starts, lens, want)
+        got = np.empty(lens.size)
+        _segment_sums_fast(vals, starts, lens, got)
+        _PAIRWISE_OK = bool(np.array_equal(want, got))
+    return _PAIRWISE_OK
+
+
+def _segment_sums(vals, starts, counts, out):
+    """Per-segment sums of ``vals`` (contiguous slices), bit-identical to a
+    per-segment ``np.sum`` loop.  Prefers the native kernel (load-time
+    self-test proves it matches ``np.sum``), then the vectorized numpy
+    emulation (gated by its own runtime probe), then the plain loop."""
+    if _native.available():
+        return _native.segment_sums(vals, starts, counts, out)
+    if _pairwise_emulation_ok():
+        return _segment_sums_fast(vals, starts, counts, out)
+    return _segment_sums_loop(vals, starts, counts, out)
+
+
+@dataclasses.dataclass
+class _BatchedScratch:
+    """Reusable buffers for the fused histogram/gain kernel (capacity-doubled
+    on the flattened (node, feature, bin) cell count)."""
+
+    cells: int = 0
+    GR: Optional[np.ndarray] = None
+    HR: Optional[np.ndarray] = None
+    HLlam: Optional[np.ndarray] = None
+    gain: Optional[np.ndarray] = None
+    bad: Optional[np.ndarray] = None  # bool
+    bad2: Optional[np.ndarray] = None  # bool
+    keybuf: Optional[np.ndarray] = None  # intp, sized to the row count
+    invalid_cut: Optional[np.ndarray] = None  # bool [d, nbmax]
+
+    def ensure(self, cells: int, rows: int):
+        if self.cells < cells:
+            self.cells = max(cells, 2 * self.cells)
+            c = self.cells
+            self.GR = np.empty(c)
+            self.HR = np.empty(c)
+            self.HLlam = np.empty(c)
+            self.gain = np.empty(c)
+            self.bad = np.empty(c, bool)
+            self.bad2 = np.empty(c, bool)
+        if self.keybuf is None or self.keybuf.shape[0] < rows:
+            self.keybuf = np.empty(
+                max(rows, 2 * (0 if self.keybuf is None else self.keybuf.shape[0])),
+                np.intp,
+            )
+
+
+def _batched_scratch(data: BinnedData) -> _BatchedScratch:
+    sc = getattr(data, "_batched", None)
+    if sc is None:
+        sc = _BatchedScratch()
+        # cut position p of feature j is a real candidate iff p < nb[j] - 1
+        sc.invalid_cut = np.arange(data.nbmax)[None, :] >= (data.nb[:, None] - 1)
+        data._batched = sc
+    return sc
+
+
+
+# Cap on fused (node, feature, bin) cells per histogram/gain round; larger
+# frontiers are processed in node chunks (each still thousands of cells, so
+# the per-call amortization survives) to bound scratch memory.
+_BATCH_MAX_CELLS = 1 << 21
+# Frontier chunks with at least this many fused cells switch to the
+# feature-major layout (smaller cache-resident per-feature arrays).
+_FEATURE_MAJOR_CELLS = 1 << 17
+
+
+def _numpy_split_search(data, sc, XbT, srows, starts, counts, cand, gsort,
+                        grad_flat, hess_flat, nz_flat, all_nz, at_root, G, H,
+                        parent_score, leaf_rule, cfg, lam, mcw, hess_unit,
+                        col_mask, best_gain, best_j, best_b, best_hl,
+                        n, d, nbmax, dn):
+    """Pure-numpy split search — the fallback when the native kernel is
+    unavailable.  Bit-identical to the native path: same histogram
+    accumulation order, same elementwise gain operation order, same
+    first-occurrence (feature, bin) tie-breaking."""
+    C = cand.size
+    F = counts.shape[0]
+    is_cand = ~leaf_rule
+    if gsort is None:
+        gsort = grad_flat if at_root else np.take(grad_flat, srows)
+    if nz_flat is None:
+        nz_flat = (grad_flat != 0.0) | (hess_flat != 0.0)
+        all_nz = bool(nz_flat.all())
+    # Candidate rows, grouped by candidate node, ascending per group;
+    # zero-weight rows are compacted away before the scatter.
+    if C == F and all_nz:
+        zrows, zg, zcounts = srows, gsort, counts
+    else:
+        if C == F:
+            zmask = nz_flat if at_root else np.take(nz_flat, srows)
+        else:
+            zmask = np.repeat(is_cand, counts)
+            if not all_nz:
+                zmask &= nz_flat if at_root else np.take(nz_flat, srows)
+        zrows = srows[zmask]
+        zg = gsort[zmask]
+        cs = np.concatenate([[0], np.cumsum(zmask.astype(np.int64))])
+        zcounts = cs[starts[cand + 1]] - cs[starts[cand]]
+    zh = None if hess_unit else np.take(hess_flat, zrows)
+    zstarts = np.concatenate([[0], np.cumsum(zcounts)])
+    orig_all = zrows % n
+
+    chunk = max(1, _BATCH_MAX_CELLS // dn)
+    for c0 in range(0, C, chunk):
+        c1 = min(c0 + chunk, C)
+        M = c1 - c0
+        cells = M * dn
+        r0, r1 = int(zstarts[c0]), int(zstarts[c1])
+        m = r1 - r0
+        orig = orig_all[r0:r1]
+        wg = zg[r0:r1]
+        wh = None if zh is None else zh[r0:r1]
+        Gn = G[cand[c0:c1], None]
+        Hn = H[cand[c0:c1], None]
+        Pn = parent_score[cand[c0:c1], None]
+        aM = np.arange(M)
+        bgc = best_gain[c0:c1]
+        bjc = best_j[c0:c1]
+        bbc = best_b[c0:c1]
+        bhc = best_hl[c0:c1]
+
+        if cells >= _FEATURE_MAJOR_CELLS:
+            # -- feature-major: cache-resident per-feature chains -----------
+            mlen = M * nbmax
+            sc.ensure(mlen, m)
+            base = np.repeat(aM * nbmax, zcounts[c0:c1]).astype(np.intp)
+            keybuf = sc.keybuf[:m]
+            HR = sc.HR[:mlen].reshape(M, nbmax)
+            GR = sc.GR[:mlen].reshape(M, nbmax)
+            gain = sc.gain[:mlen].reshape(M, nbmax)
+            bad = sc.bad[:mlen].reshape(M, nbmax)
+            bad2 = sc.bad2[:mlen].reshape(M, nbmax)
+            HLlam = sc.HLlam[:mlen].reshape(M, nbmax)
+            for j in range(d):
+                np.add(base, np.take(XbT[j], orig), out=keybuf,
+                       casting="unsafe")
+                GL = np.bincount(
+                    keybuf, weights=wg, minlength=mlen
+                ).reshape(M, nbmax)
+                if hess_unit:
+                    HL = np.bincount(keybuf, minlength=mlen).astype(
+                        np.float64
+                    ).reshape(M, nbmax)
+                else:
+                    HL = np.bincount(
+                        keybuf, weights=wh, minlength=mlen
+                    ).reshape(M, nbmax)
+                np.cumsum(GL, axis=1, out=GL)
+                np.cumsum(HL, axis=1, out=HL)
+                np.less(HL, mcw, out=bad)
+                np.subtract(Hn, HL, out=HR)
+                np.less(HR, mcw, out=bad2)
+                np.logical_or(bad, bad2, out=bad)
+                np.logical_or(bad, sc.invalid_cut[j][None, :], out=bad)
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    np.multiply(GL, GL, out=gain)
+                    if lam != 0.0:
+                        np.add(HL, lam, out=HLlam)
+                        gain /= HLlam
+                    else:
+                        gain /= HL
+                    np.subtract(Gn, GL, out=GR)
+                    GR *= GR
+                    HR += lam
+                    GR /= HR
+                    gain += GR
+                    gain -= Pn
+                    gain *= 0.5
+                    if cfg.gamma != 0.0:
+                        gain -= cfg.gamma
+                np.copyto(gain, -np.inf, where=bad)
+                bi = np.argmax(gain, axis=1)
+                val = gain[aM, bi]
+                upd = val > bgc  # strict: earlier feature wins ties
+                if col_mask is not None:
+                    upd &= col_mask[c0:c1, j]
+                if upd.any():
+                    bgc[upd] = val[upd]
+                    bjc[upd] = j
+                    bbc[upd] = bi[upd]
+                    bhc[upd] = HL[upd, bi[upd]]  # pre-lam cumsum
+        else:
+            # -- fused: one scatter for all (node, feature, bin) ------------
+            sc.ensure(cells, m)
+            keys = data.key_off[:, orig]
+            keys += (np.repeat(aM, zcounts[c0:c1]) * dn)[None, :]
+            flat = keys.reshape(-1)
+            GL = np.bincount(
+                flat, weights=np.tile(wg, d), minlength=cells
+            ).reshape(M, d, nbmax)
+            if hess_unit:
+                HL = np.bincount(flat, minlength=cells).astype(
+                    np.float64
+                ).reshape(M, d, nbmax)
+            else:
+                HL = np.bincount(
+                    flat, weights=np.tile(wh, d), minlength=cells
+                ).reshape(M, d, nbmax)
+            np.cumsum(GL, axis=2, out=GL)
+            np.cumsum(HL, axis=2, out=HL)
+            HR = sc.HR[:cells].reshape(M, d, nbmax)
+            GR = sc.GR[:cells].reshape(M, d, nbmax)
+            gain = sc.gain[:cells].reshape(M, d, nbmax)
+            bad = sc.bad[:cells].reshape(M, d, nbmax)
+            bad2 = sc.bad2[:cells].reshape(M, d, nbmax)
+            np.less(HL, mcw, out=bad)
+            np.subtract(Hn[:, :, None], HL, out=HR)
+            np.less(HR, mcw, out=bad2)
+            np.logical_or(bad, bad2, out=bad)
+            np.logical_or(bad, sc.invalid_cut[None, :, :], out=bad)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                np.multiply(GL, GL, out=gain)
+                if lam != 0.0:
+                    HLlam = sc.HLlam[:cells].reshape(M, d, nbmax)
+                    np.add(HL, lam, out=HLlam)
+                    gain /= HLlam
+                else:
+                    gain /= HL
+                np.subtract(Gn[:, :, None], GL, out=GR)
+                GR *= GR
+                HR += lam
+                GR /= HR
+                gain += GR
+                gain -= Pn[:, :, None]
+                gain *= 0.5
+                if cfg.gamma != 0.0:
+                    gain -= cfg.gamma
+            np.copyto(gain, -np.inf, where=bad)
+            if col_mask is not None:
+                np.copyto(gain, -np.inf, where=~col_mask[c0:c1, :, None])
+            # First-occurrence argmax over row-major (feature, bin)
+            # replicates the reference tie-breaking.
+            flatg = gain.reshape(M, dn)
+            bi = np.argmax(flatg, axis=1)
+            bgc[:] = flatg[aM, bi]
+            bjc[:] = bi // nbmax
+            bbc[:] = bi % nbmax
+            bhc[:] = HL.reshape(M, dn)[aM, bi]  # pre-lam cumsum
+
+
+def build_forest_batched(
+    data: BinnedData,
+    grads: np.ndarray,
+    hesses: np.ndarray,
+    cfg: TreeBuilderConfig,
+    rngs=None,
+    colsample: float = 1.0,
+) -> List[Tuple[TreeArrays, np.ndarray]]:
+    """Grow all ``B`` independent trees level-by-level in lockstep.
+
+    ``grads``/``hesses`` are ``[B, n]`` per-tree gradient/hessian rows over
+    the shared binning.  Returns one ``(tree, leaf_of_row)`` pair per tree,
+    bit-identical to running the reference builder per tree (``colsample ==
+    1.0``; with ``colsample < 1.0``, ``rngs`` must hold one generator per
+    tree, consumed per tree in BFS frontier order — the level engine's order,
+    so single-tree batched builds replay the level engine exactly).
+
+    The heavy per-level work — per-node G/H sums, histogram + best-split
+    search, and the row partition — runs in the native kernels of
+    ``_native.py`` when a C compiler is available (bit-exact by construction
+    and load-time self-test), falling back to vectorized numpy layouts
+    otherwise:
+
+    - *fused* (small frontiers): one scatter-add over flattened
+      ``(node, feature, bin)`` keys for every candidate node of every tree,
+      then one gain chain and one argmax — per-level launch overhead is paid
+      once for the whole forest.
+    - *feature-major* (large frontiers): per feature, a ``[nodes, bins]``
+      histogram small enough to stay cache-resident through its entire
+      cumsum -> gain -> argmax chain, with a running strict-``>`` best-split
+      update that replicates the reference's feature iteration (earlier
+      feature wins ties).
+    """
+    grads = np.ascontiguousarray(grads, np.float64)
+    hesses = np.ascontiguousarray(hesses, np.float64)
+    B, n = grads.shape
+    Xb = data.Xb
+    d = Xb.shape[1]
+    lam = cfg.reg_lambda
+    mcw = cfg.min_child_weight
+    nbmax = data.nbmax
+    dn = d * nbmax
+    nat = _native.available()
+    sc = _batched_scratch(data)
+    XbT = getattr(data, "_XbT", None)
+    if XbT is None:
+        XbT = data._XbT = np.ascontiguousarray(Xb.T)
+
+    sample_cols = colsample < 1.0 and rngs is not None
+    k_cols = max(1, int(round(colsample * d))) if sample_cols else d
+    grad_flat = grads.reshape(-1)
+    hess_flat = hesses.reshape(-1)
+    # Integer hessians (RF bootstrap counts, GBT regression's 0/1 subsample
+    # mask) make every hessian sum exact in any order, so H flows down the
+    # tree by subtraction (child = parent - sibling) instead of per-level
+    # segment sums, and with 0/1 hessians the hessian histogram degenerates
+    # to an unweighted key count.  Zero-weight rows contribute exact +0.0 to
+    # every histogram bin (the level engine's rule), so the numpy layouts may
+    # drop them from the scatter and the native kernel may keep them.
+    hess_int = mcw > 0 and bool(np.all(hesses == np.floor(hesses)))
+    hess_one = bool(np.all(hesses == 1.0))
+    hess_unit = hess_one or (
+        hess_int
+        and bool(np.all(np.where(hesses == 0.0, grads == 0.0, hesses == 1.0)))
+    )
+    nz_flat = None
+    all_nz = True
+    if not nat:
+        nz_flat = (grad_flat != 0.0) | (hess_flat != 0.0)
+        all_nz = bool(nz_flat.all())
+
+    # Frontier state over all trees at once.  Rows are keyed by flat id
+    # t*n + row; each frontier node's rows stay grouped and ascending.
+    srows = np.arange(B * n, dtype=np.int64)
+    counts = np.full(B, n, dtype=np.int64)
+    node_tree = np.arange(B, dtype=np.int64)
+    node_bfs = np.zeros(B, dtype=np.int64)  # per-tree BFS id of each node
+    n_alloc = np.ones(B, dtype=np.int64)
+    leaf_flat = np.zeros(B * n, dtype=np.int64)
+    H_state = hesses.sum(axis=1) if hess_int else None
+
+    feat_lv: List[np.ndarray] = []
+    thr_lv: List[np.ndarray] = []
+    left_lv: List[np.ndarray] = []
+    right_lv: List[np.ndarray] = []
+    val_lv: List[np.ndarray] = []
+    gain_lv: List[np.ndarray] = []
+    cov_lv: List[np.ndarray] = []
+    tree_lv: List[np.ndarray] = []
+    bfs_lv: List[np.ndarray] = []
+
+    for depth in range(cfg.max_depth + 1):
+        F = counts.shape[0]
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        at_root = depth == 0
+        gsort = hsort = None
+        G = np.empty(F)
+        if nat:
+            _native.segment_sums(grad_flat, srows, starts[:-1], counts, G)
+        else:
+            gsort = grad_flat if at_root else np.take(grad_flat, srows)
+            _segment_sums(gsort, starts[:-1], counts, G)
+        if hess_int:
+            H = H_state
+        else:
+            H = np.empty(F)
+            if nat:
+                _native.segment_sums(hess_flat, srows, starts[:-1], counts, H)
+            else:
+                hsort = hess_flat if at_root else np.take(hess_flat, srows)
+                _segment_sums(hsort, starts[:-1], counts, H)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            value = -G / (H + lam)
+            parent_score = G * G / (H + lam)
+
+        leaf_rule = (
+            (depth >= cfg.max_depth)
+            | (counts < cfg.min_samples_split)
+            | (H < 2 * mcw)
+        )
+        split_feature = np.full(F, -1, np.int64)
+        split_bin = np.zeros(F, np.int64)
+        split_gain = np.zeros(F, np.float64)
+        split_thr = np.zeros(F, np.float64)
+        Hl_split = np.zeros(F, np.float64) if hess_int else None
+
+        cand = np.flatnonzero(~leaf_rule)
+        C = cand.size
+        if C and nbmax > 1:
+            col_mask = None
+            if sample_cols:
+                # Per-tree RNG, consumed in each tree's BFS frontier order
+                # (the level engine's order), independent of tree count.
+                col_mask = np.zeros((C, d), bool)
+                order = np.argsort(
+                    node_tree[cand] * (np.int64(1) << 40) + node_bfs[cand],
+                    kind="stable",
+                )
+                for ci in order:
+                    t = int(node_tree[cand[ci]])
+                    col_mask[ci, rngs[t].choice(d, size=k_cols, replace=False)] = True
+
+            best_gain = np.full(C, -np.inf)
+            best_j = np.zeros(C, np.int64)
+            best_b = np.zeros(C, np.int64)
+            best_hl = np.zeros(C)
+
+            if nat and mcw > 0:
+                # Candidate rows are contiguous ranges of srows — the kernel
+                # gathers grad/hess and bins per row itself, so no compaction
+                # or weight materialization happens on the Python side.
+                _native.split_finder(
+                    starts[cand], starts[cand + 1], srows, Xb, grad_flat,
+                    None if hess_one else hess_flat,
+                    np.ascontiguousarray(G[cand]),
+                    np.ascontiguousarray(H[cand]),
+                    np.ascontiguousarray(parent_score[cand]),
+                    data.nb, col_mask, lam, mcw, cfg.gamma,
+                    best_gain, best_j, best_b, best_hl,
+                )
+            else:
+                _numpy_split_search(
+                    data, sc, XbT, srows, starts, counts, cand, gsort,
+                    grad_flat, hess_flat, nz_flat, all_nz, at_root, G, H,
+                    parent_score, leaf_rule, cfg, lam, mcw, hess_unit,
+                    col_mask, best_gain, best_j, best_b, best_hl,
+                    n, d, nbmax, dn,
+                )
+
+            do = best_gain > 0.0
+            tgt = cand[do]
+            split_feature[tgt] = best_j[do]
+            split_bin[tgt] = best_b[do]
+            split_gain[tgt] = best_gain[do]
+            split_thr[tgt] = data.thr_pad[best_j[do], best_b[do]]
+            if Hl_split is not None:
+                Hl_split[tgt] = best_hl[do]
+
+        is_split = split_feature >= 0
+        sn = np.flatnonzero(is_split)
+        S = sn.size
+        # Children are allocated all-left-then-all-right per level; ids live
+        # in each tree's own BFS numbering (a tree's nodes appear within
+        # every level block in its own BFS order).
+        st = node_tree[sn]
+        S_t = np.bincount(st, minlength=B)
+        if S:
+            perm = np.argsort(st, kind="stable")
+            gstart = np.concatenate([[0], np.cumsum(S_t)])[:-1]
+            rank = np.empty(S, np.int64)
+            rank[perm] = np.arange(S) - gstart[st[perm]]
+            lid = n_alloc[st] + rank
+            rid = lid + S_t[st]
+        else:
+            lid = rid = np.empty(0, np.int64)
+
+        lcol = node_bfs.copy()
+        rcol = node_bfs.copy()
+        if S:
+            lcol[sn] = lid
+            rcol[sn] = rid
+        feat_lv.append(split_feature)
+        thr_lv.append(split_thr)
+        left_lv.append(lcol)
+        right_lv.append(rcol)
+        val_lv.append(value)
+        gain_lv.append(np.where(is_split, split_gain, 0.0))
+        cov_lv.append(H)
+        tree_lv.append(node_tree)
+        bfs_lv.append(node_bfs)
+
+        if S == 0:
+            leaf_flat[srows] = np.repeat(node_bfs, counts)
+            break
+        scounts = counts[sn]
+        if S < F:
+            row_split = np.repeat(is_split, counts)
+            settled = srows[~row_split]
+            leaf_flat[settled] = np.repeat(node_bfs[~is_split], counts[~is_split])
+        if nat:
+            srows, lcounts = _native.partition(
+                starts[sn], starts[sn + 1], srows, Xb,
+                split_feature[sn], split_bin[sn],
+            )
+        else:
+            arows = srows if S == F else srows[row_split]
+            rj = np.repeat(split_feature[sn], scounts)
+            rb = np.repeat(split_bin[sn], scounts)
+            go_left = Xb[arows % n, rj] <= rb
+            seg = np.concatenate([[0], np.cumsum(scounts)[:-1]])
+            lcounts = np.add.reduceat(go_left.astype(np.int64), seg)
+            srows = np.concatenate([arows[go_left], arows[~go_left]])
+        counts = np.concatenate([lcounts, scounts - lcounts])
+        node_tree = np.concatenate([st, st])
+        node_bfs = np.concatenate([lid, rid])
+        n_alloc += 2 * S_t
+        if hess_int:
+            Hl = Hl_split[sn]
+            H_state = np.concatenate([Hl, H[sn] - Hl])
+
+    # Assemble per-tree BFS arrays with one scatter per field, then permute
+    # each tree into the reference's DFS emission order.
+    tree_all = np.concatenate(tree_lv)
+    bfs_all = np.concatenate(bfs_lv)
+    tree_base = np.concatenate([[0], np.cumsum(n_alloc)])
+    pos = tree_base[tree_all] + bfs_all
+    ntot = int(tree_base[-1])
+
+    def scat(chunks, dtype=np.float64):
+        buf = np.empty(ntot, dtype)
+        buf[pos] = np.concatenate(chunks)
+        return buf
+
+    feat_a = scat(feat_lv, np.int64)
+    thr_a = scat(thr_lv)
+    left_a = scat(left_lv, np.int64)
+    right_a = scat(right_lv, np.int64)
+    val_a = scat(val_lv)
+    gain_a = scat(gain_lv)
+    cov_a = scat(cov_lv)
+
+    out: List[Tuple[TreeArrays, np.ndarray]] = []
+    for t in range(B):
+        lo, hi = int(tree_base[t]), int(tree_base[t + 1])
+        tree, leaf = _relabel_to_reference_order(
+            feat_a[lo:hi],
+            thr_a[lo:hi],
+            left_a[lo:hi],
+            right_a[lo:hi],
+            val_a[lo:hi],
+            gain_a[lo:hi],
+            cov_a[lo:hi],
+            leaf_flat[t * n : (t + 1) * n],
+        )
+        out.append((tree, leaf))
+    return out
+
+
+def _build_batched(
+    Xb,
+    edges: list,
+    grad: np.ndarray,
+    hess: np.ndarray,
+    cfg: TreeBuilderConfig,
+    rng: Optional[np.random.Generator],
+    colsample: float,
+) -> Tuple[TreeArrays, np.ndarray]:
+    """Single-tree entry point: the batched kernel with B=1 (shares the
+    ensemble scratch via BinnedData, consumes ``rng`` in the level engine's
+    frontier order).
+
+    Tiny builds delegate to the level engine: below ~50 rows the batched
+    frontier bookkeeping costs more than it saves, and the two engines are
+    bit-identical for single trees (including the colsample RNG stream), so
+    the delegation is invisible in the output."""
+    if grad.shape[0] <= 48:
+        return _build_levelwise(Xb, edges, grad, hess, cfg, rng, colsample)
+    data = Xb if isinstance(Xb, BinnedData) else BinnedData.build(Xb, edges)
+    rngs = [rng] if rng is not None else None
+    return build_forest_batched(
+        data, grad[None, :], hess[None, :], cfg, rngs=rngs, colsample=colsample
+    )[0]
+
+
+_ENGINES = {
+    "batched": _build_batched,
+    "level": _build_levelwise,
+    "reference": _build_reference,
+}
 
 
 def build_tree_with_leaves(
@@ -603,7 +1269,7 @@ def build_tree_with_leaves(
     leaf values instead of re-descending every row (``predict_tree_np``) each
     round.
     """
-    name = engine or DEFAULT_ENGINE
+    name = resolve_engine(engine)
     try:
         fn = _ENGINES[name]
     except KeyError:

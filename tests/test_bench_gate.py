@@ -1,0 +1,218 @@
+"""Bench regression gate (tools/bench_gate.py) + benchmark harness exit codes.
+
+The gate compares a fresh fast-bench run against the committed BENCH_*.json
+with median calibration: a uniform machine-speed factor passes, a single
+regressed benchmark fails, and identical_trees=false / missing artifacts are
+hard failures at any tolerance.
+"""
+
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+
+import bench_gate  # noqa: E402
+
+
+def _fit_art():
+    return {
+        "schema": 2,
+        "fit": {
+            "gbt_paper_n141": {
+                "n": 141, "estimators": 100,
+                "batched_s": 0.05, "level_s": 0.2, "reference_s": 1.5,
+                "speedup_batched": 4.0, "identical_trees": True,
+            },
+            "gbt_paper_n1024": {
+                "n": 1024, "estimators": 100,
+                "batched_s": 0.1, "level_s": 0.5, "reference_s": 2.2,
+                "speedup_batched": 5.0, "identical_trees": True,
+            },
+            "rf_paper_d10_n141": {
+                "n": 141, "estimators": 50,
+                "batched_s": 0.02, "level_s": 0.2, "reference_s": 1.1,
+                "speedup_batched": 10.0, "identical_trees": True,
+            },
+            "rf_paper_n1024_b100": {
+                "n": 1024, "estimators": 100,
+                "batched_s": 0.15, "level_s": 1.2,
+                "speedup_batched": 8.0, "identical_trees": True,
+            },
+        },
+        "recommend": {
+            "xgboost_paper_1800": {"candidates": 1800, "best_ms": 7.0,
+                                   "configs_per_s": 250000},
+        },
+    }
+
+
+def _loop_art():
+    return {
+        "schema": 1,
+        "campaign_cycles": [
+            {"cycle": 0, "refit_ms": 100.0, "recommend_ms": 200.0, "cycle_s": 1.0},
+            {"cycle": 1, "refit_ms": 90.0, "recommend_ms": 150.0, "cycle_s": 0.9},
+        ],
+        "synthetic_cycles": [
+            {"cycle": 0, "refit_ms": 120.0, "recommend_ms": 80.0, "cycle_s": 0.5},
+        ],
+    }
+
+
+def _fleet_art():
+    return {
+        "schema": 1,
+        "runs": [
+            {"collectors": 1, "rows": 24, "wall_s": 36.0, "rows_per_s": 0.66,
+             "speedup_vs_1": 1.0, "n_failures": 0},
+            {"collectors": 2, "rows": 24, "wall_s": 19.0, "rows_per_s": 1.25,
+             "speedup_vs_1": 1.88, "n_failures": 0},
+        ],
+    }
+
+
+@pytest.fixture()
+def arts(tmp_path):
+    committed = tmp_path / "repo"
+    fresh = tmp_path / "fresh"
+    committed.mkdir()
+    fresh.mkdir()
+    for d in (committed, fresh):
+        (d / "BENCH_fit.json").write_text(json.dumps(_fit_art()))
+        (d / "BENCH_loop.json").write_text(json.dumps(_loop_art()))
+        (d / "BENCH_fleet.json").write_text(json.dumps(_fleet_art()))
+    return committed, fresh
+
+
+def _rewrite(d, name, obj):
+    (d / name).write_text(json.dumps(obj))
+
+
+def test_gate_passes_on_identical_artifacts(arts):
+    committed, fresh = arts
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard and not gate.soft
+    assert gate.compared > 0
+
+
+def test_gate_calibrates_uniform_machine_factor(arts):
+    """A uniformly 3x slower runner is NOT a regression."""
+    committed, fresh = arts
+    art = _fit_art()
+    for row in art["fit"].values():
+        for f in ("batched_s", "level_s", "reference_s"):
+            if f in row:
+                row[f] *= 3.0
+    art["recommend"]["xgboost_paper_1800"]["best_ms"] *= 3.0
+    _rewrite(fresh, "BENCH_fit.json", art)
+    loop = _loop_art()
+    for track in ("campaign_cycles", "synthetic_cycles"):
+        for c in loop[track]:
+            for f in ("refit_ms", "recommend_ms", "cycle_s"):
+                c[f] *= 3.0
+    _rewrite(fresh, "BENCH_loop.json", loop)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard and not gate.soft
+
+
+def test_gate_catches_injected_10x_slowdown(arts):
+    """One benchmark regressing 10x must fail even on a 2x-slower machine."""
+    committed, fresh = arts
+    art = _fit_art()
+    for row in art["fit"].values():
+        for f in ("batched_s", "level_s", "reference_s"):
+            if f in row:
+                row[f] *= 2.0  # machine factor
+    art["fit"]["gbt_paper_n1024"]["batched_s"] *= 10.0  # the regression
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("gbt_paper_n1024.batched_s" in m for m in gate.soft)
+
+
+def test_gate_hard_fails_on_identical_trees_false(arts):
+    committed, fresh = arts
+    art = _fit_art()
+    art["fit"]["rf_paper_d10_n141"]["identical_trees"] = False
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("identical_trees" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_on_missing_fresh_artifact(arts):
+    committed, fresh = arts
+    (fresh / "BENCH_fleet.json").unlink()
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("BENCH_fleet.json" in m and "missing" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_on_config_drift(arts):
+    """Same key but different n/estimators means the bench changed shape —
+    timings are not comparable and the gate must say so."""
+    committed, fresh = arts
+    art = _fit_art()
+    art["fit"]["gbt_paper_n141"]["estimators"] = 10
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("config drifted" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_on_fleet_collector_failures(arts):
+    committed, fresh = arts
+    art = _fleet_art()
+    art["runs"][1]["n_failures"] = 2
+    _rewrite(fresh, "BENCH_fleet.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("collector failures" in m for m in gate.hard)
+
+
+def test_gate_main_exit_codes(arts):
+    committed, fresh = arts
+    assert bench_gate.main(["--fresh", str(fresh), "--repo-root", str(committed)]) == 0
+    art = _fit_art()
+    art["fit"]["gbt_paper_n141"]["identical_trees"] = False
+    _rewrite(fresh, "BENCH_fit.json", art)
+    assert bench_gate.main(["--fresh", str(fresh), "--repo-root", str(committed)]) == 1
+
+
+# ---------------------------------------------------------------- benchmarks.run
+
+
+def test_bench_run_exits_nonzero_when_group_raises(monkeypatch):
+    """A broken bench group must fail the run (CI must not green-light a
+    partial benchmark pass)."""
+    import benchmarks.fit_bench as fit_bench
+    import benchmarks.run as bench_run
+
+    def boom(fast, artifact_dir=None):
+        raise RuntimeError("injected bench failure")
+
+    monkeypatch.setattr(fit_bench, "bench_fit", boom)
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--fast", "--only", "fit"])
+    assert exc.value.code == 1
+
+
+def test_bench_run_unknown_group_is_an_error():
+    import benchmarks.run as bench_run
+
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--fast", "--only", "nonexistent_group"])
+    assert exc.value.code == 2
+
+
+def test_gate_hard_fails_when_required_fast_row_is_dropped(arts):
+    """The fast run silently dropping one of its required rows (e.g. a new
+    skip condition in fit_bench) must hard-fail, not pass by omission."""
+    committed, fresh = arts
+    art = _fit_art()
+    del art["fit"]["rf_paper_d10_n141"]
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any(
+        "rf_paper_d10_n141" in m and "silently dropped" in m for m in gate.hard
+    )

@@ -64,7 +64,7 @@ def test_unimportable_module_fails(tmp_path, capsys):
                  "PYTHONPATH=src python -m repro.no_such_module --fast\n"
                  "```\n")
     assert tool.main([str(root)]) == 1
-    assert "module missing or CLI broken" in capsys.readouterr().err
+    assert "target missing or CLI broken" in capsys.readouterr().err
 
 
 def test_subcommand_flags_resolve_against_subparser(tmp_path):
@@ -92,6 +92,43 @@ def test_extract_cli_commands_parsing():
     )
     cmds = tool.extract_cli_commands(text)
     assert cmds == [
-        ("repro.data.campaign", ["list"]),
-        ("repro.data.campaign", ["merge", "a.jsonl", "--out", "b.jsonl"]),
+        ("module", "repro.data.campaign", ["list"]),
+        ("module", "repro.data.campaign", ["merge", "a.jsonl", "--out", "b.jsonl"]),
     ]
+
+
+def test_script_cli_references_are_verified(tmp_path, capsys):
+    """``python tools/<script>.py`` lines get the same --help treatment as
+    ``python -m`` modules (the bench-gate CLI is documented this way)."""
+    tool = _tool()
+    root = tmp_path
+    tools = root / "tools"
+    tools.mkdir()
+    (tools / "okscript.py").write_text(
+        "import argparse\n"
+        "p = argparse.ArgumentParser()\n"
+        "p.add_argument('--fresh')\n"
+        "p.parse_args()\n"
+    )
+    (root / "README.md").write_text(
+        "```bash\n"
+        "python tools/okscript.py --fresh /tmp/x\n"
+        "```\n"
+    )
+    assert tool.main([str(root)]) == 0
+
+    (root / "README.md").write_text(
+        "```bash\n"
+        "python tools/okscript.py --no-such-flag\n"
+        "```\n"
+    )
+    assert tool.main([str(root)]) == 1
+    assert "--no-such-flag" in capsys.readouterr().err
+
+    (root / "README.md").write_text(
+        "```bash\n"
+        "python tools/missing_script.py --fresh x\n"
+        "```\n"
+    )
+    assert tool.main([str(root)]) == 1
+    assert "target missing or CLI broken" in capsys.readouterr().err

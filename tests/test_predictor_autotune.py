@@ -288,3 +288,52 @@ def test_online_autotuner_column_store_matches_rows():
     assert (tuner._store.column(spec.target) > 0).all()
     assert tuner.maybe_refit()
     assert tuner.n_observations == 12
+
+
+def test_autotuner_refit_honors_repro_tree_engine_env(monkeypatch):
+    """REPRO_TREE_ENGINE set *after* import must steer OnlineAutotuner
+    refits: engine resolution happens at fit time, not import time."""
+    from repro.core import tree as tree_mod
+
+    calls = []
+    real = tree_mod._ENGINES["reference"]
+
+    def spy(*args, **kwargs):
+        calls.append("reference")
+        return real(*args, **kwargs)
+
+    monkeypatch.setitem(tree_mod._ENGINES, "reference", spy)
+    monkeypatch.setenv("REPRO_TREE_ENGINE", "reference")
+    tuner = OnlineAutotuner(
+        refit_every=1, min_observations=8,
+        space=ConfigSpace(batch_size=(32,), num_workers=(0, 2),
+                          block_kb=(64,), n_threads=(1,), prefetch_depth=(1,)),
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        w = int(rng.choice([0, 2]))
+        thr = 50.0 * (1 + w)
+        tuner.observe({"batch_size": 32, "num_workers": w, "block_kb": 64}, thr)
+    assert tuner.maybe_refit()
+    assert calls, "refit did not route through the engine named by REPRO_TREE_ENGINE"
+
+
+def test_predictor_engine_argument_overrides_env(monkeypatch):
+    """An explicit engine= on the predictor beats REPRO_TREE_ENGINE."""
+    from repro.core import FEATURE_NAMES, tree as tree_mod
+    from repro.core.predictor import IOPerformancePredictor
+
+    calls = []
+    real = tree_mod._ENGINES["level"]
+
+    def spy(*args, **kwargs):
+        calls.append("level")
+        return real(*args, **kwargs)
+
+    monkeypatch.setitem(tree_mod._ENGINES, "level", spy)
+    monkeypatch.setenv("REPRO_TREE_ENGINE", "reference")
+    rng = np.random.default_rng(1)
+    cols = {name: rng.random(40) * 10 for name in FEATURE_NAMES}
+    cols["target_throughput"] = rng.random(40) * 100 + 10
+    IOPerformancePredictor(model="xgboost", engine="level").fit(cols)
+    assert calls, "explicit engine= was not honored"

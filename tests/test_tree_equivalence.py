@@ -1,20 +1,25 @@
-"""Golden equivalence: the level-wise tree engine must reproduce the reference
-DFS builder *exactly* — same arrays, same node numbering, same leaf routing —
-on the paper model configs and across a property sweep of builder settings.
-(The oracle stays available via engine="reference" / REPRO_TREE_ENGINE.)"""
+"""Golden equivalence: the level-wise and batched tree engines must reproduce
+the reference DFS builder *exactly* — same arrays, same node numbering, same
+leaf routing — on the paper model configs and across a property sweep of
+builder settings.  (The oracle stays available via engine="reference" /
+REPRO_TREE_ENGINE; the batched engine additionally proves its native-C and
+pure-numpy code paths identical.)"""
 
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import GBTBinaryClassifier, GBTConfig, GBTRegressor, RandomForestRegressor, RFConfig
+from repro.core import _native
 from repro.core.tree import (
     BinnedData,
     TreeBuilderConfig,
     bin_features,
+    build_forest_batched,
     build_tree,
     build_tree_with_leaves,
     compute_bins,
+    resolve_engine,
 )
 
 TREE_FIELDS = ("feature", "threshold", "left", "right", "value", "gain", "cover")
@@ -52,23 +57,25 @@ def test_gbt_paper_config_engines_identical():
     """Paper §3.3.2 GBT (depth 6, lr 0.1, subsample 0.8): byte-identical fit."""
     X, y = _data()
     cfg = GBTConfig(n_estimators=12, seed=3)  # paper hyperparams, fewer rounds
-    m_level = GBTRegressor(cfg, engine="level").fit(X, y)
     m_ref = GBTRegressor(cfg, engine="reference").fit(X, y)
-    _assert_ensembles_identical(m_level.ensemble, m_ref.ensemble)
-    np.testing.assert_array_equal(
-        m_level.feature_importances_, m_ref.feature_importances_
-    )
-    np.testing.assert_array_equal(m_level.predict(X), m_ref.predict(X))
+    for engine in ("level", "batched"):
+        m_e = GBTRegressor(cfg, engine=engine).fit(X, y)
+        _assert_ensembles_identical(m_e.ensemble, m_ref.ensemble)
+        np.testing.assert_array_equal(
+            m_e.feature_importances_, m_ref.feature_importances_
+        )
+        np.testing.assert_array_equal(m_e.predict(X), m_ref.predict(X))
 
 
 def test_rf_paper_config_engines_identical():
     """Paper §3.3.2 RF (depth 10, min_samples_split 5): byte-identical fit."""
     X, y = _data()
     cfg = RFConfig(n_estimators=8, seed=5)  # paper tree params, fewer trees
-    m_level = RandomForestRegressor(cfg, engine="level").fit(X, y)
     m_ref = RandomForestRegressor(cfg, engine="reference").fit(X, y)
-    _assert_ensembles_identical(m_level.ensemble, m_ref.ensemble)
-    np.testing.assert_array_equal(m_level.predict(X), m_ref.predict(X))
+    for engine in ("level", "batched"):
+        m_e = RandomForestRegressor(cfg, engine=engine).fit(X, y)
+        _assert_ensembles_identical(m_e.ensemble, m_ref.ensemble)
+        np.testing.assert_array_equal(m_e.predict(X), m_ref.predict(X))
 
 
 def test_gbt_classifier_engines_identical():
@@ -76,19 +83,28 @@ def test_gbt_classifier_engines_identical():
     X = rng.normal(size=(220, 5))
     y = (X[:, 0] + X[:, 1] ** 2 > 0.4).astype(np.float64)
     cfg = GBTConfig(n_estimators=10, max_depth=3, seed=0)
-    m_level = GBTBinaryClassifier(cfg, engine="level").fit(X, y)
     m_ref = GBTBinaryClassifier(cfg, engine="reference").fit(X, y)
-    _assert_ensembles_identical(m_level.ensemble, m_ref.ensemble)
-    np.testing.assert_array_equal(m_level.predict_proba(X), m_ref.predict_proba(X))
+    for engine in ("level", "batched"):
+        m_e = GBTBinaryClassifier(cfg, engine=engine).fit(X, y)
+        _assert_ensembles_identical(m_e.ensemble, m_ref.ensemble)
+        np.testing.assert_array_equal(m_e.predict_proba(X), m_ref.predict_proba(X))
 
 
-def test_default_engine_is_levelwise_and_flag_gated():
+def test_default_engine_is_batched_and_flag_gated(monkeypatch):
     from repro.core import tree as tree_mod
 
     assert tree_mod.DEFAULT_ENGINE in tree_mod._ENGINES
+    assert set(tree_mod._ENGINES) == {"batched", "level", "reference"}
     with pytest.raises(ValueError, match="unknown tree engine"):
         build_tree(np.zeros((4, 2), np.uint16), [np.array([0.5])] * 2,
                    np.zeros(4), np.ones(4), TreeBuilderConfig(), engine="nope")
+    # resolve_engine precedence: explicit beats env beats built-in default,
+    # and the env var is re-read at call time (not import time).
+    monkeypatch.delenv("REPRO_TREE_ENGINE", raising=False)
+    assert resolve_engine() == "batched"
+    monkeypatch.setenv("REPRO_TREE_ENGINE", "reference")
+    assert resolve_engine() == "reference"
+    assert resolve_engine("level") == "level"
 
 
 # ---------------------------------------------------------------- single trees
@@ -116,12 +132,13 @@ def _tree_case(n, d, depth, bins, seed, zero_frac=0.0, int_hess=False, round_X=F
 
 def _assert_engines_match(Xb, edges, g, h, cfg):
     t_ref, leaf_ref = build_tree_with_leaves(Xb, edges, g, h, cfg, engine="reference")
-    t_lvl, leaf_lvl = build_tree_with_leaves(Xb, edges, g, h, cfg, engine="level")
-    _assert_trees_identical(t_ref, t_lvl)
-    np.testing.assert_array_equal(leaf_ref, leaf_lvl)
-    # every routed leaf really is a leaf
-    assert (t_lvl.feature[leaf_lvl] == -1).all()
-    return t_lvl
+    for engine in ("level", "batched"):
+        t_e, leaf_e = build_tree_with_leaves(Xb, edges, g, h, cfg, engine=engine)
+        _assert_trees_identical(t_ref, t_e)
+        np.testing.assert_array_equal(leaf_ref, leaf_e, err_msg=f"engine {engine!r}")
+        # every routed leaf really is a leaf
+        assert (t_e.feature[leaf_e] == -1).all()
+    return t_ref
 
 
 def test_leaf_assignment_matches_reference_and_is_terminal():
@@ -203,3 +220,124 @@ def test_engine_equivalence_regularizers_property(
         max_bins=32,
     )
     _assert_engines_match(Xb, edges, -(y - y.mean()), np.ones(n), cfg)
+
+
+# ---------------------------------------------------------------- batched engine
+
+
+def _rf_data(n=500, d=8, seed=11):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = X[:, 0] * 2 - X[:, 1] ** 2 + 0.1 * rng.normal(size=n)
+    return X, y
+
+
+def test_build_forest_batched_matches_reference_per_tree():
+    """The ensemble API grows every tree bit-identically to per-tree
+    reference builds on the same (grad, hess) rows (RF bootstrap weights)."""
+    X, y = _rf_data()
+    n = X.shape[0]
+    rng = np.random.default_rng(3)
+    edges = compute_bins(X, 32)
+    data = BinnedData.build(bin_features(X, edges), edges)
+    cfg = TreeBuilderConfig(max_depth=8, min_samples_split=5,
+                            min_child_weight=1.0, reg_lambda=0.0, max_bins=32)
+    W = np.stack([
+        np.bincount(rng.integers(0, n, n), minlength=n).astype(np.float64)
+        for _ in range(6)
+    ])
+    grads = -(y - y.mean())[None, :] * W
+    for t, (tree, leaf) in enumerate(build_forest_batched(data, grads, W, cfg)):
+        t_ref, leaf_ref = build_tree_with_leaves(
+            data, None, grads[t], W[t], cfg, engine="reference"
+        )
+        _assert_trees_identical(t_ref, tree)
+        np.testing.assert_array_equal(leaf_ref, leaf, err_msg=f"tree {t}")
+
+
+def test_rf_all_engines_identical_bootstrap():
+    """RF fit (bootstrap weights, colsample=1.0) is bit-identical across all
+    three engines — the batched path pre-draws the same bootstrap stream."""
+    X, y = _rf_data(400, 6)
+    cfg = RFConfig(n_estimators=7, max_depth=7, seed=9)
+    m_ref = RandomForestRegressor(cfg, engine="reference").fit(X, y)
+    for engine in ("level", "batched"):
+        m_e = RandomForestRegressor(cfg, engine=engine).fit(X, y)
+        _assert_ensembles_identical(m_e.ensemble, m_ref.ensemble)
+        np.testing.assert_array_equal(
+            m_e.feature_importances_, m_ref.feature_importances_
+        )
+
+
+def test_rf_colsample_engines_equivalent():
+    """With colsample < 1.0 the batched RF path keeps the per-tree loop, so
+    batched fits stay bit-identical to the level engine (single-tree batched
+    builds replay its RNG stream); the reference engine consumes the RNG in
+    DFS order instead (documented), so it agrees statistically, not bitwise."""
+    X, y = _rf_data(600, 8, seed=21)
+    cfg = RFConfig(n_estimators=30, max_depth=7, colsample=0.5, seed=2)
+    m_lvl = RandomForestRegressor(cfg, engine="level").fit(X, y)
+    m_bat = RandomForestRegressor(cfg, engine="batched").fit(X, y)
+    _assert_ensembles_identical(m_bat.ensemble, m_lvl.ensemble)
+    m_ref = RandomForestRegressor(cfg, engine="reference").fit(X, y)
+    base = m_ref.predict(X)
+    r2 = 1.0 - float(np.mean((m_bat.predict(X) - base) ** 2)) / float(np.var(base))
+    assert r2 > 0.9, f"colsample fit diverges from reference (r2={r2:.3f})"
+
+
+def test_batched_single_tree_colsample_replays_level_engine():
+    """B=1 batched builds consume the column-sampling RNG in the level
+    engine's frontier order, so single-tree colsample fits replay exactly."""
+    rng = np.random.default_rng(5)
+    n, d = 300, 8
+    X = rng.normal(size=(n, d))
+    y = rng.normal(size=n)
+    edges = compute_bins(X, 24)
+    Xb = bin_features(X, edges)
+    cfg = TreeBuilderConfig(max_depth=6, max_bins=24)
+    g = -(y - y.mean())
+    h = np.ones(n)
+    t_lvl, leaf_lvl = build_tree_with_leaves(
+        Xb, edges, g, h, cfg, rng=np.random.default_rng(77), colsample=0.5,
+        engine="level",
+    )
+    t_bat, leaf_bat = build_tree_with_leaves(
+        Xb, edges, g, h, cfg, rng=np.random.default_rng(77), colsample=0.5,
+        engine="batched",
+    )
+    _assert_trees_identical(t_lvl, t_bat)
+    np.testing.assert_array_equal(leaf_lvl, leaf_bat)
+
+
+def test_batched_numpy_fallback_matches_native(monkeypatch):
+    """With the native kernels disabled the pure-numpy layouts must produce
+    the same trees (the equivalence that keeps no-compiler platforms safe)."""
+    X, y = _rf_data(350, 7, seed=31)
+    cfg = RFConfig(n_estimators=4, max_depth=9, seed=1)
+    m_native = RandomForestRegressor(cfg, engine="batched").fit(X, y)
+    monkeypatch.setattr(_native, "_tried", True)
+    monkeypatch.setattr(_native, "_lib", None)
+    assert not _native.available()
+    m_numpy = RandomForestRegressor(cfg, engine="batched").fit(X, y)
+    _assert_ensembles_identical(m_native.ensemble, m_numpy.ensemble)
+
+
+def test_segment_sums_fast_matches_loop():
+    from repro.core.tree import _segment_sums_fast, _segment_sums_loop
+
+    rng = np.random.default_rng(17)
+    lens = np.asarray(
+        list(range(0, 132)) + [200, 1000, 8192, 8193, 20000], np.int64
+    )
+    vals = rng.normal(size=int(lens.sum()))
+    vals *= 10.0 ** rng.integers(-8, 8, size=vals.size)
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    a = np.empty(lens.size)
+    b = np.empty(lens.size)
+    _segment_sums_loop(vals, starts, lens, a)
+    _segment_sums_fast(vals, starts, lens, b)
+    # The vectorized emulation either matches this numpy build bit-for-bit
+    # (and then the engine may use it) or the runtime probe must say no.
+    from repro.core.tree import _pairwise_emulation_ok
+
+    assert np.array_equal(a, b) == _pairwise_emulation_ok() or np.array_equal(a, b)

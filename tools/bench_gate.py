@@ -1,0 +1,272 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare a fresh ``make bench-fast`` run against the
+committed ``BENCH_fit.json`` / ``BENCH_loop.json`` / ``BENCH_fleet.json``.
+
+The committed artifacts were produced on a different machine than CI, so raw
+timings are not directly comparable.  The gate is *schema-aware* and
+*median-calibrated*: per artifact it computes the ratio fresh/committed for
+every comparable timing, takes the median ratio as the machine-speed factor,
+and flags any timing whose ratio deviates from that median by more than the
+tolerance (default 35%).  A uniform slowdown (slower runner) calibrates away;
+a single regressed benchmark (e.g. an injected 10x slowdown in one group)
+sticks out and fails the gate.
+
+Hard failures, independent of any tolerance:
+
+- a committed key missing from the fresh run (a benchmark silently dropped),
+- ``identical_trees: false`` anywhere (the engines diverged — correctness),
+- fleet collector failures or non-finite/zero timings in the fresh run.
+
+Usage (CI runs this right after ``make bench-fast``, which leaves the fresh
+artifacts in ``/tmp/repro_io/bench_fast``):
+
+    python tools/bench_gate.py --fresh /tmp/repro_io/bench_fast
+    python tools/bench_gate.py --fresh DIR --tolerance 0.75   # noisy runners
+
+Exit code 0 = gate passed, 1 = regression/hard failure, 2 = usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# (artifact file, loader producing {key: (fresh_value, committed_value)} plus
+# hard failures) — one comparator per artifact schema.
+ARTIFACTS = ("BENCH_fit.json", "BENCH_loop.json", "BENCH_fleet.json")
+
+# The rows a fast (`make bench-fast`) run is REQUIRED to produce.  A fresh
+# run missing one of these means a benchmark silently stopped running —
+# a hard failure at any tolerance.  Changing the fast-mode bench set is
+# intentional friction: update this list in the same commit.
+EXPECTED_FAST_FIT_KEYS = (
+    "gbt_paper_n141",
+    "gbt_paper_n1024",
+    "rf_paper_d10_n141",
+    "rf_paper_n1024_b100",
+)
+EXPECTED_FAST_FLEET_COLLECTORS = (1, 2)
+EXPECTED_FAST_LOOP_CYCLES = 2  # per track
+
+
+class Gate:
+    def __init__(self, tolerance: float, min_ms: float):
+        self.tolerance = tolerance
+        self.min_ms = min_ms
+        self.hard: List[str] = []
+        self.soft: List[str] = []
+        self.compared = 0
+        self.skipped = 0
+
+    # -- helpers ---------------------------------------------------------
+    def hard_fail(self, msg: str) -> None:
+        self.hard.append(msg)
+
+    def compare_timings(
+        self, label: str, pairs: Dict[str, Tuple[float, float]]
+    ) -> None:
+        """Median-calibrated comparison of fresh vs committed timings."""
+        ratios = {}
+        for key, (fresh, committed) in pairs.items():
+            if not (math.isfinite(fresh) and fresh > 0):
+                self.hard_fail(f"{label}: {key} fresh timing is {fresh!r}")
+                continue
+            if not (math.isfinite(committed) and committed > 0):
+                self.skipped += 1
+                continue
+            if committed * 1e3 < self.min_ms and fresh * 1e3 < self.min_ms:
+                self.skipped += 1  # sub-millisecond noise
+                continue
+            ratios[key] = fresh / committed
+        if len(ratios) < 2:
+            return
+        med = sorted(ratios.values())[len(ratios) // 2]
+        lo, hi = 1.0 / (1.0 + self.tolerance), 1.0 + self.tolerance
+        for key, r in sorted(ratios.items()):
+            rel = r / med
+            self.compared += 1
+            if rel > hi:
+                self.soft.append(
+                    f"{label}: {key} is {rel:.2f}x slower than this run's "
+                    f"baseline (fresh/committed={r:.2f}, machine factor "
+                    f"{med:.2f}, tolerance {self.tolerance:.0%})"
+                )
+            elif rel < lo:
+                # faster-than-baseline outliers are informational only
+                pass
+
+    # -- per-artifact schemas -------------------------------------------
+    def check_fit(self, fresh: dict, committed: dict) -> None:
+        pairs: Dict[str, Tuple[float, float]] = {}
+        cfit = committed.get("fit", {})
+        ffit = fresh.get("fit", {})
+        for key in EXPECTED_FAST_FIT_KEYS:
+            if key not in ffit:
+                self.hard_fail(
+                    f"fit: fast run is required to produce {key!r} but did not "
+                    f"(benchmark silently dropped?)"
+                )
+        for key, crow in cfit.items():
+            frow = ffit.get(key)
+            if frow is None:
+                # full-run-only keys (e.g. n=10^4 rows) are not required here
+                continue
+            if frow.get("n") != crow.get("n") or frow.get("estimators") != crow.get("estimators"):
+                self.hard_fail(
+                    f"fit: {key} config drifted "
+                    f"(fresh n={frow.get('n')} est={frow.get('estimators')}, "
+                    f"committed n={crow.get('n')} est={crow.get('estimators')})"
+                )
+                continue
+            for field in ("batched_s", "level_s", "reference_s"):
+                if field in crow and field in frow:
+                    pairs[f"{key}.{field}"] = (frow[field], crow[field])
+        if not ffit:
+            self.hard_fail("fit: fresh run produced no fit rows")
+        for key, frow in ffit.items():
+            if frow.get("identical_trees") is False:
+                self.hard_fail(f"fit: {key} identical_trees is false (fresh)")
+        for key, crow in cfit.items():
+            if crow.get("identical_trees") is False:
+                self.hard_fail(f"fit: {key} identical_trees is false (committed)")
+        for key, crow in committed.get("recommend", {}).items():
+            frow = fresh.get("recommend", {}).get(key)
+            if frow is not None:
+                pairs[f"recommend.{key}.best_ms"] = (
+                    frow["best_ms"] / 1e3, crow["best_ms"] / 1e3
+                )
+        self.compare_timings("fit", pairs)
+
+    def check_loop(self, fresh: dict, committed: dict) -> None:
+        pairs: Dict[str, Tuple[float, float]] = {}
+        for track in ("campaign_cycles", "synthetic_cycles"):
+            fcycles = fresh.get(track) or []
+            ccycles = committed.get(track) or []
+            if ccycles and len(fcycles) < min(
+                EXPECTED_FAST_LOOP_CYCLES, len(ccycles)
+            ):
+                self.hard_fail(
+                    f"loop: fresh run has {len(fcycles)} {track} "
+                    f"(expected >= {EXPECTED_FAST_LOOP_CYCLES})"
+                )
+                continue
+            for fc, cc in zip(fcycles, ccycles):  # overlapping prefix
+                cyc = fc.get("cycle", "?")
+                if fc.get("n_observations") != cc.get("n_observations"):
+                    # fast and full runs grow the dataset at different rates
+                    # (seeds_per_cycle); mismatched workloads are not
+                    # comparable and would bias the median machine factor
+                    self.skipped += 1
+                    continue
+                # recommend_ms is excluded: early cycles pay one-off JIT
+                # compiles whose placement differs between fast and full
+                # runs; warm recommend latency is gated via BENCH_fit.json.
+                for field in ("refit_ms", "cycle_s"):
+                    if field in fc and field in cc:
+                        scale = 1e-3 if field.endswith("_ms") else 1.0
+                        pairs[f"{track}[{cyc}].{field}"] = (
+                            fc[field] * scale, cc[field] * scale
+                        )
+        self.compare_timings("loop", pairs)
+
+    def check_fleet(self, fresh: dict, committed: dict) -> None:
+        pairs: Dict[str, Tuple[float, float]] = {}
+        fruns = {r.get("collectors"): r for r in fresh.get("runs", [])}
+        cruns = {r.get("collectors"): r for r in committed.get("runs", [])}
+        for n in EXPECTED_FAST_FLEET_COLLECTORS:
+            if cruns and n not in fruns:
+                self.hard_fail(
+                    f"fleet: fast run is required to cover collectors={n} "
+                    f"but did not"
+                )
+        for n, frow in fruns.items():
+            if frow.get("n_failures", 0):
+                self.hard_fail(f"fleet: {frow['n_failures']} collector failures at collectors={n}")
+        for n, crow in cruns.items():
+            frow = fruns.get(n)
+            if frow is None:
+                continue
+            # wall time per collected row is the machine-comparable metric
+            if frow.get("rows") and crow.get("rows"):
+                pairs[f"runs[{n}].wall_per_row"] = (
+                    frow["wall_s"] / frow["rows"], crow["wall_s"] / crow["rows"]
+                )
+        self.compare_timings("fleet", pairs)
+
+
+def run_gate(
+    fresh_dir: pathlib.Path,
+    repo_root: pathlib.Path = REPO_ROOT,
+    tolerance: float = 0.35,
+    min_ms: float = 1.0,
+) -> Gate:
+    gate = Gate(tolerance, min_ms)
+    checkers = {
+        "BENCH_fit.json": gate.check_fit,
+        "BENCH_loop.json": gate.check_loop,
+        "BENCH_fleet.json": gate.check_fleet,
+    }
+    for name in ARTIFACTS:
+        committed_path = repo_root / name
+        fresh_path = fresh_dir / name
+        if not committed_path.exists():
+            gate.hard_fail(f"{name}: committed artifact missing at {committed_path}")
+            continue
+        if not fresh_path.exists():
+            gate.hard_fail(
+                f"{name}: fresh artifact missing at {fresh_path} "
+                f"(run `make bench-fast` first)"
+            )
+            continue
+        try:
+            committed = json.loads(committed_path.read_text())
+            fresh = json.loads(fresh_path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            gate.hard_fail(f"{name}: unreadable artifact ({e})")
+            continue
+        checkers[name](fresh, committed)
+    return gate
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+    )
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the fresh fast-run BENCH_*.json")
+    ap.add_argument("--repo-root", default=str(REPO_ROOT),
+                    help="repo root holding the committed BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.35,
+                    help="allowed deviation from the median machine factor "
+                         "(default 0.35 = 35%%)")
+    ap.add_argument("--min-ms", type=float, default=1.0,
+                    help="skip timings where both sides are below this (ms)")
+    args = ap.parse_args(argv)
+
+    gate = run_gate(
+        pathlib.Path(args.fresh),
+        pathlib.Path(args.repo_root),
+        args.tolerance,
+        args.min_ms,
+    )
+    for msg in gate.hard:
+        print(f"HARD FAIL: {msg}")
+    for msg in gate.soft:
+        print(f"REGRESSION: {msg}")
+    status = "FAILED" if (gate.hard or gate.soft) else "passed"
+    print(
+        f"bench gate {status}: {gate.compared} timings compared, "
+        f"{gate.skipped} skipped, {len(gate.soft)} regressions, "
+        f"{len(gate.hard)} hard failures"
+    )
+    return 1 if (gate.hard or gate.soft) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,10 @@ _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FLAG_RE = re.compile(r"^-{1,2}[A-Za-z][\w-]*$")
 _CMD_RE = re.compile(
     r"^(?:\$\s+)?(?:[A-Z_][A-Z0-9_]*=\S+\s+)*python\s+-m\s+(\S+)\s*(.*)$")
+# ``python tools/<script>.py ...`` lines (repo-relative helper CLIs like
+# tools/bench_gate.py) get the same --help verification as modules.
+_SCRIPT_RE = re.compile(
+    r"^(?:\$\s+)?(?:[A-Z_][A-Z0-9_]*=\S+\s+)*python\s+((?:tools|benchmarks)/[\w/.-]+\.py)\s*(.*)$")
 
 
 def markdown_files(root: pathlib.Path) -> List[pathlib.Path]:
@@ -76,9 +80,11 @@ def _join_continuations(lines: List[str]) -> List[str]:
     return out
 
 
-def extract_cli_commands(text: str) -> List[Tuple[str, List[str]]]:
-    """(module, argv-tokens) for every ``python -m`` line in bash/console
-    fences (``$``-prefixed prompt lines included, output lines ignored)."""
+def extract_cli_commands(text: str) -> List[Tuple[str, str, List[str]]]:
+    """(kind, target, argv-tokens) for every ``python -m <module>`` or
+    ``python tools/<script>.py`` line in bash/console fences (``$``-prefixed
+    prompt lines included, output lines ignored).  kind is "module" or
+    "script"."""
     cmds = []
     _, blocks = _split_fences(text)
     for lang, lines in blocks:
@@ -87,22 +93,35 @@ def extract_cli_commands(text: str) -> List[Tuple[str, List[str]]]:
         for line in _join_continuations(lines):
             m = _CMD_RE.match(line.strip())
             if m:
-                cmds.append((m.group(1), m.group(2).split()))
+                cmds.append(("module", m.group(1), m.group(2).split()))
+                continue
+            m = _SCRIPT_RE.match(line.strip())
+            if m:
+                cmds.append(("script", m.group(1), m.group(2).split()))
     return cmds
 
 
 class HelpCache:
-    """``python -m <module> [subcommand] --help`` output, one subprocess per
-    distinct (module, subcommand), run with src/ on PYTHONPATH."""
+    """``python -m <module> [subcommand] --help`` (or ``python <script>
+    --help``) output, one subprocess per distinct target, run with src/ on
+    PYTHONPATH."""
 
     def __init__(self, root: pathlib.Path):
         self.root = root
-        self._cache: Dict[Tuple[str, Optional[str]], Optional[str]] = {}
+        self._cache: Dict[Tuple[str, str, Optional[str]], Optional[str]] = {}
 
-    def help_text(self, module: str, sub: Optional[str]) -> Optional[str]:
-        key = (module, sub)
+    def help_text(self, module: str, sub: Optional[str],
+                  kind: str = "module") -> Optional[str]:
+        key = (kind, module, sub)
         if key not in self._cache:
-            argv = [sys.executable, "-m", module] + ([sub] if sub else []) + ["--help"]
+            if kind == "script":
+                script = self.root / module
+                if not script.exists():
+                    self._cache[key] = None
+                    return None
+                argv = [sys.executable, str(script), "--help"]
+            else:
+                argv = [sys.executable, "-m", module] + ([sub] if sub else []) + ["--help"]
             env = dict(os.environ)
             src = str(self.root / "src")
             env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
@@ -123,17 +142,19 @@ def check_cli_commands(files: List[pathlib.Path],
     cache = HelpCache(root)
     for path in files:
         rel = path.relative_to(root)
-        for module, argv in extract_cli_commands(path.read_text()):
+        for kind, module, argv in extract_cli_commands(path.read_text()):
             # the subcommand, if any, is the first non-flag token
             sub = next((t for t in argv if not t.startswith("-")), None)
             sub = sub if sub and re.fullmatch(r"[\w-]+", sub) else None
-            help_text = cache.help_text(module, sub)
-            if help_text is None and sub is not None:
+            shown = f"python -m {module}" if kind == "module" else f"python {module}"
+            help_text = cache.help_text(module, sub if kind == "module" else None,
+                                        kind)
+            if help_text is None and sub is not None and kind == "module":
                 help_text = cache.help_text(module, None)  # positional arg, not a subcommand
             if help_text is None:
-                errors.append(f"{rel}: `python -m {module}"
-                              f"{' ' + sub if sub else ''} --help` failed "
-                              "(module missing or CLI broken)")
+                errors.append(f"{rel}: `{shown}"
+                              f"{' ' + sub if sub and kind == 'module' else ''} "
+                              "--help` failed (target missing or CLI broken)")
                 continue
             for token in argv:
                 flag = token.split("=", 1)[0]
@@ -141,7 +162,7 @@ def check_cli_commands(files: List[pathlib.Path],
                     continue
                 if not re.search(rf"(?<![\w-]){re.escape(flag)}(?![\w-])",
                                  help_text):
-                    errors.append(f"{rel}: `python -m {module}` does not "
+                    errors.append(f"{rel}: `{shown}` does not "
                                   f"define {flag} (per --help)")
     return errors
 
