@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_FAST_DIR ?= /tmp/repro_io/bench_fast
 BENCH_GATE_FLAGS ?=
 
-.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke docs-check dev-deps
+.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
@@ -32,6 +32,10 @@ fleet-smoke:  ## 2-collector fleet, synthetic dry-run rows, then --status
 	    --min-observations 4 --refit-every 2 \
 	    --out-dir /tmp/repro_io/fleet_smoke --force
 	$(PYTHON) -m repro.service.fleet --status --out-dir /tmp/repro_io/fleet_smoke
+
+serve-smoke:  ## recommendation service: in-process server, all endpoints probed
+	$(PYTHON) -m repro.service.serve --smoke
+	$(PYTHON) -m repro.service.serve --smoke --no-batch --no-cache
 
 docs-check:  ## docs CLI references + intra-repo links (tools/docs_check.py)
 	$(PYTHON) tools/docs_check.py

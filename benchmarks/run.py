@@ -4,7 +4,7 @@ roofline table. Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--only GROUP]
        [--artifact-dir DIR]
 
-``--artifact-dir`` makes the artifact-writing groups (fit/loop/fleet) emit
+``--artifact-dir`` makes the artifact-writing groups (fit/loop/fleet/serve) emit
 their CI-sized JSON artifacts there even in ``--fast`` mode — the input of
 the bench regression gate (``tools/bench_gate.py``).  Any group that raises
 marks the whole run failed (non-zero exit), so CI cannot green-light a run
@@ -35,11 +35,13 @@ def main(argv=None) -> None:
     from . import loop_bench
     from . import paper_experiments as pe
     from . import roofline
+    from . import serve_bench
 
     groups = {
         "fit": fit_bench.bench_fit,
         "fleet": fleet_bench.bench_fleet,
         "loop": loop_bench.bench_loop,
+        "serve": serve_bench.bench_serve,
         "dataset": pe.bench_dataset,
         "campaign": pe.bench_campaign,
         "pca": pe.bench_pca,

@@ -1,0 +1,226 @@
+"""Serving-tier benchmarks: QPS + latency percentiles of the concurrent
+recommendation service under 1/8/32 clients, batched vs unbatched scoring,
+and response-cache hit vs cold.
+
+Everything is measured end-to-end through real HTTP against an in-process
+``RecommendationService`` (threaded clients with keep-alive connections), so
+the numbers include routing, JSON, and socket costs — what a deployment
+would actually see.  The headline number the bench gate enforces: micro-
+batched scoring must deliver at least 2x the QPS of unbatched scoring at 32
+concurrent clients (dispatch amortization for /predict, in-batch context
+dedup for /recommend).
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only serve``.  The full
+run writes ``BENCH_serve.json`` at the repo root; ``--fast`` writes the
+CI-sized variant into the bench-gate's fresh-artifact directory.
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import pathlib
+import threading
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ._util import emit_artifact
+
+Row = Tuple[str, float, str]
+
+ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+CLIENTS = (1, 8, 32)
+MODES = ("batched", "unbatched")
+
+
+def _space():
+    from repro.core.autotune import ConfigSpace
+
+    # moderate grid: recommend scoring is real work (432 candidates) without
+    # dominating the unbatched baseline so badly the comparison gets silly
+    return ConfigSpace(batch_size=(16, 32, 64, 128),
+                       num_workers=(0, 1, 2, 4),
+                       block_kb=(16, 64, 256), n_threads=(1,),
+                       prefetch_depth=(1, 2, 4))
+
+
+def _fitted_tuner():
+    from repro.core.autotune import OnlineAutotuner
+    from repro.service.serve import synthetic_observations
+
+    space = _space()
+    tuner = OnlineAutotuner(space=space, min_observations=32, refit_every=64)
+    tuner.seed_observations(synthetic_observations(space, n_repeats=1))
+    assert tuner.maybe_refit()
+    return tuner
+
+
+def _client(port: int, path: str, payloads: List[dict],
+            latencies: List[float], barrier: threading.Barrier) -> None:
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+    try:
+        barrier.wait()
+        for pl in payloads:
+            body = json.dumps(pl).encode()
+            t0 = time.perf_counter()
+            conn.request("POST", path, body=body)
+            resp = conn.getresponse()
+            data = resp.read()
+            latencies.append(time.perf_counter() - t0)
+            assert resp.status == 200, data
+    finally:
+        conn.close()
+
+
+def _measure(port: int, path: str, payloads_per_client: List[List[dict]]) -> dict:
+    """Fire all clients through one barrier; returns qps + percentiles."""
+    clients = len(payloads_per_client)
+    per_client: List[List[float]] = [[] for _ in range(clients)]
+    barrier = threading.Barrier(clients + 1)
+    threads = [
+        threading.Thread(target=_client,
+                         args=(port, path, pls, per_client[i], barrier))
+        for i, pls in enumerate(payloads_per_client)
+    ]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lats = np.asarray([l for ls in per_client for l in ls])
+    n = int(lats.size)
+    return {
+        "clients": clients,
+        "n_requests": n,
+        "qps": round(n / wall, 1),
+        "p50_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
+        "p95_ms": round(float(np.percentile(lats, 95)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
+    }
+
+
+def _predict_payloads(space, clients: int, per_client: int) -> List[List[dict]]:
+    """Distinct configs cycling the grid: no two concurrent requests are
+    dedupable, so the batched win here is pure dispatch amortization."""
+    cands = space.candidates()
+    ctx = {"file_size_mb": 64.0, "n_samples": 1000.0}
+    out = []
+    for c in range(clients):
+        out.append([
+            {"context": ctx,
+             "config": cands[(c * per_client + i) % len(cands)]}
+            for i in range(per_client)
+        ])
+    return out
+
+
+def _recommend_payloads(clients: int, per_client: int,
+                        n_contexts: int = 4) -> List[List[dict]]:
+    """A small pool of workload contexts shared across clients — the
+    realistic shape (many tenants, few workload classes) that lets the
+    batcher collapse concurrent requests into one grid scoring each."""
+    contexts = [{"file_size_mb": float(2 ** (5 + i)), "n_samples": 1000.0}
+                for i in range(n_contexts)]
+    out = []
+    for c in range(clients):
+        out.append([
+            {"context": contexts[(c + i) % n_contexts], "top_k": 3}
+            for i in range(per_client)
+        ])
+    return out
+
+
+def bench_serve(fast: bool, artifact_dir=None) -> List[Row]:
+    from repro.service.serve import RecommendationService, ServeConfig
+
+    tuner = _fitted_tuner()
+    space = tuner.space
+    total_target = 96 if fast else 288  # requests per (endpoint, mode, clients)
+
+    rows: List[Row] = []
+    art: dict = {
+        "schema": 1,
+        "n_candidates": space.n_candidates,
+        "n_observations": tuner.n_observations,
+        "endpoints": {"predict": [], "recommend": []},
+        "speedup_batched": {"predict": {}, "recommend": {}},
+    }
+
+    qps: dict = {}
+    for mode in MODES:
+        svc = RecommendationService(tuner, ServeConfig(
+            batching=(mode == "batched"), cache_size=0))
+        svc.start()
+        try:
+            for endpoint, payload_fn in (
+                ("predict", lambda c, p: _predict_payloads(space, c, p)),
+                ("recommend", lambda c, p: _recommend_payloads(c, p)),
+            ):
+                for clients in CLIENTS:
+                    per_client = max(3, total_target // clients)
+                    payloads = payload_fn(clients, per_client)
+                    _measure(svc.port, f"/{endpoint}", payloads)  # warm
+                    m = _measure(svc.port, f"/{endpoint}", payloads)
+                    m["mode"] = mode
+                    qps[(endpoint, mode, clients)] = m["qps"]
+                    art["endpoints"][endpoint].append(m)
+                    rows.append((
+                        f"serve_{endpoint}_{mode}_c{clients}",
+                        m["p50_ms"] * 1e3,
+                        f"qps={m['qps']} p95_ms={m['p95_ms']} "
+                        f"p99_ms={m['p99_ms']} n={m['n_requests']}",
+                    ))
+        finally:
+            svc.shutdown()
+
+    for endpoint in ("predict", "recommend"):
+        for clients in CLIENTS:
+            sp = (qps[(endpoint, "batched", clients)]
+                  / qps[(endpoint, "unbatched", clients)])
+            art["speedup_batched"][endpoint][f"c{clients}"] = round(sp, 2)
+        sp32 = art["speedup_batched"][endpoint]["c32"]
+        rows.append((
+            f"serve_{endpoint}_speedup", 0.0,
+            f"batched_vs_unbatched c1={art['speedup_batched'][endpoint]['c1']}x "
+            f"c8={art['speedup_batched'][endpoint]['c8']}x c32={sp32}x",
+        ))
+
+    # -- response cache: hit vs cold over one distinct-context sweep -----
+    svc = RecommendationService(tuner, ServeConfig(batching=True,
+                                                   cache_size=1024))
+    svc.start()
+    try:
+        n_ctx = 16 if fast else 48
+        payloads = [[{"context": {"file_size_mb": float(8 + i),
+                                  "n_samples": 1000.0}, "top_k": 3}
+                     for i in range(n_ctx)]]
+        cold = _measure(svc.port, "/recommend", payloads)
+        assert svc.cache.misses >= n_ctx
+        hit = _measure(svc.port, "/recommend", payloads)
+        assert svc.cache.hits >= n_ctx
+    finally:
+        svc.shutdown()
+    art["cache"] = {
+        "n_contexts": n_ctx,
+        "cold_qps": cold["qps"], "hit_qps": hit["qps"],
+        "cold_p50_ms": cold["p50_ms"], "hit_p50_ms": hit["p50_ms"],
+        "speedup_hit": round(hit["qps"] / cold["qps"], 2),
+    }
+    rows.append((
+        "serve_cache_hit", hit["p50_ms"] * 1e3,
+        f"hit_qps={hit['qps']} cold_qps={cold['qps']} "
+        f"speedup={art['cache']['speedup_hit']}x",
+    ))
+    rows.append(("serve_cache_cold", cold["p50_ms"] * 1e3,
+                 f"cold_qps={cold['qps']} n_ctx={n_ctx}"))
+
+    row = emit_artifact(art, "BENCH_serve.json", fast, artifact_dir, ARTIFACT,
+                        "serve_artifact")
+    if row:
+        rows.append(row)
+    return rows

@@ -25,12 +25,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .features import FeatureSpec
-from .predictor import IOPerformancePredictor
+from .predictor import IOPerformancePredictor, PredictorSnapshot
 
 __all__ = [
     "ConfigSpace",
@@ -229,6 +230,11 @@ class OnlineAutotuner:
         self._store = _ColumnStore(tuple(self.spec.names) + (self.spec.target,))
         self._since_fit = 0
         self._fitted = False
+        # Hot-swap state: a refit builds the new model OFF the lock, then
+        # publishes (model, generation) under it — snapshot() readers get a
+        # consistent pair, and nothing ever observes a half-trained model.
+        self._swap_lock = threading.Lock()
+        self._generation = 0
         self._explored: List[tuple] = []
         self._seen_keys: set = set()
         self._ingested_keys: set = set()  # (case_id, rep, seed) of campaign records
@@ -372,14 +378,44 @@ class OnlineAutotuner:
         ):
             return False
         # Zero-copy views of the live store: [n, F] feature block + target.
-        self.predictor.fit_matrix(
+        # The (slow) fit happens off the swap lock against a fixed-length view
+        # — concurrent appends only touch rows past n — and the result is
+        # published atomically with its generation bump, so snapshot() readers
+        # never see a half-trained model or a (model, generation) mismatch.
+        model = self.predictor.build_model(
             self._store.matrix(self.spec.names),
             self._store.column(self.spec.target),
         )
-        self._fitted = True
+        with self._swap_lock:
+            self.predictor.model = model
+            self._generation += 1
+            self._fitted = True
         self._since_fit = 0
         self._drift_refit = False
         return True
+
+    @property
+    def generation(self) -> int:
+        """Monotonic model generation: 0 until the first fit, then +1 per
+        completed refit.  Cache keys derived from it invalidate atomically
+        the instant a refit publishes (``snapshot()`` hands out the pair)."""
+        return self._generation
+
+    def snapshot(self) -> Optional[PredictorSnapshot]:
+        """Consistent ``(model, generation)`` view for concurrent scoring, or
+        ``None`` until the first fit.  Successive refits never mutate a
+        published snapshot's model — in-flight work finishes on the model it
+        started with (the serving tier's no-mixed-batch guarantee)."""
+        with self._swap_lock:
+            if not self._fitted:
+                return None
+            return self.predictor.snapshot(self._generation)
+
+    def filter_context(self, context: dict, knobs: Optional[dict] = None) -> dict:
+        """Public view of the online feature filter (see ``_filter_features``):
+        the serving tier must featurize exactly like ``ranked()``/``decide()``
+        or batched results would diverge from the in-process path."""
+        return self._filter_features(context, knobs=knobs)
 
     def ranked(self, context: dict, top_k: int = 5) -> List[dict]:
         """Ranked top-k candidate configs under the live (filtered) context —

@@ -20,7 +20,13 @@ from .linear import ElasticNet, Lasso, LinearRegression, Ridge
 from .metrics import cross_val_r2, mae, pct_errors, r2_score, rmse, train_test_split
 from .mlp import MLPConfig, MLPRegressor
 
-__all__ = ["MODEL_ZOO", "make_model", "ModelReport", "IOPerformancePredictor"]
+__all__ = [
+    "MODEL_ZOO",
+    "make_model",
+    "ModelReport",
+    "IOPerformancePredictor",
+    "PredictorSnapshot",
+]
 
 
 # Paper hyperparameters (§3.3).  ``engine`` selects the tree-fitting engine
@@ -82,6 +88,42 @@ class ModelReport:
 
     def as_dict(self):
         return dataclasses.asdict(self)
+
+
+class PredictorSnapshot:
+    """Immutable view of one fitted model for lock-free concurrent readers.
+
+    The serving tier (``repro.service.serve``) scores many requests from many
+    threads while a background refit may swap the live model underneath.  A
+    snapshot pins ``(model, generation)`` at a single instant, so everything
+    scored against it — a whole micro-batch — sees exactly one model: no
+    response can ever mix feature schema or model generation.  The wrapped
+    model object is never mutated after fitting (refits build a *new* model,
+    see ``IOPerformancePredictor.build_model``), which is what makes sharing
+    it across threads without a lock sound.
+    """
+
+    __slots__ = ("spec", "model", "model_name", "generation")
+
+    def __init__(self, spec: FeatureSpec, model, model_name: str, generation: int):
+        self.spec = spec
+        self.model = model
+        self.model_name = model_name
+        self.generation = generation
+
+    def predict_log(self, X: np.ndarray) -> np.ndarray:
+        return self.model.predict(np.asarray(X, np.float64))
+
+    def predict_throughput(self, config: dict) -> float:
+        x = self.spec.row(config)[None, :]
+        return float(expm1_inverse(self.predict_log(x))[0])
+
+    def predict_throughput_batch(self, X: np.ndarray) -> np.ndarray:
+        return expm1_inverse(self.predict_log(X))
+
+    @property
+    def feature_importances_(self):
+        return getattr(self.model, "feature_importances_", None)
 
 
 class IOPerformancePredictor:
@@ -155,11 +197,32 @@ class IOPerformancePredictor:
         The zero-copy path used by ``OnlineAutotuner.maybe_refit``: the online
         column store hands over views of its live buffer, so refits skip the
         dict-of-columns restacking entirely.
+
+        Concurrency contract: ``self.model`` is only ever assigned a *fully
+        fitted* model in one atomic reference swap — a concurrent reader (or a
+        ``snapshot()``) sees either the complete old model or the complete new
+        one, never a half-trained object.
+        """
+        self.model = self.build_model(X, y_raw)
+        return self
+
+    def build_model(self, X: np.ndarray, y_raw: np.ndarray):
+        """Fit and return a new model WITHOUT touching ``self.model``.
+
+        The hot-swap primitive behind concurrent serving: a background refit
+        trains off to the side (this call can take hundreds of milliseconds)
+        and the caller publishes the result with a single reference
+        assignment, so in-flight predictions keep using the previous model.
         """
         y = log1p_transform(np.asarray(y_raw, np.float64))
-        self.model = make_model(self.model_name, self.seed, engine=self.engine)
-        self.model.fit(np.asarray(X, np.float64), y)
-        return self
+        model = make_model(self.model_name, self.seed, engine=self.engine)
+        model.fit(np.asarray(X, np.float64), y)
+        return model
+
+    def snapshot(self, generation: int = 0) -> PredictorSnapshot:
+        """Immutable ``(model, generation)`` view for concurrent scoring."""
+        assert self.model is not None, "fit() first"
+        return PredictorSnapshot(self.spec, self.model, self.model_name, generation)
 
     def predict_log(self, X: np.ndarray) -> np.ndarray:
         assert self.model is not None, "fit() first"

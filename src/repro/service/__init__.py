@@ -1,6 +1,7 @@
 """repro.service — the continuous tuning loop: collect -> merge -> refit ->
 re-recommend, run as a resumable service (``python -m repro.service.loop``),
-and its multi-host collection fleet (``python -m repro.service.fleet``).
+its multi-host collection fleet (``python -m repro.service.fleet``), and the
+concurrent recommendation-serving tier (``python -m repro.service.serve``).
 
 Converts the standalone campaign runner (``repro.data.campaign``), the
 dataset merge CLI, and the ``OnlineAutotuner`` into one end-to-end system
@@ -8,7 +9,9 @@ that keeps growing the observation dataset and keeps the recommendation
 fresh — the paper's "days -> minutes" claim, closed into a loop.  The fleet
 layer fans each cycle's collection out over leased campaign shards while
 guaranteeing the merged dataset stays byte-identical to a single-host run
-(see ``docs/fleet.md``).
+(see ``docs/fleet.md``); the serve layer answers /predict and /recommend
+for many concurrent clients with micro-batched scoring, a refit-aware
+response cache, and atomic model hot-swap (see ``docs/serving.md``).
 
 Submodules are imported lazily so ``python -m repro.service.loop`` doesn't
 trigger runpy's double-import warning.
@@ -24,12 +27,19 @@ __all__ = [
     "LoopState",
     "FleetLog",
     "STATE_SCHEMA_VERSION",
+    "RecommendationService",
+    "ServeConfig",
+    "ResponseCache",
+    "MicroBatcher",
+    "DEFAULT_SERVE_DIR",
 ]
 
 _LOOP = ("ContinuousTuningLoop", "LoopConfig", "DEFAULT_LOOP_DIR", "main")
 _FLEET = ("FleetConfig", "FleetCoordinator", "DEFAULT_FLEET_DIR",
           "run_collector", "collector_shard_path", "synthetic_executor")
 _STATE = ("LoopState", "FleetLog", "STATE_SCHEMA_VERSION")
+_SERVE = ("RecommendationService", "ServeConfig", "ResponseCache",
+          "MicroBatcher", "context_key", "DEFAULT_SERVE_DIR")
 
 
 def __getattr__(name: str):
@@ -42,4 +52,7 @@ def __getattr__(name: str):
     if name in _STATE:
         from . import state
         return getattr(state, name)
+    if name in _SERVE:
+        from . import serve
+        return getattr(serve, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

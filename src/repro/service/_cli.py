@@ -12,7 +12,7 @@ from __future__ import annotations
 import argparse
 import pathlib
 
-__all__ = ["add_tuning_args", "add_fleet_args", "parse_shard"]
+__all__ = ["add_tuning_args", "add_fleet_args", "add_serve_args", "parse_shard"]
 
 
 def add_tuning_args(ap: argparse.ArgumentParser) -> None:
@@ -45,6 +45,43 @@ def add_tuning_args(ap: argparse.ArgumentParser) -> None:
                     help="print the cycle log (with per-host provenance) and exit")
     ap.add_argument("--force", action="store_true",
                     help="discard state + shards and start over")
+
+
+def add_serve_args(ap: argparse.ArgumentParser,
+                   default_out_dir: pathlib.Path) -> None:
+    """The serving tier's own flags (``python -m repro.service.serve``).
+
+    Composes with ``add_tuning_args``: the tuning flags configure the model
+    source (embedded loop or standalone autotuner), these configure how it is
+    served — binding, micro-batching, response cache, warm start."""
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address (default: loopback)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="bind port (0 = OS-assigned; see serve_info.json)")
+    ap.add_argument("--out-dir", type=pathlib.Path, default=default_out_dir,
+                    help="serve_info.json home; with --loop also the loop's "
+                         "state + shard directory (resume key)")
+    ap.add_argument("--loop", action="store_true",
+                    help="run the continuous tuning loop in a background "
+                         "thread, hot-swapping the served model on refit")
+    ap.add_argument("--warm-from", type=pathlib.Path, default=None,
+                    help="campaign/merged JSONL to ingest + fit before "
+                         "serving (a frozen warm-started model)")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="score each request inline (unbatched baseline)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="micro-batch size cap")
+    ap.add_argument("--batch-window-ms", type=float, default=0.0,
+                    help="hold a forming batch open this long for stragglers "
+                         "(0 = drain-only, no added latency)")
+    ap.add_argument("--cache-size", type=int, default=1024,
+                    help="response cache capacity (LRU entries)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the response cache")
+    ap.add_argument("--smoke", action="store_true",
+                    help="self-contained end-to-end check: warm-fit a "
+                         "synthetic sweep, serve, hit every endpoint over "
+                         "HTTP, verify, drain, exit")
 
 
 def parse_shard(s: str):

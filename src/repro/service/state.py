@@ -47,7 +47,10 @@ fields, so old ``loop_state.jsonl`` files keep resuming and rendering under
 the v2 readers — fleet and single-host cycles share one schema.
 
 ``LoopState`` dedups by cycle keeping the latest record, tolerating the
-torn-trailing-line artifacts of a killed writer (via the campaign loader).
+torn-trailing-line artifacts of a killed writer AND of a writer caught
+mid-append by a concurrent reader: :func:`read_complete_records` consumes
+only newline-terminated lines, so ``--status`` and the serving tier's
+``/stats`` endpoint can poll the state file while the loop appends to it.
 
 ``FleetLog`` is the fleet's shared append-only JSONL (``fleet_state.jsonl``):
 the coordinator appends one ``lease`` record per shard lease, collectors
@@ -70,11 +73,40 @@ import threading
 import time
 from typing import Dict, List, Optional, Union
 
-from ..data.campaign import load_records
-
-__all__ = ["STATE_SCHEMA_VERSION", "LoopState", "FleetLog", "upgrade_record"]
+__all__ = ["STATE_SCHEMA_VERSION", "LoopState", "FleetLog", "upgrade_record",
+           "read_complete_records"]
 
 STATE_SCHEMA_VERSION = 2
+
+
+def read_complete_records(path: Union[str, pathlib.Path]) -> List[dict]:
+    """JSONL records from ``path``, consuming only newline-TERMINATED lines.
+
+    The readers of these logs (``--status``, the serving tier's ``/stats``)
+    run concurrently with an appending writer.  A writer caught mid-record
+    leaves an unterminated tail; reading it with a text-mode line splitter
+    would hand the parser a torn prefix.  Cutting the byte stream at the last
+    ``\\n`` consumes exactly the records whose final newline has landed — a
+    record is either fully visible or not yet there, never half-read.
+    Malformed *complete* lines (foreign corruption) are skipped defensively,
+    like the campaign loader and ``FleetLog`` do."""
+    path = pathlib.Path(path)
+    try:
+        raw = path.read_bytes()
+    except OSError:
+        return []
+    end = raw.rfind(b"\n")
+    if end < 0:
+        return []
+    records = []
+    for line in raw[: end + 1].splitlines():
+        if not line.strip():
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return records
 
 
 def upgrade_record(record: dict) -> dict:
@@ -106,9 +138,13 @@ class LoopState:
 
     def cycles(self) -> List[dict]:
         """Completed cycle records, deduplicated by cycle (latest wins),
-        ordered by cycle index and migrated to the current schema."""
+        ordered by cycle index and migrated to the current schema.
+
+        Safe against a concurrently appending writer: only newline-terminated
+        records are consumed (``read_complete_records``), so ``--status`` and
+        the serving tier's ``/stats`` can poll a live loop's state file."""
         latest: Dict[int, dict] = {}
-        for r in load_records(self.path):
+        for r in read_complete_records(self.path):
             if r.get("status") == "ok" and "cycle" in r:
                 latest[int(r["cycle"])] = upgrade_record(r)
         return [latest[c] for c in sorted(latest)]

@@ -75,6 +75,35 @@ def _fleet_art():
     }
 
 
+def _serve_art():
+    endpoints = {"predict": [], "recommend": []}
+    speedups = {"predict": {}, "recommend": {}}
+    base = {"predict": 2.0, "recommend": 5.0}  # ms per request, single client
+    for endpoint in ("predict", "recommend"):
+        for mode in ("batched", "unbatched"):
+            for clients in (1, 8, 32):
+                # batched scales sublinearly, unbatched serializes
+                factor = clients ** (0.3 if mode == "batched" else 0.8)
+                p50 = base[endpoint] * factor
+                endpoints[endpoint].append({
+                    "clients": clients, "n_requests": 96, "mode": mode,
+                    "qps": round(clients * 1e3 / p50, 1),
+                    "p50_ms": round(p50, 3), "p95_ms": round(p50 * 1.5, 3),
+                    "p99_ms": round(p50 * 2.0, 3),
+                })
+        rows = {(r["mode"], r["clients"]): r for r in endpoints[endpoint]}
+        for clients in (1, 8, 32):
+            speedups[endpoint][f"c{clients}"] = round(
+                rows[("batched", clients)]["qps"]
+                / rows[("unbatched", clients)]["qps"], 2)
+    return {
+        "schema": 1, "n_candidates": 144, "n_observations": 144,
+        "endpoints": endpoints, "speedup_batched": speedups,
+        "cache": {"n_contexts": 16, "cold_qps": 200.0, "hit_qps": 1200.0,
+                  "cold_p50_ms": 5.0, "hit_p50_ms": 0.8, "speedup_hit": 6.0},
+    }
+
+
 @pytest.fixture()
 def arts(tmp_path):
     committed = tmp_path / "repo"
@@ -85,6 +114,7 @@ def arts(tmp_path):
         (d / "BENCH_fit.json").write_text(json.dumps(_fit_art()))
         (d / "BENCH_loop.json").write_text(json.dumps(_loop_art()))
         (d / "BENCH_fleet.json").write_text(json.dumps(_fleet_art()))
+        (d / "BENCH_serve.json").write_text(json.dumps(_serve_art()))
     return committed, fresh
 
 
@@ -203,6 +233,46 @@ def test_bench_run_unknown_group_is_an_error():
     with pytest.raises(SystemExit) as exc:
         bench_run.main(["--fast", "--only", "nonexistent_group"])
     assert exc.value.code == 2
+
+
+def test_gate_hard_fails_when_serve_qps_row_is_dropped(arts):
+    """The serve bench silently dropping a load point (say batched/c32 —
+    exactly the row the headline claim rests on) must hard-fail."""
+    committed, fresh = arts
+    art = _serve_art()
+    art["endpoints"]["predict"] = [
+        r for r in art["endpoints"]["predict"]
+        if not (r["mode"] == "batched" and r["clients"] == 32)
+    ]
+    _rewrite(fresh, "BENCH_serve.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any(
+        "predict.batched.c32" in m and "dropped" in m for m in gate.hard
+    )
+
+
+def test_gate_hard_fails_when_committed_serve_speedup_below_2x(arts):
+    committed, fresh = arts
+    art = _serve_art()
+    art["speedup_batched"]["predict"]["c32"] = 1.4
+    art["speedup_batched"]["recommend"]["c32"] = 1.6
+    _rewrite(committed, "BENCH_serve.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("no endpoint reaches" in m for m in gate.hard)
+
+
+def test_gate_catches_serve_latency_regression(arts):
+    """One endpoint's batched p50 blowing up 10x is a regression even after
+    median calibration against the other serve rows."""
+    committed, fresh = arts
+    art = _serve_art()
+    for r in art["endpoints"]["recommend"]:
+        if r["mode"] == "batched" and r["clients"] == 32:
+            r["p50_ms"] *= 10.0
+    _rewrite(fresh, "BENCH_serve.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("recommend.batched.c32.p50" in m for m in gate.soft)
 
 
 def test_gate_hard_fails_when_required_fast_row_is_dropped(arts):

@@ -1,0 +1,492 @@
+"""Concurrent serving tier (repro.service.serve): batched-vs-sequential
+byte-equivalence, refit-aware cache invalidation, hot-swap races, graceful
+drain, kill -9 resumability of the embedded loop, and the torn-tail-safe
+state readers it polls."""
+
+import contextlib
+import http.client
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.autotune import ConfigSpace, OnlineAutotuner
+from repro.core.features import TARGET_NAME
+from repro.service.serve import (
+    MicroBatcher,
+    RecommendationService,
+    ResponseCache,
+    ServeConfig,
+    context_key,
+    run_smoke,
+    synthetic_observations,
+    warm_tuner_from_records,
+)
+from repro.service.serve import main as serve_main
+from repro.service.state import LoopState, read_complete_records
+
+CTX = {"file_size_mb": 64.0, "n_samples": 1000.0, "throughput_mb_s": 150.0}
+
+
+def _space():
+    return ConfigSpace(batch_size=(16, 32, 64), num_workers=(0, 2, 4),
+                       block_kb=(64, 256), n_threads=(1,),
+                       prefetch_depth=(1, 2))
+
+
+def _fitted_tuner(scale=1.0, **kw):
+    kw.setdefault("min_observations", 8)
+    kw.setdefault("refit_every", 8)
+    t = OnlineAutotuner(space=_space(), **kw)
+    rows = synthetic_observations(t.space, n_repeats=1)
+    if scale != 1.0:
+        rows = [{**r, TARGET_NAME: r[TARGET_NAME] * scale} for r in rows]
+    t.seed_observations(rows)
+    assert t.maybe_refit()
+    return t
+
+
+@pytest.fixture(scope="module")
+def frozen_tuner():
+    """One fitted model shared by the read-only tests (never refit)."""
+    return _fitted_tuner()
+
+
+@contextlib.contextmanager
+def _serving(tuner, **kw):
+    svc = RecommendationService(tuner, ServeConfig(**kw))
+    svc.start()
+    try:
+        yield svc
+    finally:
+        svc.shutdown()
+
+
+def _raw(port, method, path, payload=None, timeout=30):
+    """One HTTP request; returns (status, raw body bytes)."""
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    try:
+        body = json.dumps(payload).encode() if payload is not None else None
+        conn.request(method, path, body=body)
+        resp = conn.getresponse()
+        return resp.status, resp.read()
+    finally:
+        conn.close()
+
+
+def _fire_concurrent(port, reqs):
+    """All requests released through one barrier; responses in request order."""
+    results = [None] * len(reqs)
+    barrier = threading.Barrier(len(reqs))
+
+    def worker(i, req):
+        barrier.wait()
+        results[i] = _raw(port, *req)
+
+    threads = [threading.Thread(target=worker, args=(i, r))
+               for i, r in enumerate(reqs)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results
+
+
+def _mixed_requests(n=16):
+    cands = _space().candidates()
+    reqs = []
+    for i in range(n):
+        if i % 3 == 2:  # recommends share the context -> in-batch dedup path
+            reqs.append(("POST", "/recommend", {"context": CTX, "top_k": 3}))
+        else:
+            reqs.append(("POST", "/predict",
+                         {"context": CTX, "config": cands[i % len(cands)]}))
+    return reqs
+
+
+# ------------------------------------------------- batched == sequential
+
+def test_batched_concurrent_equals_sequential_bytes(frozen_tuner):
+    """N concurrent clients against the micro-batched service get
+    byte-identical JSON to N serial requests against the unbatched one."""
+    reqs = _mixed_requests(16)
+    with _serving(frozen_tuner, batching=False, cache_size=0) as svc:
+        serial = [_raw(svc.port, *r) for r in reqs]
+    # a batch window holds the door open so the barrier-released clients
+    # actually coalesce (drain-only batching would be timing-dependent here)
+    with _serving(frozen_tuner, batching=True, cache_size=0,
+                  batch_window_ms=100, max_batch=64) as svc:
+        concurrent = _fire_concurrent(svc.port, reqs)
+        assert svc._batcher.max_batch_seen >= 2  # coalescing really happened
+    assert all(s == 200 for s, _ in serial)
+    assert serial == concurrent  # statuses AND raw bytes
+
+
+def test_recommend_dedup_scores_shared_context_once(frozen_tuner):
+    with _serving(frozen_tuner, batching=True, cache_size=0,
+                  batch_window_ms=100) as svc:
+        reqs = [("POST", "/recommend", {"context": CTX, "top_k": 4})] * 6
+        results = _fire_concurrent(svc.port, reqs)
+    bodies = {body for _, body in results}
+    assert len(bodies) == 1  # all clients saw one identical ranking
+
+
+# ------------------------------------------------- cache correctness
+
+def test_cache_hit_equals_cold_and_refit_invalidates():
+    tuner = _fitted_tuner()
+    payload = {"context": CTX, "top_k": 3}
+    with _serving(tuner, batching=True, cache_size=64) as svc:
+        s1, cold = _raw(svc.port, "POST", "/recommend", payload)
+        s2, hit = _raw(svc.port, "POST", "/recommend", payload)
+        assert (s1, s2) == (200, 200)
+        assert hit == cold and svc.cache.hits == 1
+        assert json.loads(cold)["model_generation"] == 1
+
+        # key is order-insensitive over the context dict
+        flipped = {"top_k": 3,
+                   "context": dict(reversed(list(CTX.items())))}
+        _, hit2 = _raw(svc.port, "POST", "/recommend", flipped)
+        assert hit2 == cold and svc.cache.hits == 2
+
+        # refit on changed data: generation bumps, old entries unreachable
+        rows = [{**r, TARGET_NAME: r[TARGET_NAME] * (3.0 if r["num_workers"] == 0 else 0.5)}
+                for r in synthetic_observations(tuner.space, n_repeats=1)]
+        tuner.seed_observations(rows)
+        assert tuner.maybe_refit() and tuner.generation == 2
+
+        s3, fresh = _raw(svc.port, "POST", "/recommend", payload)
+        assert s3 == 200
+        assert json.loads(fresh)["model_generation"] == 2  # never the old gen
+        assert fresh != cold
+        s4, hit3 = _raw(svc.port, "POST", "/recommend", payload)
+        assert hit3 == fresh and svc.cache.hits == 3
+
+
+def test_predict_cache_keys_on_config_too(frozen_tuner):
+    with _serving(frozen_tuner, batching=True, cache_size=64) as svc:
+        a = _raw(svc.port, "POST", "/predict",
+                 {"context": CTX, "config": {"batch_size": 16, "num_workers": 0}})
+        b = _raw(svc.port, "POST", "/predict",
+                 {"context": CTX, "config": {"batch_size": 64, "num_workers": 4}})
+        assert a[1] != b[1]  # different configs must not collide
+        assert svc.cache.hits == 0 and svc.cache.misses == 2
+
+
+# ------------------------------------------------- hot-swap hammer
+
+def test_hot_swap_hammer_never_mixes_generations():
+    """Requests hammer the service while the main thread forces refits; every
+    response's value must match the model of the generation it is tagged with
+    (a mixed (model, generation) pair would produce a foreign value)."""
+    tuner = _fitted_tuner(refit_every=1)
+    probe = {"context": CTX,
+             "config": {"batch_size": 32, "num_workers": 2, "block_kb": 64,
+                        "prefetch_depth": 1}}
+    row = tuner.spec.row(tuner.filter_context(probe["context"],
+                                              knobs=probe["config"]))
+
+    def expected_value(snap):
+        return float(snap.predict_throughput_batch(row[None, :])[0])
+
+    expected = {1: expected_value(tuner.snapshot())}
+    stop = threading.Event()
+    failures = []
+
+    def hammer():
+        while not stop.is_set():
+            status, body = _raw(svc.port, "POST", "/predict", probe)
+            if status != 200:
+                failures.append((status, body))
+                continue
+            resp = json.loads(body)
+            gen = resp["model_generation"]
+            want = expected.get(gen)
+            # `expected` is recorded right after each swap; a gen published
+            # between a response and this check is filled in by then
+            if want is None:
+                time.sleep(0.01)
+                want = expected.get(gen)
+            if want != resp["predicted_throughput_mb_s"]:
+                failures.append((gen, resp["predicted_throughput_mb_s"], want))
+
+    with _serving(tuner, batching=True, cache_size=32,
+                  batch_window_ms=2) as svc:
+        threads = [threading.Thread(target=hammer) for _ in range(6)]
+        for t in threads:
+            t.start()
+        try:
+            for round_ in range(4):  # force refits while the hammer runs
+                rows = [{**r, TARGET_NAME: r[TARGET_NAME] * (1 + 0.5 * round_)}
+                        for r in synthetic_observations(tuner.space, n_repeats=1)]
+                tuner.seed_observations(rows)
+                assert tuner.maybe_refit()
+                expected[tuner.generation] = expected_value(tuner.snapshot())
+        finally:
+            time.sleep(0.2)
+            stop.set()
+            for t in threads:
+                t.join()
+    assert not failures
+    assert tuner.generation == 5  # the hammer really spanned 4 swaps
+
+
+# ------------------------------------------------- graceful shutdown
+
+def test_graceful_shutdown_drains_inflight_requests(frozen_tuner):
+    svc = RecommendationService(
+        frozen_tuner, ServeConfig(batching=True, cache_size=0,
+                                  batch_window_ms=500, max_batch=64))
+    svc.start()
+    results = [None] * 8
+    started = threading.Barrier(9)
+
+    def client(i):
+        started.wait()
+        results[i] = _raw(svc.port, "POST", "/predict",
+                          {"context": CTX, "config": {"batch_size": 16}})
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    started.wait()
+    time.sleep(0.15)  # let the requests land inside the open batch window
+    svc.shutdown()    # must score the queued batch, not abandon it
+    for t in threads:
+        t.join()
+    assert all(r is not None and r[0] == 200 for r in results)
+    bodies = {body for _, body in results}
+    assert len(bodies) == 1  # identical probe -> identical canonical bytes
+    with pytest.raises(OSError):  # and the socket is really gone
+        _raw(svc.port, "GET", "/healthz", timeout=2)
+
+
+def test_healthz_and_routing_errors(frozen_tuner):
+    svc = RecommendationService(frozen_tuner, ServeConfig())
+    status, body = svc.handle("GET", "/healthz", b"")
+    assert status == 200 and json.loads(body)["fitted"] is True
+    assert svc.handle("GET", "/nope", b"")[0] == 404
+    assert svc.handle("POST", "/predict", b"{not json")[0] == 400
+    assert svc.handle("POST", "/recommend", b'{"top_k": 0}')[0] == 400
+    assert svc.handle("POST", "/recommend", b'{"context": []}')[0] == 400
+    status, body = svc.handle("GET", "/explain", b"")
+    exp = json.loads(body)
+    assert status == 200 and exp["model_generation"] == 1
+    assert [f["name"] for f in exp["features"]] == list(frozen_tuner.spec.names)
+
+
+def test_unfitted_service_returns_503():
+    svc = RecommendationService(OnlineAutotuner(space=_space()), ServeConfig())
+    status, body = svc.handle("POST", "/predict", b'{"context": {}}')
+    assert status == 503 and json.loads(body)["model_generation"] == 0
+    assert svc.handle("POST", "/recommend", b'{"context": {}}')[0] == 503
+    assert svc.handle("GET", "/explain", b"")[0] == 503
+
+
+# ------------------------------------------------- embedded loop: kill -9
+
+LOOP_ARGS = ["--campaign", "paper_concurrent", "--fast", "--cycles", "2",
+             "--min-observations", "4", "--refit-every", "2"]
+
+
+def _wait_for(predicate, timeout=60.0, interval=0.05):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def test_kill9_embedded_loop_is_resumable(tmp_path):
+    """SIGKILL the serving process mid-run; the loop state must resume
+    exactly like a killed standalone loop (PR 3 guarantee)."""
+    out = tmp_path / "serve_loop"
+    env = {**os.environ, "PYTHONPATH": "src"}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.service.serve", "--loop",
+         *LOOP_ARGS, "--out-dir", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    try:
+        state = LoopState(out / "loop_state.jsonl")
+        assert _wait_for(lambda: len(state.cycles()) >= 1), \
+            proc.communicate(timeout=5)[0]
+    finally:
+        proc.kill()  # SIGKILL: no atexit, no drain, nothing
+        proc.wait(timeout=30)
+    completed = [c["cycle"] for c in LoopState(out / "loop_state.jsonl").cycles()]
+    assert completed and completed[0] == 0
+
+    # resume through the standalone loop CLI against the same out-dir
+    from repro.service.loop import main as loop_main
+    assert loop_main([*LOOP_ARGS, "--out-dir", str(out)]) == 0
+    cycles = LoopState(out / "loop_state.jsonl").cycles()
+    assert [c["cycle"] for c in cycles] == [0, 1]
+    assert LoopState(out / "loop_state.jsonl").next_cycle() == 2
+
+
+# ------------------------------------------------- torn-tail state readers
+
+def test_state_reader_tolerates_mid_append_tail(tmp_path):
+    """A reader polling loop_state.jsonl while the writer is mid-record must
+    see exactly the complete records (satellite fix regression test)."""
+    path = tmp_path / "loop_state.jsonl"
+    rec = {"schema_version": 2, "status": "ok", "n_observations": 4,
+           "current_config": {"batch_size": 16}}
+    with open(path, "w") as f:
+        f.write(json.dumps({**rec, "cycle": 0}) + "\n")
+        f.write(json.dumps({**rec, "cycle": 1}) + "\n")
+        f.write('{"schema_version": 2, "cycle": 2, "status": "o')  # torn tail
+    assert len(read_complete_records(path)) == 2
+    st_ = LoopState(path)
+    assert [c["cycle"] for c in st_.cycles()] == [0, 1]
+    assert st_.next_cycle() == 2
+    # the writer finishes its record -> the reader sees it on the next poll
+    with open(path, "a") as f:
+        f.write('k", "n_observations": 6, "current_config": {}}\n')
+    assert [c["cycle"] for c in st_.cycles()] == [0, 1, 2]
+    assert read_complete_records(tmp_path / "missing.jsonl") == []
+
+
+def test_stats_reads_state_while_writer_appends(tmp_path, frozen_tuner):
+    out = tmp_path / "serve"
+    out.mkdir()
+    rec = {"schema_version": 2, "cycle": 0, "status": "ok",
+           "n_observations": 9, "refit": True, "drift": None,
+           "current_config": {"batch_size": 16}}
+    with open(out / "loop_state.jsonl", "w") as f:
+        f.write(json.dumps(rec) + "\n")
+        f.write('{"cycle": 1, "status": "o')  # concurrent append in flight
+    svc = RecommendationService(frozen_tuner, ServeConfig(out_dir=out))
+    status, body = svc.handle("GET", "/stats", b"")
+    stats = json.loads(body)
+    assert status == 200
+    assert stats["loop"]["cycles_completed"] == 1
+    assert stats["loop"]["last_cycle"]["cycle"] == 0
+
+
+# ------------------------------------------------- warm start + smoke
+
+def test_warm_from_records_and_smoke(tmp_path):
+    space = _space()
+    records = []
+    for i, cand in enumerate(synthetic_observations(space, n_repeats=1)):
+        row = dict(cand)
+        records.append({"case_id": f"c{i}", "rep": 0, "seed": 1000,
+                        "status": "ok", "row": row})
+    path = tmp_path / "merged.jsonl"
+    with open(path, "w") as f:
+        for r in records:
+            f.write(json.dumps(r) + "\n")
+    tuner = OnlineAutotuner(space=space, min_observations=8)
+    assert warm_tuner_from_records(tuner, path) == len(records)
+    assert tuner.fitted and tuner.generation == 1
+
+    # the CLI smoke path end-to-end (quiet), both serving modes
+    assert run_smoke(ServeConfig(), progress=lambda m: None) == 0
+    assert serve_main(["--smoke", "--no-batch", "--no-cache"]) == 0
+
+
+# ------------------------------------------------- property tests
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 30), st.booleans()), max_size=120),
+       st.integers(min_value=1, max_value=7))
+def test_lru_cache_never_exceeds_bound(ops, capacity):
+    cache = ResponseCache(capacity)
+    shadow = {}
+    for key, is_put in ops:
+        if is_put:
+            cache.put((key,), str(key).encode())
+            shadow[(key,)] = str(key).encode()
+        else:
+            got = cache.get((key,))
+            assert got is None or got == shadow[(key,)]
+        assert len(cache) <= capacity
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(
+    st.sampled_from(["batch_size", "num_workers", "file_size_mb",
+                     "n_samples", "label"]),
+    st.one_of(st.integers(-10**6, 10**6),
+              st.floats(allow_nan=False, allow_infinity=False, width=32),
+              st.text(max_size=8)),
+    max_size=5),
+    st.randoms(use_true_random=False))
+def test_context_key_is_order_insensitive(d, rnd):
+    items = list(d.items())
+    rnd.shuffle(items)
+    assert context_key(dict(items)) == context_key(d)
+    # ints and equal floats canonicalize together (JSON clients disagree)
+    assert context_key({"a": 1}) == context_key({"a": 1.0})
+    assert context_key({}) == context_key(None) == ()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 11), min_size=1, max_size=12))
+def test_random_batch_partition_scores_identically(frozen_tuner, cut_points):
+    """Scoring a random partition of a request list batch-by-batch yields the
+    same bodies as scoring it as one batch (batching is invisible)."""
+    svc = RecommendationService(frozen_tuner, ServeConfig(cache_size=0))
+    cands = _space().candidates()
+
+    def make_pendings():
+        ps = []
+        for i in range(12):
+            if i % 4 == 3:
+                ps.append(svc._recommend_pending(CTX, top_k=3))
+            else:
+                ps.append(svc._predict_pending(CTX, cands[(7 * i) % len(cands)]))
+        return ps
+
+    whole = make_pendings()
+    svc._score_batch(whole)
+    parts = make_pendings()
+    bounds = sorted({0, 12, *[c % 12 for c in cut_points]})
+    for lo, hi in zip(bounds, bounds[1:]):
+        svc._score_batch(parts[lo:hi])
+    assert all(p.event.is_set() for p in whole + parts)
+    assert [p.body for p in whole] == [p.body for p in parts]
+    assert [p.status for p in whole] == [p.status for p in parts]
+
+
+# ------------------------------------------------- micro-batcher mechanics
+
+def test_microbatcher_coalesces_and_drains_on_stop():
+    scored = []
+    gate = threading.Event()
+
+    def score(batch):
+        gate.wait(5)
+        scored.append(len(batch))
+        for p in batch:
+            p.finish(200, b"{}")
+
+    class P:  # minimal pending stand-in
+        def __init__(self):
+            self.event = threading.Event()
+
+        def finish(self, status, body):
+            self.event.set()
+
+    mb = MicroBatcher(score, max_batch=8)
+    first = P()
+    assert mb.submit(first)  # worker picks it up and blocks in score()
+    time.sleep(0.05)
+    rest = [P() for _ in range(10)]
+    for p in rest:
+        assert mb.submit(p)
+    gate.set()
+    mb.stop()  # drain: all 11 scored before the worker exits
+    assert not mb.submit(P())  # closed
+    assert all(p.event.is_set() for p in [first] + rest)
+    assert sum(scored) == 11
+    assert mb.max_batch_seen == 8  # the queued 10 coalesced up to the cap

@@ -1,0 +1,106 @@
+"""ServeEngine (repro.serve.engine): continuous-batching slot lifecycle —
+recycling after EOS/max_tokens, latency accounting, mixed-length prompts —
+on a reduced dense config (first tier-1 coverage for the engine)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import get_api
+from repro.parallel.spec import init_params
+from repro.serve.engine import Request, ServeEngine
+
+VOCAB_SEED = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("codeqwen1.5-7b"))  # plain dense causal arch
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture()
+def engine(model):
+    # function-scoped: slot caches and positions carry garbage across
+    # requests by design (masking hides it), but tests asserting exact token
+    # reproduction need a cold engine
+    cfg, params = model
+    return ServeEngine(cfg, params, max_len=64, slots=2)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+def test_run_completes_more_requests_than_slots(model, engine):
+    """5 requests through 2 slots: every slot must be recycled at least once
+    and every request runs to its own max_tokens."""
+    cfg, _ = model
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 3, seed=i), max_tokens=2 + i)
+            for i in range(5)]
+    done = engine.run(reqs)
+    assert {r.rid for r in done} == {0, 1, 2, 3, 4}
+    assert all(r.done for r in done)
+    assert [len(r.tokens) for r in sorted(done, key=lambda r: r.rid)] == \
+        [2, 3, 4, 5, 6]
+    # all slots returned to the free list; the engine is reusable
+    assert sorted(engine._free) == [0, 1] and not engine._active
+    assert engine.run([Request(rid=9, prompt=_prompt(cfg, 2), max_tokens=1)])
+
+
+def test_latency_is_populated_and_ordered(model, engine):
+    cfg, _ = model
+    engine.run([Request(rid=9, prompt=_prompt(cfg, 2), max_tokens=1)])  # warm
+    short = Request(rid=0, prompt=_prompt(cfg, 2), max_tokens=1)
+    long = Request(rid=1, prompt=_prompt(cfg, 2, seed=1), max_tokens=40)
+    done = engine.run([short]) + engine.run([long])
+    assert all(r.latency_s > 0 for r in done)
+    # latency spans prefill start -> finish, so more decode steps take longer
+    assert long.latency_s > short.latency_s
+
+
+def test_eos_finishes_early_and_frees_slot(model, engine):
+    """A request whose eos_id matches the first greedily decoded token must
+    finish after exactly one token, well short of max_tokens."""
+    cfg, _ = model
+    prompt = _prompt(cfg, 4, seed=3)
+    [probe] = engine.run([Request(rid=0, prompt=prompt, max_tokens=4)])
+    assert len(probe.tokens) == 4  # eos_id=-1 never fires
+
+    # same prompt on a cold engine decodes the same greedy sequence
+    eos_engine = ServeEngine(cfg, engine.params, max_len=64, slots=2)
+    [req] = eos_engine.run([Request(rid=1, prompt=prompt, max_tokens=4,
+                                    eos_id=probe.tokens[0])])
+    assert req.done and req.tokens == [probe.tokens[0]]
+    assert sorted(eos_engine._free) == [0, 1]
+
+
+def test_mixed_length_prompts_batch_together(model, engine):
+    """Slots holding prompts of different lengths decode in one batch without
+    interfering with each other's completion bookkeeping."""
+    cfg, _ = model
+    lengths = [1, 7, 3, 5]
+    reqs = [Request(rid=i, prompt=_prompt(cfg, n, seed=10 + i), max_tokens=3)
+            for i, n in enumerate(lengths)]
+    done = engine.run(reqs)
+    assert {r.rid for r in done} == {0, 1, 2, 3}
+    assert all(len(r.tokens) == 3 for r in done)
+    assert all(0 <= t < cfg.vocab_padded for r in done for t in r.tokens)
+
+
+def test_submit_rejects_when_full_then_recycles(model, engine):
+    cfg, _ = model
+    a = Request(rid=0, prompt=_prompt(cfg, 2), max_tokens=2)
+    b = Request(rid=1, prompt=_prompt(cfg, 2, seed=1), max_tokens=2)
+    assert engine.submit(a) and engine.submit(b)
+    assert not engine.submit(Request(rid=2, prompt=_prompt(cfg, 2)))  # full
+    while engine._active:
+        engine.step()
+    assert a.done and b.done
+    assert engine.submit(Request(rid=2, prompt=_prompt(cfg, 2)))  # recycled
+    while engine._active:
+        engine.step()

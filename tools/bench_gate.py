@@ -1,6 +1,7 @@
 #!/usr/bin/env python
 """Bench regression gate: compare a fresh ``make bench-fast`` run against the
-committed ``BENCH_fit.json`` / ``BENCH_loop.json`` / ``BENCH_fleet.json``.
+committed ``BENCH_fit.json`` / ``BENCH_loop.json`` / ``BENCH_fleet.json`` /
+``BENCH_serve.json``.
 
 The committed artifacts were produced on a different machine than CI, so raw
 timings are not directly comparable.  The gate is *schema-aware* and
@@ -39,7 +40,8 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # (artifact file, loader producing {key: (fresh_value, committed_value)} plus
 # hard failures) — one comparator per artifact schema.
-ARTIFACTS = ("BENCH_fit.json", "BENCH_loop.json", "BENCH_fleet.json")
+ARTIFACTS = ("BENCH_fit.json", "BENCH_loop.json", "BENCH_fleet.json",
+             "BENCH_serve.json")
 
 # The rows a fast (`make bench-fast`) run is REQUIRED to produce.  A fresh
 # run missing one of these means a benchmark silently stopped running —
@@ -53,6 +55,15 @@ EXPECTED_FAST_FIT_KEYS = (
 )
 EXPECTED_FAST_FLEET_COLLECTORS = (1, 2)
 EXPECTED_FAST_LOOP_CYCLES = 2  # per track
+# Every (endpoint x mode x client-count) QPS row the serve bench must
+# produce; a dropped row means a load point silently stopped being measured.
+EXPECTED_SERVE_ENDPOINTS = ("predict", "recommend")
+EXPECTED_SERVE_MODES = ("batched", "unbatched")
+EXPECTED_SERVE_CLIENTS = (1, 8, 32)
+# The serving tier's headline claim, enforced on the COMMITTED artifact: at
+# 32 concurrent clients, micro-batched scoring must deliver >= 2x the QPS of
+# the unbatched baseline on at least one endpoint (and never lose on any).
+MIN_COMMITTED_SERVE_SPEEDUP_C32 = 2.0
 
 
 class Gate:
@@ -199,6 +210,73 @@ class Gate:
                 )
         self.compare_timings("fleet", pairs)
 
+    def check_serve(self, fresh: dict, committed: dict) -> None:
+        def rows_by_key(art: dict, endpoint: str) -> dict:
+            return {(r.get("mode"), r.get("clients")): r
+                    for r in (art.get("endpoints") or {}).get(endpoint, [])}
+
+        pairs: Dict[str, Tuple[float, float]] = {}
+        for endpoint in EXPECTED_SERVE_ENDPOINTS:
+            frows = rows_by_key(fresh, endpoint)
+            crows = rows_by_key(committed, endpoint)
+            for mode in EXPECTED_SERVE_MODES:
+                for clients in EXPECTED_SERVE_CLIENTS:
+                    key = f"{endpoint}.{mode}.c{clients}"
+                    frow = frows.get((mode, clients))
+                    if frow is None:
+                        self.hard_fail(
+                            f"serve: fresh run is required to measure {key} "
+                            f"but did not (QPS row silently dropped?)"
+                        )
+                        continue
+                    qps = frow.get("qps")
+                    if not (isinstance(qps, (int, float))
+                            and math.isfinite(qps) and qps > 0):
+                        self.hard_fail(f"serve: {key} fresh qps is {qps!r}")
+                        continue
+                    crow = crows.get((mode, clients))
+                    if crow and crow.get("p50_ms") and frow.get("p50_ms"):
+                        pairs[f"{key}.p50"] = (frow["p50_ms"] * 1e-3,
+                                               crow["p50_ms"] * 1e-3)
+
+        # the headline batching claim is enforced on the committed artifact
+        # (same-machine numbers: no calibration caveats apply)
+        c32 = {e: ((committed.get("speedup_batched") or {}).get(e) or {})
+               .get("c32") for e in EXPECTED_SERVE_ENDPOINTS}
+        if not any(isinstance(v, (int, float))
+                   and v >= MIN_COMMITTED_SERVE_SPEEDUP_C32
+                   for v in c32.values()):
+            self.hard_fail(
+                f"serve: committed batched-vs-unbatched speedup at 32 clients "
+                f"is {c32} — no endpoint reaches the required "
+                f"{MIN_COMMITTED_SERVE_SPEEDUP_C32}x"
+            )
+        for endpoint, v in c32.items():
+            if isinstance(v, (int, float)) and v < 1.0:
+                self.hard_fail(
+                    f"serve: committed {endpoint} speedup at 32 clients is "
+                    f"{v}x — batching must never lose under load"
+                )
+        # fresh speedups vary with runner load: regression-flag, don't fail
+        fresh_c32 = [((fresh.get("speedup_batched") or {}).get(e) or {})
+                     .get("c32") for e in EXPECTED_SERVE_ENDPOINTS]
+        best = max((v for v in fresh_c32 if isinstance(v, (int, float))),
+                   default=None)
+        if best is not None and best < 1.2:
+            self.soft.append(
+                f"serve: fresh batched speedup at 32 clients peaked at "
+                f"{best}x (committed artifact promises "
+                f">={MIN_COMMITTED_SERVE_SPEEDUP_C32}x)"
+            )
+        ccache = committed.get("cache") or {}
+        if isinstance(ccache.get("speedup_hit"), (int, float)) \
+                and ccache["speedup_hit"] < 1.2:
+            self.hard_fail(
+                f"serve: committed cache hit speedup is "
+                f"{ccache['speedup_hit']}x — the response cache stopped paying"
+            )
+        self.compare_timings("serve", pairs)
+
 
 def run_gate(
     fresh_dir: pathlib.Path,
@@ -211,6 +289,7 @@ def run_gate(
         "BENCH_fit.json": gate.check_fit,
         "BENCH_loop.json": gate.check_loop,
         "BENCH_fleet.json": gate.check_fleet,
+        "BENCH_serve.json": gate.check_serve,
     }
     for name in ARTIFACTS:
         committed_path = repo_root / name
