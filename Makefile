@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_FAST_DIR ?= /tmp/repro_io/bench_fast
 BENCH_GATE_FLAGS ?=
 
-.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke docs-check dev-deps
+.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke chaos-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
@@ -36,6 +36,19 @@ fleet-smoke:  ## 2-collector fleet, synthetic dry-run rows, then --status
 serve-smoke:  ## recommendation service: in-process server, all endpoints probed
 	$(PYTHON) -m repro.service.serve --smoke
 	$(PYTHON) -m repro.service.serve --smoke --no-batch --no-cache
+
+chaos-smoke:  ## chaos-equivalence: fleet under seeded fault injection vs clean run, merged.jsonl must be byte-identical
+	$(PYTHON) -m repro.service.fleet --collectors 2 --executor synthetic \
+	    --fast --campaign paper_concurrent --cycles 2 \
+	    --min-observations 4 --refit-every 2 \
+	    --out-dir /tmp/repro_io/chaos_smoke/clean --force
+	$(PYTHON) -m repro.service.fleet --collectors 2 --executor synthetic \
+	    --fast --campaign paper_concurrent --cycles 2 \
+	    --min-observations 4 --refit-every 2 --chaos-seed 123 \
+	    --out-dir /tmp/repro_io/chaos_smoke/chaos --force
+	cmp /tmp/repro_io/chaos_smoke/clean/merged.jsonl /tmp/repro_io/chaos_smoke/chaos/merged.jsonl
+	$(PYTHON) -m repro.service.fleet --status --out-dir /tmp/repro_io/chaos_smoke/chaos
+	$(PYTHON) -m repro.service.serve --smoke --chaos-seed 123
 
 docs-check:  ## docs CLI references + intra-repo links (tools/docs_check.py)
 	$(PYTHON) tools/docs_check.py

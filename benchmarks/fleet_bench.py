@@ -32,6 +32,7 @@ SCRATCH = pathlib.Path("/tmp/repro_io/bench_fleet")
 
 
 def bench_fleet(fast: bool, artifact_dir=None) -> List[Row]:
+    from repro.data.campaign import load_records_ex
     from repro.service.fleet import FleetConfig, FleetCoordinator
 
     rows: List[Row] = []
@@ -53,6 +54,8 @@ def bench_fleet(fast: bool, artifact_dir=None) -> List[Row]:
         wall = time.perf_counter() - t0
         r = records[0]
         n_rows = r["n_executed"]
+        faults = r.get("faults") or {}
+        _, n_corrupt, _ = load_records_ex(out / "merged.jsonl")
         rps = n_rows / wall
         if base_rps is None:
             base_rps = rps
@@ -66,6 +69,10 @@ def bench_fleet(fast: bool, artifact_dir=None) -> List[Row]:
             "collectors": n, "rows": n_rows, "wall_s": round(wall, 3),
             "rows_per_s": round(rps, 3), "speedup_vs_1": round(speedup, 3),
             "n_failures": r["n_failures"], "releases": r["releases"],
+            # integrity counters: tools/bench_gate.py hard-fails if any
+            # benchmark run ever reports corrupt or quarantined data
+            "quarantined": int(faults.get("quarantined", 0)),
+            "corrupt_lines": int(n_corrupt),
         })
 
     row = emit_artifact(art, "BENCH_fleet.json", fast, artifact_dir, ARTIFACT,

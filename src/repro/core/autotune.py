@@ -235,6 +235,11 @@ class OnlineAutotuner:
         # consistent pair, and nothing ever observes a half-trained model.
         self._swap_lock = threading.Lock()
         self._generation = 0
+        # Rollback state: the model the last refit displaced, republishable
+        # via rollback() when a poisoned cycle slips past the ingest guard.
+        self._prev_model = None
+        self.rollbacks = 0
+        self.degraded = False  # True while serving a rolled-back model
         self._explored: List[tuple] = []
         self._seen_keys: set = set()
         self._ingested_keys: set = set()  # (case_id, rep, seed) of campaign records
@@ -387,11 +392,34 @@ class OnlineAutotuner:
             self._store.column(self.spec.target),
         )
         with self._swap_lock:
+            self._prev_model = self.predictor.model if self._fitted else None
             self.predictor.model = model
             self._generation += 1
             self._fitted = True
+            self.degraded = False  # a clean refit closes the circuit
         self._since_fit = 0
         self._drift_refit = False
+        return True
+
+    def rollback(self) -> bool:
+        """Republish the model the last refit displaced (poisoned-cycle
+        recovery): returns False when there is no previous generation.
+
+        The generation bumps *forward* — never backward — so snapshot-derived
+        cache keys invalidate exactly like a refit and no reader can conflate
+        the restored model with the poisoned one it replaces.  The tuner is
+        marked ``degraded`` until the next clean refit."""
+        with self._swap_lock:
+            if self._prev_model is None:
+                return False
+            self.predictor.model = self._prev_model
+            self._prev_model = None  # one level of undo, not a history
+            self._generation += 1
+            self.rollbacks += 1
+            self.degraded = True
+        # A rollback means the latest observations produced a bad model —
+        # force drift-triggered refit consideration once newer data arrives.
+        self._since_fit = 0
         return True
 
     @property

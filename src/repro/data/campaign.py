@@ -33,8 +33,10 @@ import pathlib
 import socket
 import subprocess
 import sys
+import threading
 import time
 import traceback
+import zlib
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -51,11 +53,15 @@ __all__ = [
     "DEFAULT_OUT_DIR",
     "RunContext",
     "RunResult",
+    "CaseTimeout",
     "run_case",
     "run_campaign",
     "run_campaign_batch",
     "load_records",
+    "load_records_ex",
+    "repair_jsonl_tail",
     "completed_keys",
+    "terminal_keys",
     "rows_from_records",
     "shard_cases",
     "merge_records",
@@ -63,6 +69,8 @@ __all__ = [
     "canonical_records",
     "case_index",
     "CANONICAL_VOLATILE_KEYS",
+    "classify_error",
+    "set_fault_hook",
     "summarize",
     "format_summary",
     "simulated_compute",
@@ -72,6 +80,22 @@ __all__ = [
 
 SCHEMA_VERSION = 1
 DEFAULT_OUT_DIR = pathlib.Path("/tmp/repro_io/campaigns")
+
+# Optional fault-injection plan (service.faults installs it): duck-typed with
+# ``on_case(site)`` (raise/sleep before case execution) and
+# ``check_append(site)`` (ENOSPC / torn-write scheduling for the durable
+# JSONL append).  A registry, not an import — data never depends on service.
+_FAULT_HOOK = None
+
+
+def set_fault_hook(plan) -> None:
+    """Install (or clear, with ``None``) the campaign fault-injection plan."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = plan
+
+
+class CaseTimeout(Exception):
+    """A case exceeded its per-case wall-clock deadline (``deadline_s``)."""
 
 
 def simulated_compute(seconds: float):
@@ -277,24 +301,68 @@ def run_case(case: BenchCase, ctx: Optional[RunContext] = None, seed: int = 0) -
 
 # ---------------------------------------------------------------- JSONL store
 
-def load_records(path: pathlib.Path) -> List[dict]:
-    """Read JSONL records, dropping a torn trailing line (a killed writer may
-    leave a partial last record).  A malformed line *before* the end means
-    something else corrupted the file — those are dropped too, but with a
-    warning, since the affected cases will silently re-run on resume."""
+def load_records_ex(path: pathlib.Path) -> Tuple[List[dict], int, bool]:
+    """Read JSONL records, distinguishing the two corruption shapes.
+
+    Returns ``(records, n_corrupt, torn_tail)``.  A malformed *final* line
+    with no trailing newline is a **torn tail** — the expected residue of a
+    killed writer, dropped silently (resume re-runs the in-flight case).  Any
+    other malformed line is **mid-stream corruption**: skipped and counted
+    (never raised — one bad line must not take down a merge), with a warning,
+    since the affected cases silently re-run on resume."""
     path = pathlib.Path(path)
     if not path.exists():
-        return []
-    lines = [ln for ln in path.read_text().splitlines() if ln.strip()]
-    records = []
+        return [], 0, False
+    text = path.read_text()
+    ends_nl = text.endswith("\n")
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    records: List[dict] = []
+    n_corrupt = 0
+    torn_tail = False
     for i, line in enumerate(lines):
         try:
             records.append(json.loads(line))
         except json.JSONDecodeError:
-            if i != len(lines) - 1:
+            if i == len(lines) - 1 and not ends_nl:
+                torn_tail = True
+            else:
+                n_corrupt += 1
                 print(f"warning: {path}:{i + 1}: dropping malformed JSONL line "
                       "(file corrupted mid-stream?)", file=sys.stderr)
-    return records
+    return records, n_corrupt, torn_tail
+
+
+def repair_jsonl_tail(path: pathlib.Path) -> bool:
+    """Make a JSONL artifact safe to append to; returns True if repaired.
+
+    A file whose final line lacks its newline would glue the next appended
+    record onto it, and both would read back as one corrupt mid-stream line
+    — the in-flight case *and* the new case would silently vanish.  A
+    malformed un-terminated tail (torn write / killed writer) is truncated
+    back to the last record boundary; a *valid* un-terminated tail (only the
+    newline was lost) is sealed by writing the missing newline, keeping the
+    record."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return False
+    data = path.read_bytes()
+    if not data or data.endswith(b"\n"):
+        return False
+    tail = data[data.rfind(b"\n") + 1:]
+    try:
+        json.loads(tail)
+    except ValueError:
+        with open(path, "rb+") as f:
+            f.truncate(data.rfind(b"\n") + 1)
+    else:
+        with open(path, "ab") as f:
+            f.write(b"\n")
+    return True
+
+
+def load_records(path: pathlib.Path) -> List[dict]:
+    """:func:`load_records_ex` without the corruption counters."""
+    return load_records_ex(path)[0]
 
 
 def completed_keys(records: Iterable[dict]) -> set:
@@ -305,6 +373,16 @@ def completed_keys(records: Iterable[dict]) -> set:
     return {
         (r["case_id"], r.get("rep", 0), r.get("seed", 0))
         for r in records if r.get("status") == "ok"
+    }
+
+
+def terminal_keys(records: Iterable[dict]) -> set:
+    """The resume skip-set: succeeded keys plus quarantined ones.  A
+    quarantined key has permanently failed ``quarantine_after`` times —
+    re-running it forever would just burn the collection budget."""
+    return {
+        (r["case_id"], r.get("rep", 0), r.get("seed", 0))
+        for r in records if r.get("status") in ("ok", "quarantined")
     }
 
 
@@ -334,10 +412,98 @@ class RunResult:
     rows: List[dict]                      # observation rows from this run
     errors: List[dict] = dataclasses.field(default_factory=list)
     # one {case_id, rep, type, message, traceback} per entry in failures
+    retried: int = 0                      # transient-failure retry attempts
+    n_timeouts: int = 0                   # cases that hit the deadline
+    n_quarantined: int = 0                # keys quarantined this invocation
+    write_retries: int = 0                # durable-append recoveries
 
     @property
     def n_executed(self) -> int:
         return len(self.executed)
+
+
+# ------------------------------------------------------- failure taxonomy
+
+def classify_error(exc: BaseException) -> str:
+    """``transient`` (retried) / ``timeout`` / ``permanent`` (neither is
+    retried: a deadline overrun will overrun again, and a logic error will
+    raise again — both only count toward quarantine)."""
+    if isinstance(exc, CaseTimeout):
+        return "timeout"
+    if isinstance(exc, OSError):  # IOError is an alias; injected faults too
+        return "transient"
+    return "permanent"
+
+
+def _backoff_sleep(backoff_s: float, attempt: int, key: str) -> None:
+    """Exponential backoff with deterministic, key-hashed jitter (crc32, not
+    hash(): stable across processes and PYTHONHASHSEED)."""
+    jitter = (zlib.crc32(f"{key}:{attempt}".encode()) % 1000) / 2000.0  # 0..0.5
+    time.sleep(backoff_s * (2 ** (attempt - 1)) * (1.0 + jitter))
+
+
+def _run_attempt(exec_fn, case, ctx, seed: int, deadline_s: Optional[float]):
+    """One execution attempt, optionally bounded by a wall-clock deadline.
+
+    The deadline runs the executor on a daemon worker thread and abandons it
+    on overrun (Python threads cannot be killed) — the campaign moves on and
+    the straggler finishes into a discarded dict.  Without a deadline the
+    executor runs inline, exactly as before."""
+    def call():
+        if _FAULT_HOOK is not None:
+            _FAULT_HOOK.on_case(f"case:{case.id}")
+        return exec_fn(case, ctx, seed)
+
+    if deadline_s is None:
+        return call()
+    result: dict = {}
+    th = threading.Thread(target=lambda: _capture(call, result), daemon=True)
+    th.start()
+    th.join(deadline_s)
+    if th.is_alive():
+        raise CaseTimeout(f"{case.id} exceeded the {deadline_s}s case deadline")
+    if "exc" in result:
+        raise result["exc"]
+    return result["row"]
+
+
+def _capture(call, result: dict) -> None:
+    try:
+        result["row"] = call()
+    except BaseException as e:  # noqa: BLE001 — re-raised on the caller thread
+        result["exc"] = e
+
+
+def _durable_append(f, line: str, site: str) -> int:
+    """Append one JSONL line, surviving injected (or real) write failures.
+
+    ENOSPC refuses the write before any byte lands — just retry.  A torn
+    write leaves a flushed partial line — recover by truncating back to the
+    pre-write position and seeking to the new EOF (O_APPEND writes land at
+    EOF, so the retry produces exactly the intended bytes, once).  Returns
+    the number of recoveries; re-raises after 4 so a genuinely full disk
+    still fails loudly."""
+    retries = 0
+    while True:
+        f.flush()
+        pos = f.tell()
+        try:
+            torn = (_FAULT_HOOK.check_append(site)
+                    if _FAULT_HOOK is not None else None)
+            if torn is not None:
+                f.write(line[:max(1, min(torn, len(line) - 1))])
+                f.flush()
+                raise OSError(f"injected torn write at {site}")
+            f.write(line)
+            f.flush()
+            return retries
+        except OSError:
+            retries += 1
+            if retries > 4:
+                raise
+            f.flush()
+            f.truncate(pos)
+            f.seek(0, 2)
 
 
 def run_campaign(
@@ -352,6 +518,10 @@ def run_campaign(
     executor: Optional[Callable[[BenchCase, RunContext, int], dict]] = None,
     progress: Optional[Callable[[str], None]] = None,
     on_record: Optional[Callable[[dict], None]] = None,
+    deadline_s: Optional[float] = None,
+    max_retries: int = 2,
+    backoff_s: float = 0.05,
+    quarantine_after: Optional[int] = 3,
 ) -> RunResult:
     """Run (or resume) a campaign, appending one JSONL record per case.
 
@@ -360,18 +530,35 @@ def run_campaign(
     list.  ``max_cases`` stops after that many executions (used by tests to
     simulate a killed run).  ``executor`` overrides case execution (tests).
     ``on_record`` is called with each completed record (ok or error) after it
-    is durably written — the continuous loop's streaming-ingest hook."""
+    is durably written — the continuous loop's streaming-ingest hook.
+
+    Failure handling (``docs/robustness.md``): each attempt that raises is
+    classified by :func:`classify_error` — *transient* errors are retried up
+    to ``max_retries`` times with exponential backoff and deterministic
+    jitter; *timeout* (a case overrunning ``deadline_s``) and *permanent*
+    errors are not.  A key whose permanent/timeout failure count (across all
+    records in the file plus this run) reaches ``quarantine_after`` gets one
+    ``status="quarantined"`` record and is skipped by every later resume
+    (``None`` disables quarantine)."""
     camp = get_campaign(campaign) if isinstance(campaign, str) else campaign
     cases = shard_cases(camp.cases(fast), *shard)
     ctx = ctx or RunContext()
     exec_fn = executor or run_case
 
     done: set = set()
+    fail_counts: Dict[tuple, int] = {}
     if out_path is not None:
         out_path = pathlib.Path(out_path)
         out_path.parent.mkdir(parents=True, exist_ok=True)
         if resume:
-            done = completed_keys(load_records(out_path))
+            repair_jsonl_tail(out_path)  # new appends need a fresh line
+            prior = load_records(out_path)
+            done = terminal_keys(prior)
+            for r in prior:
+                if r.get("status") == "error":
+                    k = (r["case_id"], r.get("rep", 0), r.get("seed", 0))
+                    if r.get("error", {}).get("category") != "transient":
+                        fail_counts[k] = fail_counts.get(k, 0) + 1
         elif out_path.exists():
             out_path.unlink()
 
@@ -380,17 +567,26 @@ def run_campaign(
     errors: List[dict] = []
     rows: List[dict] = []
     skipped = 0
+    retried = n_timeouts = n_quarantined = write_retries = 0
     out_f = open(out_path, "a") if out_path is not None else None
+
+    def emit(record: dict) -> None:
+        nonlocal write_retries
+        if out_f is not None:
+            site = f"append:{out_path.name}"
+            write_retries += _durable_append(out_f, json.dumps(record) + "\n",
+                                             site)
+        if on_record is not None:
+            on_record(record)
+
     try:
         for case in cases:
             for rep in range(case.repeats):
                 key = (case.id, rep)  # RunResult bookkeeping for this run
-                if (case.id, rep, seed + rep) in done:
+                full_key = (case.id, rep, seed + rep)
+                if full_key in done:
                     skipped += 1
                     continue
-                if max_cases is not None and len(executed) >= max_cases:
-                    raise _MaxCasesReached
-                t0 = time.perf_counter()
                 record = {
                     "schema_version": SCHEMA_VERSION,
                     "campaign": camp.name,
@@ -402,29 +598,65 @@ def run_campaign(
                     "git": ctx.git,
                     "case": dataclasses.asdict(case),
                 }
-                try:
-                    row = exec_fn(case, ctx, seed + rep)
-                    record.update(status="ok", row=row)
-                    rows.append(row)
-                    executed.append(key)
-                except KeyboardInterrupt:
-                    raise
-                except Exception as e:  # noqa: BLE001 — per-case isolation
+                if quarantine_after is not None and \
+                        fail_counts.get(full_key, 0) >= quarantine_after:
                     record.update(
-                        status="error", row=None,
-                        error={"type": type(e).__name__, "message": str(e),
-                               "traceback": traceback.format_exc(limit=8)},
+                        status="quarantined", row=None,
+                        error={"type": "Quarantined", "category": "quarantined",
+                               "message": f"quarantined after "
+                                          f"{fail_counts[full_key]} "
+                                          "non-transient failures",
+                               "retries": 0},
+                        elapsed_s=0.0,
                     )
-                    failures.append(key)
-                    errors.append({"case_id": case.id, "rep": rep,
-                                   **record["error"]})
-                    executed.append(key)
+                    done.add(full_key)
+                    n_quarantined += 1
+                    emit(record)
+                    if progress is not None:
+                        progress(f"quar  {case.id}#r{rep} (0.00s)")
+                    continue
+                if max_cases is not None and len(executed) >= max_cases:
+                    raise _MaxCasesReached
+                t0 = time.perf_counter()
+                attempt = 0
+                while True:
+                    try:
+                        row = _run_attempt(exec_fn, case, ctx, seed + rep,
+                                           deadline_s)
+                        record.update(status="ok", row=row)
+                        if attempt:
+                            record["retries"] = attempt
+                        rows.append(row)
+                        executed.append(key)
+                        break
+                    except KeyboardInterrupt:
+                        raise
+                    except Exception as e:  # noqa: BLE001 — per-case isolation
+                        category = classify_error(e)
+                        if category == "transient" and attempt < max_retries:
+                            attempt += 1
+                            retried += 1
+                            _backoff_sleep(backoff_s, attempt,
+                                           f"{case.id}:{seed + rep}")
+                            continue
+                        record.update(
+                            status="error", row=None,
+                            error={"type": type(e).__name__, "message": str(e),
+                                   "category": category, "retries": attempt,
+                                   "traceback": traceback.format_exc(limit=8)},
+                        )
+                        failures.append(key)
+                        errors.append({"case_id": case.id, "rep": rep,
+                                       **record["error"]})
+                        executed.append(key)
+                        if category == "timeout":
+                            n_timeouts += 1
+                        if category != "transient":
+                            fail_counts[full_key] = \
+                                fail_counts.get(full_key, 0) + 1
+                        break
                 record["elapsed_s"] = round(time.perf_counter() - t0, 6)
-                if out_f is not None:
-                    out_f.write(json.dumps(record) + "\n")
-                    out_f.flush()
-                if on_record is not None:
-                    on_record(record)
+                emit(record)
                 if progress is not None:
                     progress(f"{record['status']:5s} {case.id}#r{rep} "
                              f"({record['elapsed_s']:.2f}s)")
@@ -433,7 +665,9 @@ def run_campaign(
     finally:
         if out_f is not None:
             out_f.close()
-    return RunResult(camp.name, out_path, executed, skipped, failures, rows, errors)
+    return RunResult(camp.name, out_path, executed, skipped, failures, rows,
+                     errors, retried=retried, n_timeouts=n_timeouts,
+                     n_quarantined=n_quarantined, write_retries=write_retries)
 
 
 class _MaxCasesReached(Exception):
@@ -451,6 +685,10 @@ def run_campaign_batch(
     executor: Optional[Callable[[BenchCase, RunContext, int], dict]] = None,
     progress: Optional[Callable[[str], None]] = None,
     on_record: Optional[Callable[[dict], None]] = None,
+    deadline_s: Optional[float] = None,
+    max_retries: int = 2,
+    backoff_s: float = 0.05,
+    quarantine_after: Optional[int] = 3,
 ) -> List[RunResult]:
     """Run a campaign once per seed in ``seeds`` (a *seed window*), appending
     everything to one JSONL file.
@@ -472,7 +710,9 @@ def run_campaign_batch(
         res = run_campaign(
             campaign, out_path, fast=fast, seed=s, shard=shard, resume=True,
             max_cases=remaining, ctx=ctx, executor=executor, progress=progress,
-            on_record=on_record,
+            on_record=on_record, deadline_s=deadline_s,
+            max_retries=max_retries, backoff_s=backoff_s,
+            quarantine_after=quarantine_after,
         )
         results.append(res)
         if remaining is not None:
@@ -497,12 +737,16 @@ def merge_records(records: Iterable[dict]) -> List[dict]:
     return list(latest.values())
 
 
-# Per-record provenance that varies run to run (wall time) or with the
-# collection topology (which shard/host/process executed the case).  The
-# canonical dataset strips these so its bytes depend only on *what was
-# measured*, never on *who measured it* — the full provenance stays in the
-# per-shard files and the fleet/loop state logs.
-CANONICAL_VOLATILE_KEYS = ("elapsed_s", "shard", "host", "git", "collector")
+# Per-record provenance that varies run to run (wall time, how many transient
+# faults a record survived) or with the collection topology (which
+# shard/host/process executed the case).  The canonical dataset strips these
+# so its bytes depend only on *what was measured*, never on *who measured it*
+# or *what faults the run weathered* — the full provenance stays in the
+# per-shard files and the fleet/loop state logs.  This is the chaos-
+# equivalence invariant: a fault-injected fleet run whose transient failures
+# all healed merges to bytes identical to a fault-free run.
+CANONICAL_VOLATILE_KEYS = ("elapsed_s", "shard", "host", "git", "collector",
+                           "retries")
 
 
 def case_index(campaign: Union[str, Campaign], fast: bool = False) -> Dict[str, int]:
@@ -556,6 +800,7 @@ def merge_files(
     inputs: Sequence[pathlib.Path],
     out_path: pathlib.Path,
     index: Optional[Dict[str, int]] = None,
+    counters: Optional[dict] = None,
 ) -> Tuple[int, List[dict]]:
     """Merge + dedup sharded JSONL result files (multi-host ``--shard h/H``
     runs) into one file.  Returns (n_read, merged_records).
@@ -563,10 +808,19 @@ def merge_files(
     With ``index`` (from :func:`case_index`) the output is *canonicalized*
     via :func:`canonical_records`: stable order and stable bytes regardless
     of how the inputs were sharded.  Without it, records keep first-seen
-    order and full provenance (the standalone ``merge`` CLI behavior)."""
+    order and full provenance (the standalone ``merge`` CLI behavior).
+
+    Corrupted mid-file lines in the inputs are skipped, never fatal; pass a
+    ``counters`` dict to receive their count (``counters["corrupt_lines"]``
+    accumulates across inputs)."""
     records: List[dict] = []
+    n_corrupt = 0
     for p in inputs:
-        records.extend(load_records(p))
+        recs, nc, _torn = load_records_ex(p)
+        records.extend(recs)
+        n_corrupt += nc
+    if counters is not None:
+        counters["corrupt_lines"] = counters.get("corrupt_lines", 0) + n_corrupt
     merged = (canonical_records(records, index) if index is not None
               else merge_records(records))
     out_path = pathlib.Path(out_path)
@@ -594,19 +848,21 @@ def _dist(values: List[float]) -> dict:
     }
 
 
-def summarize(records: Iterable[dict]) -> dict:
+def summarize(records: Iterable[dict], corrupt_lines: int = 0) -> dict:
     """Aggregate report: per-(bench_type, backend, format) target-throughput
     distributions plus failure counts per group.
 
     Records are deduplicated by (case_id, rep, seed) keeping the *last* one,
     so an error record superseded by a successful resume re-run no longer
-    counts as a failure."""
+    counts as a failure.  ``corrupt_lines`` (from :func:`load_records_ex`)
+    is carried into the report so corruption is surfaced, not swallowed;
+    quarantined keys are counted both in ``n_failed`` and separately."""
     latest: Dict[tuple, dict] = {}
     for r in records:
         latest[(r.get("case_id"), r.get("rep", 0), r.get("seed", 0))] = r
     groups: Dict[tuple, List[float]] = {}
     fails: Dict[tuple, int] = {}
-    n_ok = n_err = 0
+    n_ok = n_err = n_quarantined = n_retried = 0
     for r in latest.values():
         case = r.get("case", {})
         key = (
@@ -616,13 +872,19 @@ def summarize(records: Iterable[dict]) -> dict:
         )
         if r.get("status") == "ok" and r.get("row"):
             n_ok += 1
+            n_retried += int(r.get("retries", 0))
             groups.setdefault(key, []).append(float(r["row"].get(TARGET_NAME, 0.0)))
         else:
             n_err += 1
             fails[key] = fails.get(key, 0) + 1
+            if r.get("status") == "quarantined":
+                n_quarantined += 1
     return {
         "n_ok": n_ok,
         "n_failed": n_err,
+        "n_quarantined": n_quarantined,
+        "n_retried": n_retried,
+        "corrupt_lines": int(corrupt_lines),
         "groups": {
             "/".join(k): {
                 "target_throughput_mb_s": _dist(v),
@@ -636,7 +898,11 @@ def summarize(records: Iterable[dict]) -> dict:
 
 
 def format_summary(report: dict) -> str:
-    lines = [f"ok={report['n_ok']} failed={report['n_failed']}"]
+    head = f"ok={report['n_ok']} failed={report['n_failed']}"
+    for key in ("n_quarantined", "n_retried", "corrupt_lines"):
+        if report.get(key):
+            head += f" {key.removeprefix('n_')}={report[key]}"
+    lines = [head]
     hdr = f"{'bench/backend/format':40s} {'n':>4s} {'mean':>10s} {'median':>10s} {'p10':>10s} {'p90':>10s} {'fail':>5s}"
     lines.append(hdr)
     lines.append("-" * len(hdr))
@@ -740,8 +1006,13 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"error: no such result file: {', '.join(map(str, missing))}",
                   file=sys.stderr)
             return 2
-        records = [r for p in args.out for r in load_records(p)]
-        report = summarize(records)
+        records = []
+        total_corrupt = 0
+        for p in args.out:
+            recs, nc, _torn = load_records_ex(p)
+            records.extend(recs)
+            total_corrupt += nc
+        report = summarize(records, corrupt_lines=total_corrupt)
         print(json.dumps(report, indent=2) if args.json else format_summary(report))
         return 0 if report["n_ok"] and not report["n_failed"] else 1
 

@@ -147,10 +147,27 @@ class DatasetReader:
             local = i - int(self._cum[fi])
             fmt = "packed"
         off = int(self._idx[fi][local])
-        (ln,) = struct.unpack("<I", self._read_span(fi, off, 4))
+        header = self._read_span(fi, off, 4)
+        if len(header) < 4:
+            raise IOError(
+                f"truncated record header at offset {off} in "
+                f"{self.manifest['files'][fi]} (got {len(header)}/4 bytes)"
+            )
+        (ln,) = struct.unpack("<I", header)
         payload = self._read_span(fi, off + 4, ln)
+        if len(payload) < ln:
+            raise IOError(
+                f"truncated record payload at offset {off + 4} in "
+                f"{self.manifest['files'][fi]} (got {len(payload)}/{ln} bytes)"
+            )
         if self.manifest["format"] == "compressed":
-            return zlib.decompress(payload)
+            try:
+                return zlib.decompress(payload)
+            except zlib.error as exc:
+                raise IOError(
+                    f"corrupt compressed record {i} in "
+                    f"{self.manifest['files'][fi]}: {exc}"
+                ) from exc
         return payload
 
     def read_batch(self, indices) -> List[bytes]:

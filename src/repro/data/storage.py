@@ -15,7 +15,24 @@ import threading
 import time
 from typing import BinaryIO, Optional
 
-__all__ = ["StorageBackend", "get_backend", "BACKENDS", "drop_page_cache_hint"]
+__all__ = [
+    "StorageBackend",
+    "get_backend",
+    "BACKENDS",
+    "drop_page_cache_hint",
+    "set_fault_hook",
+]
+
+# Optional fault-injection hook (service.faults installs it): called as
+# hook(f"read:{backend.name}", nbytes) before every read_block. Kept as a
+# plain callable registry so this module never imports the service layer.
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook) -> None:
+    """Install (or clear, with ``None``) the read-path fault hook."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
 
 
 @dataclasses.dataclass
@@ -55,6 +72,8 @@ class StorageBackend:
         # os.pread is atomic w.r.t. the file offset -> safe under concurrent
         # worker threads sharing one handle (DataPipeline workers, §3.1.1
         # concurrent benchmarks).
+        if _FAULT_HOOK is not None:
+            _FAULT_HOOK(f"read:{self.name}", size)
         data = os.pread(f.fileno(), size, offset)
         self.charge(len(data))
         return data

@@ -12,7 +12,8 @@ from __future__ import annotations
 import argparse
 import pathlib
 
-__all__ = ["add_tuning_args", "add_fleet_args", "add_serve_args", "parse_shard"]
+__all__ = ["add_tuning_args", "add_fleet_args", "add_serve_args",
+           "add_chaos_args", "chaos_plan_from_args", "parse_shard"]
 
 
 def add_tuning_args(ap: argparse.ArgumentParser) -> None:
@@ -41,6 +42,16 @@ def add_tuning_args(ap: argparse.ArgumentParser) -> None:
                     help="predicted gain needed to adopt a proposal")
     ap.add_argument("--drift-threshold", type=float, default=0.5,
                     help="median relative error on new rows that forces a refit")
+    ap.add_argument("--case-deadline", type=float, default=None,
+                    help="per-case wall-clock deadline, seconds (a case "
+                         "overrunning it is recorded as a timeout failure; "
+                         "default: none)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="transient-failure retries per case (exponential "
+                         "backoff with deterministic jitter)")
+    ap.add_argument("--quarantine-after", type=int, default=3,
+                    help="permanent/timeout failures before a case key is "
+                         "quarantined and skipped by resume (0 = never)")
     ap.add_argument("--status", action="store_true",
                     help="print the cycle log (with per-host provenance) and exit")
     ap.add_argument("--force", action="store_true",
@@ -74,6 +85,12 @@ def add_serve_args(ap: argparse.ArgumentParser,
     ap.add_argument("--batch-window-ms", type=float, default=0.0,
                     help="hold a forming batch open this long for stragglers "
                          "(0 = drain-only, no added latency)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission bound: requests past this queue depth "
+                         "are shed with 503 + Retry-After (0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=60000.0,
+                    help="per-request queue+scoring budget; a request that "
+                         "overruns it gets 504 (0 = no deadline)")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="response cache capacity (LRU entries)")
     ap.add_argument("--no-cache", action="store_true",
@@ -82,6 +99,35 @@ def add_serve_args(ap: argparse.ArgumentParser,
                     help="self-contained end-to-end check: warm-fit a "
                          "synthetic sweep, serve, hit every endpoint over "
                          "HTTP, verify, drain, exit")
+
+
+def add_chaos_args(ap: argparse.ArgumentParser) -> None:
+    """Deterministic fault-injection flags (``repro.service.faults``).
+
+    Off by default; ``--chaos-seed`` activates the standard plan across the
+    whole process — and, via the inherited environment, across every fleet
+    collector it spawns (``docs/robustness.md``)."""
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="activate the deterministic fault-injection plan "
+                         "with this seed (default: chaos off)")
+    ap.add_argument("--chaos-every", type=int, default=0,
+                    help="fire each fault stream every N checks "
+                         "(deterministic schedule; default 5 when --chaos-seed "
+                         "is set and no --chaos-rate given)")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="fire each fault stream with this seeded probability "
+                         "per check (alternative to --chaos-every)")
+
+
+def chaos_plan_from_args(args: argparse.Namespace):
+    """Activate (and return) the fault plan requested by ``add_chaos_args``
+    flags, or None.  Imports the faults machinery only when chaos is on."""
+    if getattr(args, "chaos_seed", None) is None:
+        return None
+    from . import faults
+
+    return faults.activate(faults.default_plan(
+        args.chaos_seed, rate=args.chaos_rate, every=args.chaos_every))
 
 
 def parse_shard(s: str):

@@ -142,6 +142,13 @@ class FleetCoordinator(ContinuousTuningLoop):
         if self.cfg.sleep_per_case:
             argv += ["--sleep-per-case", str(self.cfg.sleep_per_case)]
         argv += ["--heartbeat-every", str(self.cfg.heartbeat_every_s)]
+        if self.cfg.case_deadline_s is not None:
+            argv += ["--case-deadline", str(self.cfg.case_deadline_s)]
+        argv += ["--max-retries", str(self.cfg.max_retries),
+                 "--quarantine-after",
+                 str(self.cfg.quarantine_after or 0)]
+        # an active fault plan rides along in env (REPRO_FAULT_PLAN), so
+        # collectors inject from the same seeded schedule as the coordinator
         env = dict(os.environ)
         src = str(pathlib.Path(__file__).resolve().parents[2])
         env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
@@ -228,13 +235,22 @@ class FleetCoordinator(ContinuousTuningLoop):
                 lease.handle.kill()
 
         # per-shard outcome from the shard files themselves (ground truth:
-        # error records never superseded by a successful re-run)
+        # error records never superseded by a successful re-run, retry/
+        # quarantine provenance survives worker crashes)
         n_failures = 0
+        retried = timeouts = quarantined = 0
         for i in range(n):
             records = load_records(collector_shard_path(self.cfg.out_dir, i, cycle))
             done = completed_keys(records)
             err = {(r.get("case_id"), r.get("rep", 0), r.get("seed", 0))
                    for r in records if r.get("status") == "error"} - done
+            for r in records:
+                error = r.get("error") or {}
+                retried += int(r.get("retries", 0) or error.get("retries", 0))
+                if error.get("category") == "timeout":
+                    timeouts += 1
+                if r.get("status") == "quarantined":
+                    quarantined += 1
             slot = hosts[f"host_{i}"]
             slot["n_executed"] = executed[i]
             slot["n_failures"] = len(err)
@@ -242,12 +258,18 @@ class FleetCoordinator(ContinuousTuningLoop):
                 hb = self.fleet_log.records(type="heartbeat", cycle=cycle, shard=i)
                 slot["host"] = hb[-1].get("host", "") if hb else ""
             n_failures += len(err)
+        write_retries = sum(
+            int(r.get("write_retries", 0))
+            for r in self.fleet_log.records(type="shard_done", cycle=cycle))
         return {
             "n_executed": sum(executed.values()),
             "n_failures": n_failures,
             "collectors": n,
             "releases": releases,
             "hosts": hosts,
+            "faults": {"retried": retried, "timeouts": timeouts,
+                       "quarantined": quarantined,
+                       "write_retries": write_retries},
         }
 
     def _shard_done(self, cycle: int, shard: int, attempt: int) -> Optional[dict]:
@@ -271,6 +293,8 @@ class FleetCoordinator(ContinuousTuningLoop):
 
 def coordinator_main(args) -> int:
     """The ``--role coordinator`` CLI body (parser lives in ``fleet.py``)."""
+    from ._cli import chaos_plan_from_args
+    chaos_plan_from_args(args)  # exports the plan for spawned collectors
     cfg = FleetConfig(
         **config_kwargs_from_args(args),
         collectors=args.collectors,
@@ -284,12 +308,16 @@ def coordinator_main(args) -> int:
     fleet = FleetCoordinator(cfg, progress=lambda m: print(f"[fleet] {m}"))
 
     if args.status:
-        print(_format_status(fleet.state.cycles()))
+        cycles = fleet.state.cycles()
+        print(_format_status(cycles, fleet.state.corrupt_lines))
         leases = fleet.fleet_log.records(type="lease")
         if leases:
             n_re = sum(1 for r in leases if r.get("attempt", 0) > 0)
-            print(f"fleet log: {len(leases)} lease(s), {n_re} re-lease(s), "
-                  f"{len(fleet.fleet_log.records(type='heartbeat'))} heartbeat(s)")
+            line = (f"fleet log: {len(leases)} lease(s), {n_re} re-lease(s), "
+                    f"{len(fleet.fleet_log.records(type='heartbeat'))} heartbeat(s)")
+            if fleet.fleet_log.corrupt_lines:
+                line += f", {fleet.fleet_log.corrupt_lines} corrupt line(s) skipped"
+            print(line)
         return 0
 
     if args.force:
@@ -307,7 +335,8 @@ def coordinator_main(args) -> int:
         print(f"[fleet] all {cfg.cycles} cycles already complete "
               f"(state: {fleet.state.path}); use --cycles to extend or "
               "--force to restart")
-    print(_format_status(fleet.state.cycles()))
+    cycles = fleet.state.cycles()
+    print(_format_status(cycles, fleet.state.corrupt_lines))
     n_failures = sum(r["n_failures"] for r in completed)
     if n_failures:
         print(f"[fleet] {n_failures} case failure(s) recorded; they re-run "

@@ -1,0 +1,320 @@
+"""Seeded, deterministic fault injection for the collect→merge→refit→serve path.
+
+The paper's premise is that storage misbehaves — transient errors, latency
+spikes, torn writes, corrupted bytes — yet a collection/serving stack tested
+only on healthy I/O rots the moment it meets a real heterogeneous fleet.
+This module turns those faults into a *reproducible schedule*: a
+:class:`FaultPlan` is a seeded set of :class:`FaultSpec` rules that fire at
+named injection **sites** threaded through the stack:
+
+========================  =====================================================
+site prefix               where it is checked
+========================  =====================================================
+``case:<case_id>``        campaign case execution (``data/campaign.py``), just
+                          before the executor runs — ``io_error`` / ``latency``
+``append:<file>``         the campaign runner's durable JSONL append —
+                          ``enospc`` (write refused) / ``torn_write`` (partial
+                          line lands, then the write is repaired and retried)
+``log:<file>``            ``LoopState``/``FleetLog`` appends (``state.py``) —
+                          ``corrupt_line`` injects a garbage JSONL line the
+                          readers must skip-and-count
+``read:<backend>``        ``StorageBackend.read_block`` (``data/storage.py``),
+                          which every ``formats.py`` reader goes through —
+                          ``io_error`` / ``latency``
+========================  =====================================================
+
+Fault kinds and who heals them:
+
+- ``io_error``   transient ``FaultInjected`` (an ``IOError``) — healed by the
+  campaign runner's bounded retries with exponential backoff.
+- ``latency``    a deterministic sleep — healed by nobody; per-case deadlines
+  (``--case-deadline``) bound the damage.
+- ``enospc``     ``OSError(ENOSPC)`` on append — healed by the durable-append
+  retry (nothing was written, write again).
+- ``torn_write`` a partial line is written and flushed — healed by the
+  durable-append recovery (truncate back to the record boundary, rewrite), so
+  the shard file holds the complete record exactly once.
+- ``corrupt_line`` a garbage line is appended *before* a real log record —
+  healed by every JSONL reader skipping and counting malformed complete lines.
+
+Scheduling is deterministic two ways: ``every=k`` fires on every k-th check of
+a (kind, site-class) stream — the chaos-equivalence tests and ``make
+chaos-smoke`` use this, because with ``k >= 2`` two consecutive checks never
+both fire, so one retry always heals an injected failure and the merged
+dataset provably matches a fault-free run.  ``rate=r`` draws from a per-stream
+``numpy`` RNG seeded by ``seed ^ crc32(kind:site-class)`` — order-independent
+across sites, reproducible under any thread interleaving within a site.
+
+Activation is process-global (``activate()``/``deactivate()``) and installs
+lightweight hooks into the data layer (``storage.set_fault_hook``,
+``campaign.set_fault_hook``) so ``repro.data`` never imports this package.
+``activate()`` also exports the plan to ``REPRO_FAULT_PLAN`` in this process's
+environment, and spawned fleet collectors (which inherit the environment)
+re-activate it via :func:`activate_from_env` — one fixed seed drives the whole
+fleet.  Every injection is counted per (kind, site); ``FaultPlan.report()`` is
+the ledger the chaos tests reconcile against the provenance counters
+(retried / timed-out / quarantined / write-retries / corrupt-lines).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import errno
+import json
+import os
+import threading
+import time
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultInjected",
+    "FaultSpec",
+    "FaultPlan",
+    "default_plan",
+    "activate",
+    "deactivate",
+    "active_plan",
+    "activate_from_env",
+    "ENV_VAR",
+]
+
+ENV_VAR = "REPRO_FAULT_PLAN"
+
+FAULT_KINDS = ("io_error", "latency", "enospc", "torn_write", "corrupt_line")
+
+
+class FaultInjected(IOError):
+    """The transient error the plan raises — an ``IOError`` subclass so the
+    campaign runner's taxonomy classifies it transient and retries it."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injection rule: fire ``kind`` at sites matching ``site`` (prefix).
+
+    Exactly one of ``every``/``rate`` schedules it: ``every=k`` fires each
+    k-th check of the (kind, site-class) stream (deterministic; ``k >= 2``
+    guarantees a single retry heals it); ``rate=r`` fires each check with
+    probability ``r`` from a seeded per-stream RNG.  ``max_injections`` caps
+    total fires for this spec (``None`` = unlimited)."""
+
+    kind: str
+    site: str = ""                 # prefix match; "" matches every site
+    every: int = 0
+    rate: float = 0.0
+    latency_s: float = 0.02        # sleep per fire (latency kind only)
+    max_injections: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {FAULT_KINDS})")
+        if (self.every > 0) == (self.rate > 0):
+            raise ValueError("exactly one of every/rate must be positive")
+        if self.kind in ("io_error", "enospc", "torn_write") and \
+                0 < self.every < 2:
+            raise ValueError(f"{self.kind}: every must be >= 2 so a bounded "
+                             "retry can always heal the injected failure")
+
+
+def _stream_key(site: str) -> str:
+    """Site-class a spec's counter/RNG stream is keyed on: the ``prefix:``
+    class, so e.g. every ``case:*`` check of one spec shares one schedule
+    regardless of which case is being checked — the schedule depends only on
+    how many checks happened, never on case naming."""
+    return site.split(":", 1)[0]
+
+
+class FaultPlan:
+    """A seeded set of fault specs with per-stream deterministic schedules
+    and an injection ledger.  Thread-safe: streams advance under one lock."""
+
+    def __init__(self, seed: int, specs: List[FaultSpec]):
+        self.seed = int(seed)
+        self.specs = list(specs)
+        self._lock = threading.Lock()
+        self._counters: Dict[Tuple[int, str], int] = {}
+        self._rngs: Dict[Tuple[int, str], np.random.Generator] = {}
+        self._fired: Dict[Tuple[int, str], int] = {}  # per (spec idx, class)
+        self.injected: Dict[Tuple[str, str], int] = {}  # (kind, site) -> n
+
+    # -- scheduling ----------------------------------------------------
+    def _fire(self, i: int, spec: FaultSpec, site: str) -> bool:
+        cls = _stream_key(site)
+        key = (i, cls)
+        with self._lock:
+            if spec.max_injections is not None and \
+                    self._fired.get(key, 0) >= spec.max_injections:
+                return False
+            if spec.every > 0:
+                n = self._counters.get(key, 0) + 1
+                self._counters[key] = n
+                fire = n % spec.every == 0
+            else:
+                rng = self._rngs.get(key)
+                if rng is None:
+                    s = self.seed ^ zlib.crc32(f"{spec.kind}:{cls}".encode())
+                    rng = np.random.default_rng(s)
+                    self._rngs[key] = rng
+                fire = bool(rng.random() < spec.rate)
+            if fire:
+                self._fired[key] = self._fired.get(key, 0) + 1
+                sk = (spec.kind, site)
+                self.injected[sk] = self.injected.get(sk, 0) + 1
+            return fire
+
+    def _check(self, site: str, kinds: Tuple[str, ...]) -> List[FaultSpec]:
+        fired = []
+        for i, spec in enumerate(self.specs):
+            if spec.kind in kinds and site.startswith(spec.site):
+                if self._fire(i, spec, site):
+                    fired.append(spec)
+        return fired
+
+    # -- site hooks ----------------------------------------------------
+    def on_case(self, site: str) -> None:
+        """Campaign case-execution site: sleep for latency fires, then raise
+        on an io_error fire (the executor never runs that attempt)."""
+        for spec in self._check(site, ("latency", "io_error")):
+            if spec.kind == "latency":
+                time.sleep(spec.latency_s)
+            else:
+                raise FaultInjected(f"injected transient I/O error at {site}")
+
+    def on_storage(self, site: str, nbytes: int) -> None:
+        """Storage read site (``StorageBackend.read_block``)."""
+        self.on_case(site)  # same kinds, same semantics
+
+    def check_append(self, site: str) -> Optional[int]:
+        """Durable-append site.  Raises ``OSError(ENOSPC)`` for an enospc
+        fire; returns a tear offset (bytes of the line that will land) for a
+        torn_write fire; returns ``None`` for a clean write.
+
+        The two kinds are checked in sequence, torn_write only when enospc
+        did not fire (each spec keeps its own stream, so schedules stay
+        deterministic): one check then injects at most one write fault, so
+        every ledger entry is exactly one durable-append recovery — the
+        accounting identity the chaos tests reconcile."""
+        if self._check(site, ("enospc",)):
+            raise OSError(errno.ENOSPC, f"injected ENOSPC at {site}")
+        if self._check(site, ("torn_write",)):
+            return 1 + zlib.crc32(f"{site}:{self.seed}".encode()) % 16
+        return None
+
+    def corrupt_line(self, site: str) -> Optional[str]:
+        """Log-append site: a garbage JSONL line to write before the real
+        record, or ``None``.  Readers must skip and count it."""
+        if self._check(site, ("corrupt_line",)):
+            return '{"injected": "corrupt", truncated-not-json'
+        return None
+
+    # -- accounting / serialization ------------------------------------
+    def total_injected(self, kind: Optional[str] = None) -> int:
+        with self._lock:
+            return sum(n for (k, _s), n in self.injected.items()
+                       if kind is None or k == kind)
+
+    def report(self) -> dict:
+        """The injection ledger: totals per kind and per (kind, site)."""
+        with self._lock:
+            by_kind: Dict[str, int] = {}
+            for (k, _s), n in self.injected.items():
+                by_kind[k] = by_kind.get(k, 0) + n
+            return {
+                "seed": self.seed,
+                "total": sum(self.injected.values()),
+                "by_kind": dict(sorted(by_kind.items())),
+                "by_site": {f"{k}@{s}": n for (k, s), n
+                            in sorted(self.injected.items())},
+            }
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "seed": self.seed,
+            "specs": [dataclasses.asdict(s) for s in self.specs],
+        }, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        obj = json.loads(text)
+        return cls(obj["seed"], [FaultSpec(**s) for s in obj["specs"]])
+
+
+def default_plan(seed: int, rate: float = 0.0, every: int = 0,
+                 latency_s: float = 0.02) -> FaultPlan:
+    """The standard chaos mix (what ``--chaos-seed`` activates): one spec of
+    every fault kind across every site class it applies to.  With neither
+    ``rate`` nor ``every`` given, defaults to ``every=5`` — the deterministic
+    schedule whose injected failures a single retry always heals."""
+    if rate <= 0 and every <= 0:
+        every = 5
+    kw = {"every": every} if every > 0 else {"rate": rate}
+    return FaultPlan(seed, [
+        FaultSpec("io_error", site="case:", **kw),
+        FaultSpec("latency", site="case:", latency_s=latency_s, **kw),
+        # read: checks fire once per *block read*, and one case attempt makes
+        # many of them — unbudgeted, an every=k schedule would re-fire on
+        # every retry of a real-I/O case and no bounded retry could ever
+        # heal it.  A small budget keeps the retry path exercised while
+        # guaranteeing the schedule drains.  (latency stays unbudgeted:
+        # it is non-fatal, bounded by --case-deadline.)
+        FaultSpec("io_error", site="read:", max_injections=2, **kw),
+        FaultSpec("latency", site="read:", latency_s=latency_s, **kw),
+        FaultSpec("enospc", site="append:", **kw),
+        FaultSpec("torn_write", site="append:", **kw),
+        FaultSpec("corrupt_line", site="log:", **kw),
+    ])
+
+
+# ---------------------------------------------------------------- activation
+
+_active: Optional[FaultPlan] = None
+_active_lock = threading.Lock()
+
+
+def _install_hooks(plan: Optional[FaultPlan]) -> None:
+    from ..data import campaign, storage
+
+    storage.set_fault_hook(plan.on_storage if plan is not None else None)
+    campaign.set_fault_hook(plan if plan is not None else None)
+
+
+def activate(plan: FaultPlan, export_env: bool = True) -> FaultPlan:
+    """Install ``plan`` process-wide: data-layer hooks + (by default) the
+    ``REPRO_FAULT_PLAN`` environment export that spawned fleet collectors
+    inherit and re-activate."""
+    global _active
+    with _active_lock:
+        _active = plan
+        _install_hooks(plan)
+        if export_env:
+            os.environ[ENV_VAR] = plan.to_json()
+    return plan
+
+
+def deactivate() -> None:
+    """Remove the active plan, its hooks, and the environment export."""
+    global _active
+    with _active_lock:
+        _active = None
+        _install_hooks(None)
+        os.environ.pop(ENV_VAR, None)
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _active
+
+
+def activate_from_env() -> Optional[FaultPlan]:
+    """Activate the plan exported by a parent process (fleet collectors call
+    this at startup), if any.  Each process gets its own schedule state —
+    determinism holds per process, and the chaos invariants are end-state
+    properties (merged bytes, accounted counters), not per-fire alignment."""
+    text = os.environ.get(ENV_VAR)
+    if not text:
+        return None
+    return activate(FaultPlan.from_json(text), export_env=False)

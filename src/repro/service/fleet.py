@@ -57,7 +57,7 @@ import zlib
 from typing import Callable, List, Optional, Sequence
 
 from ..data.campaign import run_campaign_batch
-from ._cli import add_fleet_args, add_tuning_args
+from ._cli import add_chaos_args, add_fleet_args, add_tuning_args
 from .state import FleetLog
 
 __all__ = [
@@ -101,6 +101,11 @@ class CollectorConfig:
     executor_kind: str = "real"   # "real" I/O or "synthetic" dry-run rows
     sleep_per_case: float = 0.0   # pacing sleep (scaling experiments/tests)
     heartbeat_every_s: float = 5.0  # liveness tick cadence while collecting
+    # Collection hardening, mirroring LoopConfig (docs/robustness.md)
+    case_deadline_s: Optional[float] = None
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    quarantine_after: Optional[int] = 3
 
 
 def collector_shard_path(out_dir, shard: int, cycle: int) -> pathlib.Path:
@@ -210,6 +215,10 @@ def run_collector(
             cfg.campaign, out, seeds, fast=cfg.fast,
             shard=(shard, cfg.collectors), max_cases=max_cases,
             executor=exec_fn, progress=progress, on_record=on_record,
+            deadline_s=getattr(cfg, "case_deadline_s", None),
+            max_retries=getattr(cfg, "max_retries", 2),
+            backoff_s=getattr(cfg, "backoff_s", 0.05),
+            quarantine_after=getattr(cfg, "quarantine_after", 3),
         )
     finally:
         stop_ticks.set()
@@ -221,6 +230,10 @@ def run_collector(
             "n_executed": sum(r.n_executed for r in results),
             "n_failures": sum(len(r.failures) for r in results),
             "n_skipped": sum(r.skipped for r in results),
+            "retried": sum(r.retried for r in results),
+            "timeouts": sum(r.n_timeouts for r in results),
+            "quarantined": sum(r.n_quarantined for r in results),
+            "write_retries": sum(r.write_retries for r in results),
             "host": host,
         })
     return results
@@ -241,6 +254,7 @@ def build_parser() -> argparse.ArgumentParser:
     )
     add_tuning_args(ap)
     add_fleet_args(ap, default_out_dir=DEFAULT_FLEET_DIR)
+    add_chaos_args(ap)
     return ap
 
 
@@ -249,12 +263,22 @@ def _collector_main(args: argparse.Namespace,
     if args.cycle is None or args.shard is None:
         ap.error("--role collector requires --cycle and --shard i/N")
     shard, n = args.shard
+    # A coordinator running under chaos exports its plan into the
+    # environment; collectors inherit it here so the whole fleet injects
+    # faults from one seeded schedule (explicit --chaos-seed wins).
+    from ._cli import chaos_plan_from_args
+    if chaos_plan_from_args(args) is None:
+        from . import faults
+        faults.activate_from_env()
     cfg = CollectorConfig(
         campaign=args.campaign, out_dir=args.out_dir, collectors=n,
         fast=args.fast, base_seed=args.base_seed,
         seeds_per_cycle=args.seeds_per_cycle,
         executor_kind=args.executor, sleep_per_case=args.sleep_per_case,
         heartbeat_every_s=args.heartbeat_every,
+        case_deadline_s=args.case_deadline, max_retries=args.max_retries,
+        quarantine_after=(None if args.quarantine_after <= 0
+                          else args.quarantine_after),
     )
     results = run_collector(cfg, args.cycle, shard, seeds=args.seeds,
                             attempt=args.attempt,

@@ -61,8 +61,8 @@ from ..data.campaign import (
     run_campaign_batch,
 )
 from ..data.registry import Campaign
-from ._cli import add_tuning_args
-from .state import STATE_SCHEMA_VERSION, LoopState
+from ._cli import add_chaos_args, add_tuning_args, chaos_plan_from_args
+from .state import STATE_SCHEMA_VERSION, ZERO_FAULTS, LoopState
 
 __all__ = ["LoopConfig", "ContinuousTuningLoop", "main", "DEFAULT_LOOP_DIR",
            "add_tuning_args", "config_kwargs_from_args"]
@@ -89,6 +89,12 @@ class LoopConfig:
     gain_threshold: float = 0.10
     drift_threshold: float = 0.5
     seed: int = 0                        # model seed (decisions deterministic)
+    # Collection hardening (docs/robustness.md): threaded into every
+    # run_campaign_batch call this loop (or its fleet subclass) makes.
+    case_deadline_s: Optional[float] = None  # per-case wall-clock deadline
+    max_retries: int = 2                 # transient-failure retries per case
+    backoff_s: float = 0.05              # base of the exponential backoff
+    quarantine_after: Optional[int] = 3  # permanent failures before quarantine
 
     def __post_init__(self):
         self.out_dir = pathlib.Path(self.out_dir)
@@ -121,6 +127,8 @@ class ContinuousTuningLoop:
         self._progress = progress
         self._ctx = RunContext()
         self._case_order: Optional[dict] = None  # case_id -> campaign position
+        self.merge_corrupt_lines = 0    # malformed shard lines at last merge
+        self._rejected_keys: set = set()  # keys refused by the refit guard
         self.tuner = OnlineAutotuner(
             space=cfg.space,
             refit_every=cfg.refit_every,
@@ -177,9 +185,40 @@ class ContinuousTuningLoop:
         shards = self._shard_files()
         if not shards:
             return []
+        counters: dict = {}
         _, merged = merge_files(shards, self.merged_path,
-                                index=self._case_positions())
+                                index=self._case_positions(),
+                                counters=counters)
+        self.merge_corrupt_lines = counters.get("corrupt_lines", 0)
         return merged
+
+    def _validate_records(self, records: List[dict]) -> tuple:
+        """Refit validation guard: refuse observation rows that would poison
+        the model — any non-finite feature, or a non-finite/negative target.
+
+        Returns ``(clean_records, n_rejected)`` where ``n_rejected`` counts
+        only *newly seen* poisoned keys (a bad row sitting in the merged
+        dataset is rejected again every cycle, but reported once)."""
+        clean: List[dict] = []
+        n_rejected = 0
+        for r in records:
+            if r.get("status") == "ok" and r.get("row"):
+                row = r["row"]
+                tgt = float(row.get(TARGET_NAME, 0.0))
+                bad = not math.isfinite(tgt) or tgt < 0 or any(
+                    isinstance(v, (int, float)) and not math.isfinite(float(v))
+                    for v in row.values()
+                )
+                if bad:
+                    key = (r.get("case_id"), r.get("rep", 0), r.get("seed", 0))
+                    if key not in self._rejected_keys:
+                        self._rejected_keys.add(key)
+                        n_rejected += 1
+                    continue
+            clean.append(r)
+        if n_rejected:
+            self._log(f"refit guard: rejected {n_rejected} poisoned row(s)")
+        return clean, n_rejected
 
     def _repair_shards(self, upto: int) -> int:
         """Re-run failed cases of already-completed cycles.
@@ -206,6 +245,10 @@ class ContinuousTuningLoop:
                     self.cfg.campaign, shard, self._cycle_seeds(cycle),
                     fast=self.cfg.fast, shard=shard_spec, ctx=self._ctx,
                     executor=self._executor, progress=self._progress,
+                    deadline_s=self.cfg.case_deadline_s,
+                    max_retries=self.cfg.max_retries,
+                    backoff_s=self.cfg.backoff_s,
+                    quarantine_after=self.cfg.quarantine_after,
                 )
                 n += sum(r.n_executed for r in results)
         if n:
@@ -228,9 +271,12 @@ class ContinuousTuningLoop:
             if not records:
                 continue
             # canonical order == single-host execution order, so the replay
-            # is identical no matter how many collectors produced the cycle
-            n += self.tuner.ingest_records(
+            # is identical no matter how many collectors produced the cycle;
+            # the same validation guard as the live path keeps the resumed
+            # model identical to the uninterrupted run's
+            clean, _ = self._validate_records(
                 canonical_records(records, self._case_positions()))
+            n += self.tuner.ingest_records(clean)
             self.tuner.maybe_refit()
         for rec in self.state.cycles():
             decision = rec.get("decision") or {}
@@ -269,6 +315,10 @@ class ContinuousTuningLoop:
             self.cfg.campaign, self._shard_path(cycle), seeds,
             fast=self.cfg.fast, ctx=self._ctx, executor=self._executor,
             progress=self._progress,
+            deadline_s=self.cfg.case_deadline_s,
+            max_retries=self.cfg.max_retries,
+            backoff_s=self.cfg.backoff_s,
+            quarantine_after=self.cfg.quarantine_after,
         )
         n_executed = sum(r.n_executed for r in results)
         n_failures = sum(len(r.failures) for r in results)
@@ -281,6 +331,12 @@ class ContinuousTuningLoop:
                                  "n_executed": n_executed,
                                  "n_failures": n_failures,
                                  "releases": 0}},
+            "faults": {
+                "retried": sum(r.retried for r in results),
+                "timeouts": sum(r.n_timeouts for r in results),
+                "quarantined": sum(r.n_quarantined for r in results),
+                "write_retries": sum(r.write_retries for r in results),
+            },
         }
 
     def run_cycle(self, cycle: int, current_config: dict) -> dict:
@@ -300,8 +356,10 @@ class ContinuousTuningLoop:
         cycle_rows = rows_from_records(
             [r for r in merged if r.get("seed") in seed_set])
 
-        # 3. refit: zero-copy ingest of the new rows, drift-aware schedule
-        n_new = self.tuner.ingest_records(merged)
+        # 3. refit: zero-copy ingest of the new rows, drift-aware schedule —
+        # behind the validation guard that refuses poisoned observations
+        clean, n_rejected = self._validate_records(merged)
+        n_new = self.tuner.ingest_records(clean)
         t0 = time.perf_counter()
         refit = self.tuner.maybe_refit()
         refit_s = time.perf_counter() - t0
@@ -312,6 +370,19 @@ class ContinuousTuningLoop:
         context = self._live_context(all_rows, cycle_rows)
         t0 = time.perf_counter()
         top = self.tuner.ranked(context, top_k=self.cfg.top_k)
+        # Poisoned-cycle circuit breaker: a refit that predicts garbage
+        # (non-finite scores) is rolled back to the previous generation and
+        # the grid is re-ranked on the restored model.
+        rollback = False
+        if top and any(
+            not math.isfinite(float(t.get("predicted_throughput_mb_s", 0.0)))
+            for t in top
+        ):
+            if self.tuner.rollback():
+                rollback = True
+                self._log(f"cycle {cycle}: non-finite predictions — rolled "
+                          f"back to generation {self.tuner.generation}")
+                top = self.tuner.ranked(context, top_k=self.cfg.top_k)
         decision = self.tuner.decide(current_config, context,
                                      best=top[0] if top else None)
         recommend_s = time.perf_counter() - t0
@@ -361,6 +432,14 @@ class ContinuousTuningLoop:
                 "predicted_gain": round(float(decision.predicted_gain), 6),
                 "config": self._knobs_only(decision.config or {}),
             },
+            "faults": {
+                **dict(ZERO_FAULTS),
+                **{k: int(v) for k, v in
+                   (collect.get("faults") or {}).items()},
+                "corrupt_lines": self.merge_corrupt_lines,
+                "rejected_rows": n_rejected,
+                "rollback": rollback,
+            },
             "current_config": new_config,
             "elapsed_s": round(time.perf_counter() - t_cycle, 6),
             "host": socket.gethostname(),
@@ -378,8 +457,11 @@ class ContinuousTuningLoop:
         if max_cycles is not None:
             end = min(end, start + max_cycles)
         # repair runs even when every cycle is complete — a failure in the
-        # *last* cycle must still heal on the next invocation
-        if start > 0 and self._repair_shards(start):
+        # *last* cycle must still heal on the next invocation.  The re-merge
+        # is unconditional: merged.jsonl is derived state, and rebuilding it
+        # from the shard files also heals a torn or corrupted merge output.
+        if start > 0:
+            self._repair_shards(start)
             self._merge()
         if start >= end:
             return []
@@ -397,7 +479,7 @@ class ContinuousTuningLoop:
 
 # ---------------------------------------------------------------- CLI
 
-def _format_status(cycles: List[dict]) -> str:
+def _format_status(cycles: List[dict], state_corrupt_lines: int = 0) -> str:
     if not cycles:
         return "no completed cycles"
     hdr = (f"{'cycle':>5s} {'rows':>6s} {'new':>5s} {'hosts':>6s} {'refit':>5s} "
@@ -442,6 +524,20 @@ def _format_status(cycles: List[dict]) -> str:
             lines.append(f"  {slot}: host={a['host'] or '?'} "
                          f"executed={a['n_executed']} failures={a['n_failures']} "
                          f"releases={a['releases']}")
+    # fault provenance aggregated over the cycle log (schema v3; older
+    # records upgrade to a zeroed block, so this never KeyErrors)
+    totals = {k: 0 for k in ZERO_FAULTS if k != "rollback"}
+    rollbacks = 0
+    for r in cycles:
+        f = r.get("faults") or {}
+        for k in totals:
+            totals[k] += int(f.get(k, 0))
+        rollbacks += bool(f.get("rollback"))
+    totals["corrupt_lines"] += int(state_corrupt_lines)
+    if rollbacks or any(totals.values()):
+        lines.append("faults: " + " ".join(f"{k}={v}" for k, v
+                                           in totals.items())
+                     + f" rollbacks={rollbacks}")
     return "\n".join(lines)
 
 
@@ -455,6 +551,10 @@ def config_kwargs_from_args(args: argparse.Namespace) -> dict:
         min_observations=args.min_observations,
         gain_threshold=args.gain_threshold,
         drift_threshold=args.drift_threshold,
+        case_deadline_s=args.case_deadline,
+        max_retries=args.max_retries,
+        quarantine_after=(None if args.quarantine_after <= 0
+                          else args.quarantine_after),
     )
 
 
@@ -466,15 +566,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                     "repro.service.fleet for multi-collector runs).",
     )
     add_tuning_args(ap)
+    add_chaos_args(ap)
     ap.add_argument("--out-dir", type=pathlib.Path, default=DEFAULT_LOOP_DIR,
                     help="state + shard directory (resume key)")
     args = ap.parse_args(argv)
 
+    chaos_plan_from_args(args)
     cfg = LoopConfig(**config_kwargs_from_args(args))
     loop = ContinuousTuningLoop(cfg, progress=lambda m: print(f"[loop] {m}"))
 
     if args.status:
-        print(_format_status(loop.state.cycles()))
+        cycles = loop.state.cycles()
+        print(_format_status(cycles, loop.state.corrupt_lines))
         return 0
 
     if args.force:
@@ -492,7 +595,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"[loop] all {cfg.cycles} cycles already complete "
               f"(state: {loop.state.path}); use --cycles to extend or --force "
               "to restart")
-    print(_format_status(loop.state.cycles()))
+    cycles = loop.state.cycles()
+    print(_format_status(cycles, loop.state.corrupt_lines))
     n_failures = sum(r["n_failures"] for r in completed)
     if n_failures:
         print(f"[loop] {n_failures} case failure(s) recorded; they re-run on "

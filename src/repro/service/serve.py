@@ -69,7 +69,8 @@ import numpy as np
 
 from ..core.autotune import KNOB_NAMES, ConfigSpace, OnlineAutotuner, recommend
 from ..core.features import TARGET_NAME
-from ._cli import add_serve_args, add_tuning_args
+from ._cli import add_chaos_args, add_serve_args, add_tuning_args, \
+    chaos_plan_from_args
 from .state import LoopState
 
 __all__ = [
@@ -154,7 +155,7 @@ class _Pending:
     result delivered through an event by the scorer."""
 
     __slots__ = ("kind", "ctx_key", "row", "filtered", "top_k", "event",
-                 "status", "body")
+                 "status", "body", "deadline")
 
     def __init__(self, kind: str, ctx_key: tuple, row=None, filtered=None,
                  top_k: int = 0):
@@ -166,6 +167,7 @@ class _Pending:
         self.event = threading.Event()
         self.status = 500
         self.body = b'{"error":"internal"}'
+        self.deadline = None        # monotonic budget set by _serve_scored
 
     def finish(self, status: int, body: bytes) -> None:
         self.status = status
@@ -186,12 +188,21 @@ class MicroBatcher:
     scores, so batches form naturally without adding idle latency.
 
     ``stop()`` drains: everything submitted before the close wins a result
-    before the worker exits (the graceful-shutdown guarantee)."""
+    before the worker exits (the graceful-shutdown guarantee).
 
-    def __init__(self, score_fn, max_batch: int = 64, window_s: float = 0.0):
+    The queue is **bounded** (``max_queue``): past that depth the service is
+    not keeping up, and letting the backlog grow only converts overload into
+    unbounded client latency and coordinator memory.  ``submit`` raises
+    ``queue.Full`` instead of enqueueing — the caller sheds the request with
+    a 503 + ``Retry-After`` so clients back off (``docs/robustness.md``).
+    ``max_queue=0`` disables the bound."""
+
+    def __init__(self, score_fn, max_batch: int = 64, window_s: float = 0.0,
+                 max_queue: int = 1024):
         self._score_fn = score_fn
         self.max_batch = max(1, int(max_batch))
         self.window_s = float(window_s)
+        self.max_queue = max(0, int(max_queue))
         self._q: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._closed = False
@@ -203,11 +214,20 @@ class MicroBatcher:
         self._thread.start()
 
     def submit(self, pending: _Pending) -> bool:
+        """Enqueue for scoring.  False = closed (shutting down); raises
+        ``queue.Full`` when the admission bound is hit (caller sheds)."""
         with self._lock:
             if self._closed:
                 return False
+            if self.max_queue and self._q.qsize() >= self.max_queue:
+                raise queue.Full
             self._q.put(pending)
             return True
+
+    @property
+    def depth(self) -> int:
+        """Approximate queued-request count (admission/stats reporting)."""
+        return self._q.qsize()
 
     def _collect(self, first) -> Tuple[List[_Pending], bool]:
         batch = [first]
@@ -287,6 +307,8 @@ class ServeConfig:
     batching: bool = True         # False: score inline per request (baseline)
     max_batch: int = 64
     batch_window_ms: float = 0.0  # >0: hold the batch open for stragglers
+    max_queue: int = 1024         # admission bound; past it requests shed 503
+    deadline_ms: float = 60000.0  # per-request queue+scoring budget -> 504
     cache_size: int = 1024        # 0 disables the response cache
     top_k: int = 5                # default /recommend depth
     out_dir: Optional[pathlib.Path] = None  # serve_info.json + loop state home
@@ -336,6 +358,8 @@ class RecommendationService:
         self._counter_lock = threading.Lock()
         self._requests: Dict[str, int] = {}
         self._errors = 0
+        self._shed = 0       # 503s from the admission bound (queue full)
+        self._timeouts = 0   # 504s from the per-request deadline budget
         self._active = 0
         self._idle = threading.Condition(self._counter_lock)
 
@@ -351,7 +375,8 @@ class RecommendationService:
         if self.cfg.batching:
             self._batcher = MicroBatcher(
                 self._score_batch, max_batch=self.cfg.max_batch,
-                window_s=self.cfg.batch_window_ms / 1e3)
+                window_s=self.cfg.batch_window_ms / 1e3,
+                max_queue=self.cfg.max_queue)
         handler = _make_handler(self)
         self._httpd = _Server((self.cfg.host, self.cfg.port), handler)
         self._http_thread = threading.Thread(
@@ -466,14 +491,33 @@ class RecommendationService:
                     p.finish(200, body)
 
     def _dispatch(self, pending: _Pending) -> None:
-        """Batched mode: enqueue and wait; unbatched: score inline (still
-        serialized — the grid cache is shared scorer state either way)."""
+        """Batched mode: admit (or shed), enqueue, and wait out the request's
+        remaining deadline budget; unbatched: score inline (still serialized —
+        the grid cache is shared scorer state either way)."""
         if self._batcher is not None:
-            if not self._batcher.submit(pending):
-                pending.finish(503, _json_bytes({"error": "shutting down"}))
+            try:
+                admitted = self._batcher.submit(pending)
+            except queue.Full:
+                # overload: shed instead of queueing unboundedly — clients
+                # retry after backoff (Retry-After is set by the HTTP layer)
+                with self._counter_lock:
+                    self._shed += 1
+                pending.finish(503, _json_bytes(
+                    {"error": "overloaded: scoring queue full",
+                     "retry_after_s": 1}))
                 return
-            if not pending.event.wait(timeout=60.0):
-                pending.finish(504, _json_bytes({"error": "scoring timed out"}))
+            if not admitted:
+                pending.finish(503, _json_bytes({"error": "shutting down",
+                                                 "retry_after_s": 1}))
+                return
+            budget = (pending.deadline - time.monotonic()
+                      if pending.deadline is not None
+                      else self.cfg.deadline_ms / 1e3)
+            if not pending.event.wait(timeout=max(0.0, budget)):
+                with self._counter_lock:
+                    self._timeouts += 1
+                pending.finish(504, _json_bytes(
+                    {"error": "deadline exceeded before scoring finished"}))
             return
         self._score_batch([pending])
 
@@ -487,6 +531,8 @@ class RecommendationService:
             body = self.cache.get(key)
             if body is not None:
                 return 200, body
+        if self.cfg.deadline_ms > 0:
+            pending.deadline = time.monotonic() + self.cfg.deadline_ms / 1e3
         self._dispatch(pending)
         if pending.status == 200 and self.cfg.cache_size > 0:
             # re-derive the key from the response's generation: a swap racing
@@ -535,10 +581,28 @@ class RecommendationService:
         })
 
     def _healthz(self) -> Tuple[int, bytes]:
+        """Liveness + circuit state.  Always 200 (the process is serving);
+        ``status`` degrades to "degraded" when the embedded loop thread died
+        on an error or the model was rolled back to its previous generation —
+        the service still answers, but its freshness pipeline is broken and
+        an operator/orchestrator should look (``docs/robustness.md``)."""
+        loop_dead = (self._loop_thread is not None
+                     and not self._loop_thread.is_alive()
+                     and self.loop_error is not None)
+        degraded = loop_dead or bool(getattr(self.tuner, "degraded", False))
+        status = ("draining" if self._draining
+                  else "degraded" if degraded else "ok")
         return 200, _json_bytes({
-            "status": "draining" if self._draining else "ok",
+            "status": status,
             "fitted": self.tuner.fitted,
             "model_generation": self.tuner.generation,
+            "circuit": {
+                "loop_alive": (self._loop_thread.is_alive()
+                               if self._loop_thread is not None else None),
+                "loop_error": self.loop_error,
+                "model_degraded": bool(getattr(self.tuner, "degraded", False)),
+                "rollbacks": int(getattr(self.tuner, "rollbacks", 0)),
+            },
         })
 
     def _loop_stats(self) -> Optional[dict]:
@@ -569,6 +633,8 @@ class RecommendationService:
         with self._counter_lock:
             requests = dict(self._requests)
             errors = self._errors
+            shed = self._shed
+            timeouts = self._timeouts
         stats = {
             "uptime_s": round(time.time() - self._started, 3),
             "model_generation": self.tuner.generation,
@@ -582,6 +648,13 @@ class RecommendationService:
                 "n_scored": self._batcher.n_scored if self._batcher else 0,
                 "max_batch": self._batcher.max_batch_seen if self._batcher else 0,
                 "mean_batch": round(self._batcher.mean_batch, 3) if self._batcher else 0.0,
+            },
+            "admission": {
+                "max_queue": self.cfg.max_queue,
+                "queue_depth": self._batcher.depth if self._batcher else 0,
+                "shed": shed,
+                "deadline_ms": self.cfg.deadline_ms,
+                "deadline_timeouts": timeouts,
             },
             "cache": {
                 "capacity": self.cfg.cache_size,
@@ -657,6 +730,10 @@ def _make_handler(service: RecommendationService):
                 self.send_response(status)
                 self.send_header("Content-Type", "application/json")
                 self.send_header("Content-Length", str(len(payload)))
+                if status == 503:
+                    # shed/unfitted/draining: tell well-behaved clients how
+                    # long to back off instead of hammering the queue
+                    self.send_header("Retry-After", "1")
                 self.end_headers()
                 self.wfile.write(payload)
             except (BrokenPipeError, ConnectionResetError):
@@ -779,11 +856,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     add_tuning_args(ap)
     add_serve_args(ap, DEFAULT_SERVE_DIR)
+    add_chaos_args(ap)
     args = ap.parse_args(argv)
+    chaos_plan_from_args(args)
 
     cfg = ServeConfig(
         host=args.host, port=args.port, batching=not args.no_batch,
         max_batch=args.max_batch, batch_window_ms=args.batch_window_ms,
+        max_queue=args.max_queue, deadline_ms=args.deadline_ms,
         cache_size=0 if args.no_cache else args.cache_size,
         top_k=args.top_k, out_dir=args.out_dir,
     )
@@ -795,7 +875,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         config_kwargs_from_args
 
     if args.status:
-        print(_format_status(LoopState(args.out_dir / "loop_state.jsonl").cycles()))
+        state = LoopState(args.out_dir / "loop_state.jsonl")
+        cycles = state.cycles()
+        print(_format_status(cycles, state.corrupt_lines))
         return 0
 
     loop = None

@@ -8,10 +8,10 @@ carries the cycle's full provenance — seed window, dataset growth, refit and
 recommend latency, drift score, per-host collection stats, and the decision
 taken — so the state file doubles as the loop's audit log.
 
-Record schema (``STATE_SCHEMA_VERSION = 2``)::
+Record schema (``STATE_SCHEMA_VERSION = 3``)::
 
     {
-      "schema_version": 2,
+      "schema_version": 3,
       "cycle": 0,                      # 0-based cycle index (the resume key)
       "status": "ok",
       "campaign": "paper_core",
@@ -36,6 +36,10 @@ Record schema (``STATE_SCHEMA_VERSION = 2``)::
       "top": [{...top-k configs...}],  # ranked() report, predicted MB/s each
       "decision": {"reconfigure": true, "predicted_gain": 0.31,
                    "explore": false, "config": {...knobs...}},
+      "faults": {                      # v3 hardening provenance
+        "retried": 0, "timeouts": 0, "quarantined": 0, "write_retries": 0,
+        "corrupt_lines": 0, "rejected_rows": 0, "rollback": false
+      },
       "current_config": {...knobs...}, # config in force AFTER this cycle
       "elapsed_s": 3.2,
       "host": "...", "timestamp": 1780000000.0
@@ -44,7 +48,11 @@ Record schema (``STATE_SCHEMA_VERSION = 2``)::
 Version 1 records (pre-fleet) had no ``collectors``/``releases``/``hosts``;
 :func:`upgrade_record` synthesizes them from the flat ``host``/``n_executed``
 fields, so old ``loop_state.jsonl`` files keep resuming and rendering under
-the v2 readers — fleet and single-host cycles share one schema.
+the current readers — fleet and single-host cycles share one schema.
+Version 3 adds the ``faults`` provenance block (retry / timeout / quarantine
+/ write-retry / corrupt-line / rejected-row counts plus the refit
+``rollback`` flag — see ``docs/robustness.md``); the v2 -> v3 upgrade
+synthesizes a zeroed block, so pre-hardening state files read as fault-free.
 
 ``LoopState`` dedups by cycle keeping the latest record, tolerating the
 torn-trailing-line artifacts of a killed writer AND of a writer caught
@@ -73,13 +81,37 @@ import threading
 import time
 from typing import Dict, List, Optional, Union
 
-__all__ = ["STATE_SCHEMA_VERSION", "LoopState", "FleetLog", "upgrade_record",
-           "read_complete_records"]
+__all__ = ["STATE_SCHEMA_VERSION", "ZERO_FAULTS", "LoopState", "FleetLog",
+           "upgrade_record", "read_complete_records"]
 
-STATE_SCHEMA_VERSION = 2
+STATE_SCHEMA_VERSION = 3
+
+# The v3 ``faults`` provenance block, all-clear.  Every cycle record carries
+# one; the v2 -> v3 upgrade synthesizes this for pre-hardening records.
+ZERO_FAULTS = {
+    "retried": 0,         # transient-failure retry attempts (collection)
+    "timeouts": 0,        # cases that overran the per-case deadline
+    "quarantined": 0,     # keys quarantined after repeated permanent failures
+    "write_retries": 0,   # durable-append recoveries (ENOSPC / torn write)
+    "corrupt_lines": 0,   # malformed shard lines skipped during merge
+    "rejected_rows": 0,   # rows the refit validation guard refused to ingest
+    "rollback": False,    # did this cycle roll the model back a generation
+}
 
 
-def read_complete_records(path: Union[str, pathlib.Path]) -> List[dict]:
+def _fault_plan():
+    """The active fault-injection plan, if the faults module is even loaded.
+
+    Checked lazily via sys.modules so this hot path never imports (or pays
+    for) the chaos machinery outside chaos runs."""
+    import sys as _sys
+
+    faults = _sys.modules.get("repro.service.faults")
+    return faults.active_plan() if faults is not None else None
+
+
+def read_complete_records(path: Union[str, pathlib.Path],
+                          counters: Optional[dict] = None) -> List[dict]:
     """JSONL records from ``path``, consuming only newline-TERMINATED lines.
 
     The readers of these logs (``--status``, the serving tier's ``/stats``)
@@ -89,7 +121,8 @@ def read_complete_records(path: Union[str, pathlib.Path]) -> List[dict]:
     ``\\n`` consumes exactly the records whose final newline has landed — a
     record is either fully visible or not yet there, never half-read.
     Malformed *complete* lines (foreign corruption) are skipped defensively,
-    like the campaign loader and ``FleetLog`` do."""
+    like the campaign loader and ``FleetLog`` do — pass a ``counters`` dict
+    to have their count accumulated in ``counters["corrupt_lines"]``."""
     path = pathlib.Path(path)
     try:
         raw = path.read_bytes()
@@ -105,6 +138,9 @@ def read_complete_records(path: Union[str, pathlib.Path]) -> List[dict]:
         try:
             records.append(json.loads(line))
         except json.JSONDecodeError:
+            if counters is not None:
+                counters["corrupt_lines"] = \
+                    counters.get("corrupt_lines", 0) + 1
             continue
     return records
 
@@ -114,7 +150,10 @@ def upgrade_record(record: dict) -> dict:
 
     v1 -> v2: synthesize the per-host provenance block (``collectors``,
     ``releases``, ``hosts``) from the flat single-host fields, so state files
-    written before the fleet subsystem keep working unmodified on disk."""
+    written before the fleet subsystem keep working unmodified on disk.
+
+    v2 -> v3: synthesize a zeroed ``faults`` block — a pre-hardening cycle
+    recorded no fault provenance, which reads as "none observed"."""
     if record.get("schema_version", 1) >= STATE_SCHEMA_VERSION:
         return record
     record = dict(record)
@@ -126,6 +165,7 @@ def upgrade_record(record: dict) -> dict:
         "n_failures": record.get("n_failures", 0),
         "releases": 0,
     }})
+    record.setdefault("faults", dict(ZERO_FAULTS))
     record["schema_version"] = STATE_SCHEMA_VERSION
     return record
 
@@ -135,6 +175,7 @@ class LoopState:
 
     def __init__(self, path: Union[str, pathlib.Path]):
         self.path = pathlib.Path(path)
+        self.corrupt_lines = 0  # malformed complete lines seen by last read
 
     def cycles(self) -> List[dict]:
         """Completed cycle records, deduplicated by cycle (latest wins),
@@ -142,11 +183,14 @@ class LoopState:
 
         Safe against a concurrently appending writer: only newline-terminated
         records are consumed (``read_complete_records``), so ``--status`` and
-        the serving tier's ``/stats`` can poll a live loop's state file."""
+        the serving tier's ``/stats`` can poll a live loop's state file.
+        Malformed lines are skipped and tallied in ``self.corrupt_lines``."""
+        counters: Dict[str, int] = {}
         latest: Dict[int, dict] = {}
-        for r in read_complete_records(self.path):
+        for r in read_complete_records(self.path, counters):
             if r.get("status") == "ok" and "cycle" in r:
                 latest[int(r["cycle"])] = upgrade_record(r)
+        self.corrupt_lines = counters.get("corrupt_lines", 0)
         return [latest[c] for c in sorted(latest)]
 
     def next_cycle(self) -> int:
@@ -162,11 +206,43 @@ class LoopState:
         return dict(done[-1]["current_config"]) if done else None
 
     def append(self, record: dict) -> None:
-        """Durably append one completed-cycle record."""
+        """Durably append one completed-cycle record.
+
+        Under an active chaos plan, a scheduled ``corrupt_line`` fault writes
+        a garbage line *before* the real record (loss-free injection: the
+        record itself always lands intact — what's being exercised is the
+        readers' skip-and-count path)."""
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._repair_tail()
+        plan = _fault_plan()
+        garbage = plan.corrupt_line(f"log:{self.path.name}") if plan else None
         with open(self.path, "a") as f:
+            if garbage is not None:
+                f.write(garbage + "\n")
             f.write(json.dumps(record) + "\n")
             f.flush()
+
+    def _repair_tail(self) -> None:
+        """Repair an un-terminated final line before appending — otherwise
+        the new record would glue onto it and both would read back as one
+        corrupt line.  A malformed tail (torn write) is truncated; a valid
+        one that only lost its newline is sealed.  Safe here because the
+        state file has exactly one writer (the loop/coordinator process)."""
+        try:
+            data = self.path.read_bytes()
+        except OSError:
+            return
+        if not data or data.endswith(b"\n"):
+            return
+        tail = data[data.rfind(b"\n") + 1:]
+        try:
+            json.loads(tail)
+        except ValueError:
+            with open(self.path, "rb+") as f:
+                f.truncate(data.rfind(b"\n") + 1)
+        else:
+            with open(self.path, "ab") as f:
+                f.write(b"\n")
 
 
 class FleetLog:
@@ -187,6 +263,7 @@ class FleetLog:
         self.path = pathlib.Path(path)
         self._lock = threading.Lock()
         self._offset = 0
+        self.corrupt_lines = 0  # malformed complete lines skipped so far
         self._parsed: List[dict] = []
         # (cycle, shard) -> newest heartbeat ts, maintained incrementally:
         # the coordinator asks per live shard every poll tick, and scanning
@@ -197,7 +274,11 @@ class FleetLog:
         record.setdefault("ts", time.time())
         record.setdefault("pid", os.getpid())
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        plan = _fault_plan()
+        garbage = plan.corrupt_line(f"log:{self.path.name}") if plan else None
         with open(self.path, "a") as f:
+            if garbage is not None:
+                f.write(garbage + "\n")
             f.write(json.dumps(record) + "\n")
             f.flush()
         return record
@@ -207,9 +288,11 @@ class FleetLog:
             size = os.path.getsize(self.path)
         except OSError:
             self._offset, self._parsed, self._last_hb = 0, [], {}
+            self.corrupt_lines = 0
             return
         if size < self._offset:  # truncated/replaced: start over
             self._offset, self._parsed, self._last_hb = 0, [], {}
+            self.corrupt_lines = 0
         if size == self._offset:
             return
         with open(self.path, "rb") as f:
@@ -225,7 +308,9 @@ class FleetLog:
             try:
                 record = json.loads(line)
             except json.JSONDecodeError:
-                continue  # foreign corruption; skip like the campaign loader
+                # foreign corruption; skip like the campaign loader, but tally
+                self.corrupt_lines += 1
+                continue
             self._parsed.append(record)
             if record.get("type") == "heartbeat":
                 key = (record.get("cycle"), record.get("shard"))

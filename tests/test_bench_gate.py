@@ -200,6 +200,39 @@ def test_gate_hard_fails_on_fleet_collector_failures(arts):
     assert any("collector failures" in m for m in gate.hard)
 
 
+def test_gate_hard_fails_on_nonzero_corrupt_lines(arts):
+    """A benchmark run that skipped corrupt records measured a different
+    workload — hard failure wherever the counter appears."""
+    committed, fresh = arts
+    art = _fleet_art()
+    art["runs"][0]["corrupt_lines"] = 3
+    _rewrite(fresh, "BENCH_fleet.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("corrupt_lines=3" in m and "fresh" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_on_quarantines_in_committed_artifact(arts):
+    committed, fresh = arts
+    art = _loop_art()
+    art["campaign_cycles"][0]["faults"] = {"quarantined": 1, "retried": 0}
+    _rewrite(committed, "BENCH_loop.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("quarantined=1" in m and "committed" in m for m in gate.hard)
+
+
+def test_gate_passes_on_zero_integrity_counters(arts):
+    """Zero-valued (or absent) integrity counters are clean runs."""
+    committed, fresh = arts
+    art = _fleet_art()
+    for run in art["runs"]:
+        run["corrupt_lines"] = 0
+        run["quarantined"] = 0
+    _rewrite(fresh, "BENCH_fleet.json", art)
+    _rewrite(committed, "BENCH_fleet.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+
+
 def test_gate_main_exit_codes(arts):
     committed, fresh = arts
     assert bench_gate.main(["--fresh", str(fresh), "--repo-root", str(committed)]) == 0

@@ -1,0 +1,419 @@
+"""Chaos suite: the collect→merge→refit→serve path under seeded fault
+injection (``repro.service.faults``).
+
+The load-bearing assertions mirror the robustness guarantees in
+``docs/robustness.md``:
+
+- **Chaos equivalence** — with the deterministic ``every=k`` schedule
+  (k >= 2), every injected transient fault is healed by one bounded retry /
+  durable-append recovery / reader skip, so the canonical merged dataset is
+  *byte-identical* to a fault-free run, for both a plain campaign and a
+  2-collector fleet.
+- **Accounting** — every injected fault shows up in provenance: retry counts
+  on records, write-retry counts in shard_done records, corrupt-line counts
+  at the readers; the plan's ledger reconciles exactly.
+- **Containment** — deadlines turn runaway cases into recorded timeouts,
+  repeated non-transient failures quarantine a key, poisoned rows are
+  rejected before refit, a bad refit rolls back to the previous model, and
+  the serving tier sheds (503) or deadlines (504) instead of hanging; chaos
+  never surfaces to clients as a 500.
+"""
+
+import json
+import queue
+import threading
+import time
+
+import pytest
+
+from repro.core.autotune import ConfigSpace, OnlineAutotuner
+from repro.core.features import TARGET_NAME
+from repro.data.campaign import case_index, load_records, load_records_ex, \
+    merge_files, run_campaign
+from repro.data.registry import Campaign, matrix_cases
+from repro.service import faults
+from repro.service.faults import FaultPlan, FaultSpec, default_plan
+from repro.service.fleet import FleetConfig, FleetCoordinator, run_collector, \
+    synthetic_executor
+from repro.service.loop import ContinuousTuningLoop, LoopConfig
+from repro.service.serve import MicroBatcher, RecommendationService, \
+    ServeConfig, _Pending, synthetic_observations
+from repro.service.state import FleetLog, LoopState
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.deactivate()
+
+
+def _campaign():
+    return Campaign(
+        "chaos_fake", "chaos test campaign",
+        lambda fast=False: tuple(matrix_cases(
+            "pipeline", id_prefix="ch", backend=["tmpfs"], format=["raw"],
+            batch_size=[16, 32], num_workers=[0, 2, 4],
+        )),
+    )
+
+
+def _space():
+    return ConfigSpace(batch_size=(16, 32), num_workers=(0, 2, 4),
+                       block_kb=(64,), n_threads=(1,), prefetch_depth=(1,))
+
+
+def _count_bad_lines(path):
+    if not path.exists():
+        return 0
+    n = 0
+    for line in path.read_text().splitlines():
+        try:
+            json.loads(line)
+        except ValueError:
+            n += 1
+    return n
+
+
+# ------------------------------------------------- campaign-level healing
+
+def test_campaign_retries_heal_injected_io_errors(tmp_path):
+    """Every injected transient I/O error is retried away: no failures, the
+    retry count reconciles with the plan's ledger, and the canonical dataset
+    matches a fault-free run byte-for-byte."""
+    camp = _campaign()
+    clean = tmp_path / "clean.jsonl"
+    run_campaign(camp, clean, seed=5, executor=synthetic_executor)
+
+    plan = faults.activate(FaultPlan(21, [
+        FaultSpec("io_error", site="case:", every=3)]), export_env=False)
+    chaos = tmp_path / "chaos.jsonl"
+    result = run_campaign(camp, chaos, seed=5, executor=synthetic_executor,
+                          max_retries=2)
+    faults.deactivate()
+
+    assert result.failures == []
+    assert plan.total_injected("io_error") > 0
+    assert result.retried == plan.total_injected("io_error")
+    merge_files([clean], tmp_path / "m_clean.jsonl", index=case_index(camp))
+    merge_files([chaos], tmp_path / "m_chaos.jsonl", index=case_index(camp))
+    assert (tmp_path / "m_clean.jsonl").read_bytes() == \
+           (tmp_path / "m_chaos.jsonl").read_bytes()
+
+
+def test_campaign_durable_append_heals_enospc_and_torn_writes(tmp_path):
+    """ENOSPC and torn writes on the result file are recovered in place:
+    the file stays fully parseable, holds every record exactly once, and
+    each injected write fault is one counted recovery."""
+    plan = faults.activate(FaultPlan(33, [
+        FaultSpec("enospc", site="append:", every=2),
+        FaultSpec("torn_write", site="append:", every=3),
+    ]), export_env=False)
+    out = tmp_path / "torn.jsonl"
+    result = run_campaign(_campaign(), out, seed=1,
+                          executor=synthetic_executor)
+    faults.deactivate()
+
+    injected = plan.total_injected("enospc") + plan.total_injected("torn_write")
+    assert injected > 0
+    assert result.write_retries == injected
+    records, n_corrupt, torn_tail = load_records_ex(out)
+    assert n_corrupt == 0 and not torn_tail
+    assert len(records) == 6 == len({r["case_id"] for r in records})
+    assert all(r["status"] == "ok" for r in records)
+
+
+def test_campaign_deadline_then_quarantine(tmp_path):
+    """A case overrunning its deadline is recorded as a timeout; after
+    ``quarantine_after`` non-transient failures its key is quarantined and
+    every later resume skips it without running it again."""
+    camp = _campaign()
+    out = tmp_path / "slow.jsonl"
+
+    def slow(case, ctx, seed):
+        if case.id == "ch-tmpfs-raw-b16-w0":
+            time.sleep(0.5)
+        return synthetic_executor(case, ctx, seed)
+
+    kw = dict(executor=slow, deadline_s=0.05, max_retries=2,
+              quarantine_after=2)
+    r1 = run_campaign(camp, out, **kw)
+    assert r1.n_timeouts == 1 and len(r1.failures) == 1
+    recs = load_records(out)
+    bad = [r for r in recs if r["status"] == "error"]
+    assert len(bad) == 1 and bad[0]["error"]["category"] == "timeout"
+
+    r2 = run_campaign(camp, out, **kw)          # second timeout -> count 2
+    assert r2.n_timeouts == 1 and r2.skipped == 5
+    r3 = run_campaign(camp, out, **kw)          # count 2 -> quarantined
+    assert r3.n_quarantined == 1 and r3.n_executed == 0
+    quar = [r for r in load_records(out) if r["status"] == "quarantined"]
+    assert len(quar) == 1 and quar[0]["case_id"] == "ch-tmpfs-raw-b16-w0"
+
+    r4 = run_campaign(camp, out, **kw)          # terminal: plain resume skip
+    assert r4.n_executed == 0 and r4.n_quarantined == 0 and r4.skipped == 6
+
+
+# ------------------------------------------------- fleet chaos equivalence
+
+def _fleet_cfg(out_dir, **kw):
+    kw.setdefault("campaign", _campaign())
+    kw.setdefault("cycles", 2)
+    kw.setdefault("space", _space())
+    kw.setdefault("min_observations", 6)
+    kw.setdefault("refit_every", 6)
+    kw.setdefault("poll_interval_s", 0.01)
+    kw.setdefault("executor_kind", "synthetic")
+    return FleetConfig(out_dir=out_dir, collectors=2, **kw)
+
+
+class _Handle:
+    def __init__(self, rc=0):
+        self._rc = rc
+        self.pid = 0
+
+    def poll(self):
+        return self._rc
+
+    def kill(self):
+        self._rc = -9
+
+
+def _inline_spawn(cfg):
+    def spawn(shard, cycle, attempt):
+        run_collector(cfg, cycle, shard, attempt=attempt)
+        return _Handle(0)
+    return spawn
+
+
+def _decision_view(record):
+    return {k: record[k] for k in
+            ("cycle", "n_observations", "refit", "current_config", "top",
+             "decision")}
+
+
+def test_fleet_chaos_merged_byte_identical_and_accounted(tmp_path):
+    """The tentpole acceptance check: a 2-collector fleet run under the full
+    deterministic chaos mix produces a merged.jsonl byte-identical to the
+    fault-free run, takes the same decisions, and accounts for every
+    injected fault in provenance counters."""
+    clean_cfg = _fleet_cfg(tmp_path / "clean")
+    clean_records = FleetCoordinator(
+        clean_cfg, spawn=_inline_spawn(clean_cfg)).run()
+    clean_bytes = (clean_cfg.out_dir / "merged.jsonl").read_bytes()
+
+    plan = faults.activate(default_plan(123, every=3), export_env=False)
+    chaos_cfg = _fleet_cfg(tmp_path / "chaos")
+    chaos_records = FleetCoordinator(
+        chaos_cfg, spawn=_inline_spawn(chaos_cfg)).run()
+    faults.deactivate()
+
+    # equivalence: same dataset bytes, same decisions on top of it
+    assert (chaos_cfg.out_dir / "merged.jsonl").read_bytes() == clean_bytes
+    assert len(chaos_records) == len(clean_records) == 2
+    for a, b in zip(clean_records, chaos_records):
+        assert _decision_view(a) == _decision_view(b)
+
+    # the plan actually fired, and nothing it injected went unaccounted
+    rep = plan.report()
+    assert rep["total"] > 0
+    totals = {k: 0 for k in ("retried", "timeouts", "quarantined",
+                             "write_retries")}
+    for r in chaos_records:
+        for k in totals:
+            totals[k] += int(r["faults"].get(k, 0))
+    assert totals["retried"] == plan.total_injected("io_error")
+    assert totals["write_retries"] == (plan.total_injected("enospc")
+                                       + plan.total_injected("torn_write"))
+    assert totals["timeouts"] == 0 and totals["quarantined"] == 0
+    n_bad = (_count_bad_lines(chaos_cfg.out_dir / "loop_state.jsonl")
+             + _count_bad_lines(chaos_cfg.out_dir / "fleet_state.jsonl"))
+    assert n_bad == plan.total_injected("corrupt_line") > 0
+
+    # the readers skip-and-count exactly those lines, and resume still works
+    state = LoopState(chaos_cfg.out_dir / "loop_state.jsonl")
+    cycles = state.cycles()
+    assert len(cycles) == 2
+    assert state.corrupt_lines == _count_bad_lines(state.path)
+    log = FleetLog(chaos_cfg.out_dir / "fleet_state.jsonl")
+    assert log.records(type="shard_done")
+    assert log.corrupt_lines == _count_bad_lines(log.path)
+
+
+def test_loop_refit_guard_rejects_poisoned_rows(tmp_path):
+    """A poisoned (non-finite target) observation is rejected before it can
+    reach the model: the loop completes, counts the rejection in the cycle's
+    faults block, and still fits on the remaining clean rows."""
+    def poisoned(case, ctx, seed):
+        row = synthetic_executor(case, ctx, seed)
+        if case.id == "ch-tmpfs-raw-b32-w4":
+            row[TARGET_NAME] = float("nan")
+        return row
+
+    cfg = LoopConfig(out_dir=tmp_path / "loop", campaign=_campaign(),
+                     cycles=2, space=_space(), min_observations=4,
+                     refit_every=4)
+    loop = ContinuousTuningLoop(cfg, executor=poisoned)
+    records = loop.run()
+    assert len(records) == 2
+    assert records[0]["faults"]["rejected_rows"] == 1
+    assert records[1]["faults"]["rejected_rows"] == 1  # re-poisoned per cycle
+    assert loop.tuner.fitted
+    assert records[-1]["n_observations"] == 10  # 12 rows - 2 rejected
+
+
+def test_autotuner_rollback_restores_previous_generation():
+    """``rollback()`` republishes the previous model under a *new*
+    generation (cache invalidation must fire), flags the tuner degraded, and
+    a later clean refit closes the circuit."""
+    space = _space()
+    tuner = OnlineAutotuner(space=space, min_observations=6, refit_every=6)
+    tuner.seed_observations(synthetic_observations(space, n_repeats=1))
+    assert tuner.maybe_refit() and tuner.generation == 1
+    assert not tuner.rollback()  # nothing to roll back to yet
+
+    tuner.seed_observations(synthetic_observations(space, n_repeats=1))
+    assert tuner.maybe_refit() and tuner.generation == 2
+    assert tuner.rollback()
+    assert tuner.generation == 3      # forward, never reused
+    assert tuner.degraded and tuner.rollbacks == 1
+    assert not tuner.rollback()       # the stash is single-depth
+
+    tuner.seed_observations(synthetic_observations(space, n_repeats=1))
+    assert tuner.maybe_refit() and tuner.generation == 4
+    assert not tuner.degraded         # clean refit closes the circuit
+
+
+# ------------------------------------------------- serving under pressure
+
+def _frozen_tuner():
+    space = ConfigSpace(batch_size=(16, 32), num_workers=(0, 2),
+                        block_kb=(64,), n_threads=(1,), prefetch_depth=(1,))
+    tuner = OnlineAutotuner(space=space, min_observations=4, refit_every=4)
+    tuner.seed_observations(synthetic_observations(space, n_repeats=1))
+    assert tuner.maybe_refit()
+    return tuner
+
+
+def test_microbatcher_bounded_queue_sheds():
+    """Past ``max_queue`` queued requests, ``submit`` raises ``queue.Full``
+    instead of growing the backlog — the service turns that into a 503."""
+    gate = threading.Event()
+    mb = MicroBatcher(lambda batch: gate.wait(timeout=10), max_batch=1,
+                      max_queue=2)
+    first = _Pending("predict", ())
+    assert mb.submit(first)
+    deadline = time.monotonic() + 5
+    while mb.depth > 0 and time.monotonic() < deadline:
+        time.sleep(0.005)  # wait for the worker to take it (and block)
+    assert mb.submit(_Pending("predict", ()))
+    assert mb.submit(_Pending("predict", ()))
+    with pytest.raises(queue.Full):
+        mb.submit(_Pending("predict", ()))
+    gate.set()
+    mb.stop()
+    assert not mb.submit(_Pending("predict", ()))  # closed, not full
+
+
+def test_serve_deadline_budget_times_out_stuck_scoring(tmp_path):
+    """A request whose scoring cannot finish inside the deadline budget gets
+    a 504 instead of hanging the client forever."""
+    svc = RecommendationService(_frozen_tuner(),
+                                ServeConfig(deadline_ms=150.0))
+    svc.start()
+    try:
+        with svc._score_lock:  # wedge the scorer; the batcher blocks on it
+            status, body = svc.handle(
+                "POST", "/predict", b'{"context": {}, "config": {}}')
+        assert status == 504
+        assert "deadline" in json.loads(body)["error"]
+        status, body = svc.handle("GET", "/stats", b"")
+        assert json.loads(body)["admission"]["deadline_timeouts"] == 1
+    finally:
+        svc.shutdown()
+
+
+def test_healthz_degrades_on_loop_death_and_rollback():
+    svc = RecommendationService(_frozen_tuner(), ServeConfig())
+    status, body = svc.handle("GET", "/healthz", b"")
+    h = json.loads(body)
+    assert status == 200 and h["status"] == "ok"
+    assert h["circuit"]["loop_alive"] is None
+
+    # embedded loop thread died on an error -> degraded (still HTTP 200:
+    # the process serves; its freshness pipeline is what broke)
+    dead = threading.Thread(target=lambda: None)
+    dead.start()
+    dead.join()
+    svc._loop_thread = dead
+    svc.loop_error = "RuntimeError: collect exploded"
+    status, body = svc.handle("GET", "/healthz", b"")
+    h = json.loads(body)
+    assert status == 200 and h["status"] == "degraded"
+    assert h["circuit"]["loop_alive"] is False
+    assert "exploded" in h["circuit"]["loop_error"]
+
+    svc._loop_thread = None
+    svc.loop_error = None
+    svc.tuner.seed_observations(
+        synthetic_observations(svc.tuner.space, n_repeats=1))
+    svc.tuner.maybe_refit()
+    assert svc.tuner.rollback()
+    status, body = svc.handle("GET", "/healthz", b"")
+    h = json.loads(body)
+    assert status == 200 and h["status"] == "degraded"
+    assert h["circuit"]["model_degraded"] and h["circuit"]["rollbacks"] == 1
+
+
+def test_serve_storm_under_chaos_no_hangs_no_500s(tmp_path):
+    """Clients hammering the service while the embedded loop collects under
+    chaos see only complete responses: every status is 200 or 503 (unfitted
+    early on), every 200 body is single-generation, nothing hangs, and the
+    loop itself survives the injected faults."""
+    faults.activate(default_plan(31, every=3), export_env=False)
+    cfg = LoopConfig(out_dir=tmp_path / "loop", campaign=_campaign(),
+                     cycles=2, space=_space(), min_observations=6,
+                     refit_every=6)
+    loop = ContinuousTuningLoop(cfg, executor=synthetic_executor)
+    svc = RecommendationService(loop.tuner, ServeConfig(), loop=loop)
+    svc.start()
+    statuses, bad_bodies = [], []
+    lock = threading.Lock()
+
+    def client(i):
+        payloads = [
+            ("POST", "/predict", b'{"context": {"file_size_mb": 8},'
+                                 b' "config": {"batch_size": 16}}'),
+            ("POST", "/recommend", b'{"context": {}, "top_k": 2}'),
+            ("GET", "/healthz", b""),
+            ("GET", "/stats", b""),
+        ]
+        for j in range(6):
+            method, path, body = payloads[(i + j) % len(payloads)]
+            status, resp = svc.handle(method, path, body)
+            obj = json.loads(resp)
+            with lock:
+                statuses.append(status)
+                if status == 200 and "model_generation" in obj and \
+                        not isinstance(obj["model_generation"], int):
+                    bad_bodies.append(obj)
+            time.sleep(0.01)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive()  # no hangs
+        deadline = time.monotonic() + 120
+        while svc._loop_thread.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert not svc._loop_thread.is_alive()
+        assert svc.loop_error is None  # the loop survived the chaos
+    finally:
+        svc.shutdown()
+        faults.deactivate()
+    assert set(statuses) <= {200, 503}  # bounded 503s OK; never 500/504
+    assert not bad_bodies
+    status, body = svc.handle("GET", "/healthz", b"")
+    assert json.loads(body)["circuit"]["loop_error"] is None

@@ -1,0 +1,204 @@
+"""Unit tests for the deterministic fault-injection layer
+(``repro.service.faults``): scheduling determinism, per-stream independence,
+the site hooks' failure semantics, plan serialization + env hand-off, and
+process-global activation into the data layer."""
+
+import json
+import os
+
+import pytest
+
+from repro.data import campaign, storage
+from repro.service import faults
+from repro.service.faults import (
+    ENV_VAR,
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    default_plan,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test leaves the process chaos-free (hooks + env var)."""
+    yield
+    faults.deactivate()
+    assert os.environ.get(ENV_VAR) is None
+
+
+# ------------------------------------------------------------- scheduling
+
+def test_every_schedule_fires_each_kth_check():
+    plan = FaultPlan(7, [FaultSpec("io_error", site="case:", every=3)])
+    fired = []
+    for i in range(12):
+        try:
+            plan.on_case("case:c0")
+            fired.append(False)
+        except FaultInjected:
+            fired.append(True)
+    assert fired == [False, False, True] * 4
+    assert plan.total_injected("io_error") == 4
+
+
+def test_every_schedule_never_fires_twice_in_a_row():
+    """The healing guarantee: with every >= 2 a retried attempt (the very
+    next check of the stream) cannot hit the same injected fault again."""
+    plan = FaultPlan(3, [FaultSpec("io_error", site="case:", every=2)])
+    prev = False
+    for _ in range(50):
+        try:
+            plan.on_case("case:x")
+            now = False
+        except FaultInjected:
+            now = True
+        assert not (prev and now)
+        prev = now
+
+
+def test_rate_schedule_is_seed_deterministic():
+    def draw(seed):
+        plan = FaultPlan(seed, [FaultSpec("io_error", site="case:", rate=0.5)])
+        out = []
+        for _ in range(64):
+            try:
+                plan.on_case("case:any")
+                out.append(0)
+            except FaultInjected:
+                out.append(1)
+        return out
+
+    a, b, c = draw(11), draw(11), draw(12)
+    assert a == b
+    assert a != c          # astronomically unlikely to collide over 64 draws
+    assert 0 < sum(a) < 64  # rate=0.5 actually fires sometimes, not always
+
+
+def test_streams_are_independent_per_site_class():
+    """Checks against one site class must not advance another class's
+    schedule — a chatty storage backend cannot starve or accelerate the
+    campaign-case stream."""
+    spec = [FaultSpec("io_error", every=3)]  # site="" matches everything
+    lone = FaultPlan(5, list(spec))
+    mixed = FaultPlan(5, list(spec))
+    lone_fires = []
+    for _ in range(9):
+        try:
+            lone.on_case("case:a")
+            lone_fires.append(False)
+        except FaultInjected:
+            lone_fires.append(True)
+    mixed_fires = []
+    for _ in range(9):
+        try:  # interleaved other-class checks (fire on their own stream)
+            mixed.on_storage("read:file", 4096)
+        except FaultInjected:
+            pass
+        try:
+            mixed.on_case("case:a")
+            mixed_fires.append(False)
+        except FaultInjected:
+            mixed_fires.append(True)
+    assert mixed_fires == lone_fires
+
+
+def test_max_injections_budget():
+    plan = FaultPlan(1, [FaultSpec("io_error", site="case:", every=2,
+                                   max_injections=2)])
+    n = 0
+    for _ in range(20):
+        try:
+            plan.on_case("case:z")
+        except FaultInjected:
+            n += 1
+    assert n == 2
+    assert plan.total_injected() == 2
+
+
+# ------------------------------------------------------------- site hooks
+
+def test_check_append_enospc_and_torn_offsets():
+    plan = FaultPlan(9, [FaultSpec("enospc", site="append:", every=2)])
+    assert plan.check_append("append:f.jsonl") is None
+    with pytest.raises(OSError) as ei:
+        plan.check_append("append:f.jsonl")
+    assert "ENOSPC" in str(ei.value) or ei.value.errno is not None
+
+    torn_plan = FaultPlan(9, [FaultSpec("torn_write", site="append:", every=2)])
+    assert torn_plan.check_append("append:f.jsonl") is None
+    torn = torn_plan.check_append("append:f.jsonl")
+    assert isinstance(torn, int) and 1 <= torn <= 16
+
+
+def test_corrupt_line_is_not_valid_json():
+    plan = FaultPlan(2, [FaultSpec("corrupt_line", site="log:", every=2)])
+    assert plan.corrupt_line("log:state.jsonl") is None
+    garbage = plan.corrupt_line("log:state.jsonl")
+    assert garbage is not None
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(garbage)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("not_a_kind", every=2)
+    with pytest.raises(ValueError):
+        FaultSpec("io_error")  # neither every nor rate
+    with pytest.raises(ValueError):
+        FaultSpec("io_error", every=2, rate=0.5)  # both
+    with pytest.raises(ValueError):
+        FaultSpec("io_error", every=1)  # a retry could re-hit it
+    FaultSpec("latency", every=1)  # latency never needs the healing bound
+
+
+# ------------------------------------------------- serialization + env
+
+def test_plan_round_trips_through_json_and_env():
+    plan = default_plan(42, every=3)
+    clone = FaultPlan.from_json(plan.to_json())
+    assert clone.seed == plan.seed
+    assert clone.specs == plan.specs
+
+    faults.activate(plan)
+    assert os.environ.get(ENV_VAR)
+    faults.deactivate()
+    assert faults.active_plan() is None
+
+    os.environ[ENV_VAR] = plan.to_json()
+    inherited = faults.activate_from_env()
+    assert inherited is not None and inherited.specs == plan.specs
+    assert faults.active_plan() is inherited
+
+
+def test_activate_from_env_without_export_is_noop():
+    os.environ.pop(ENV_VAR, None)
+    assert faults.activate_from_env() is None
+    assert faults.active_plan() is None
+
+
+def test_activation_installs_and_removes_data_layer_hooks():
+    assert campaign._FAULT_HOOK is None
+    assert storage._FAULT_HOOK is None
+    plan = faults.activate(default_plan(1, every=5))
+    assert campaign._FAULT_HOOK is plan
+    assert storage._FAULT_HOOK is not None
+    faults.deactivate()
+    assert campaign._FAULT_HOOK is None
+    assert storage._FAULT_HOOK is None
+
+
+def test_report_ledger_counts_per_kind_and_site():
+    plan = FaultPlan(4, [FaultSpec("io_error", site="case:", every=2),
+                         FaultSpec("corrupt_line", site="log:", every=2)])
+    for _ in range(4):
+        try:
+            plan.on_case("case:a")
+        except FaultInjected:
+            pass
+        plan.corrupt_line("log:s.jsonl")
+    rep = plan.report()
+    assert rep["seed"] == 4
+    assert rep["by_kind"] == {"corrupt_line": 2, "io_error": 2}
+    assert rep["total"] == 4
+    assert rep["by_site"]["io_error@case:a"] == 2

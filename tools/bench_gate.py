@@ -16,7 +16,11 @@ Hard failures, independent of any tolerance:
 
 - a committed key missing from the fresh run (a benchmark silently dropped),
 - ``identical_trees: false`` anywhere (the engines diverged — correctness),
-- fleet collector failures or non-finite/zero timings in the fresh run.
+- fleet collector failures or non-finite/zero timings in the fresh run,
+- any nonzero ``corrupt_lines`` / ``quarantined`` / ``n_quarantined``
+  counter anywhere in an artifact (committed or fresh): benchmark numbers
+  must come from clean data — a run that silently skipped corrupt records
+  or quarantined cases measured a different workload.
 
 Usage (CI runs this right after ``make bench-fast``, which leaves the fresh
 artifacts in ``/tmp/repro_io/bench_fast``):
@@ -64,6 +68,10 @@ EXPECTED_SERVE_CLIENTS = (1, 8, 32)
 # 32 concurrent clients, micro-batched scoring must deliver >= 2x the QPS of
 # the unbatched baseline on at least one endpoint (and never lose on any).
 MIN_COMMITTED_SERVE_SPEEDUP_C32 = 2.0
+# Data-integrity counters: nonzero anywhere in an artifact is a hard failure
+# (the run measured corrupt/quarantined data); absent keys pass (artifacts
+# recorded before the counters existed).
+INTEGRITY_KEYS = ("corrupt_lines", "quarantined", "n_quarantined")
 
 
 class Gate:
@@ -111,6 +119,29 @@ class Gate:
             elif rel < lo:
                 # faster-than-baseline outliers are informational only
                 pass
+
+    def check_integrity(self, name: str, art: object, side: str) -> None:
+        """Recursive scan for nonzero corruption/quarantine counters.
+
+        Any ``corrupt_lines``/``quarantined``/``n_quarantined`` value != 0,
+        at any nesting depth, is a hard failure at any tolerance; artifacts
+        that predate the counters simply don't have the keys and pass."""
+        def walk(node: object, path: str) -> None:
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    p = f"{path}.{k}" if path else str(k)
+                    if (k in INTEGRITY_KEYS and isinstance(v, (int, float))
+                            and v):
+                        self.hard_fail(
+                            f"{name}: {side} artifact reports {p}={v} — "
+                            f"benchmark ran over corrupt/quarantined data"
+                        )
+                    else:
+                        walk(v, p)
+            elif isinstance(node, list):
+                for i, v in enumerate(node):
+                    walk(v, f"{path}[{i}]")
+        walk(art, "")
 
     # -- per-artifact schemas -------------------------------------------
     def check_fit(self, fresh: dict, committed: dict) -> None:
@@ -309,6 +340,8 @@ def run_gate(
         except (OSError, json.JSONDecodeError) as e:
             gate.hard_fail(f"{name}: unreadable artifact ({e})")
             continue
+        gate.check_integrity(name, committed, "committed")
+        gate.check_integrity(name, fresh, "fresh")
         checkers[name](fresh, committed)
     return gate
 
