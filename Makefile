@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_FAST_DIR ?= /tmp/repro_io/bench_fast
 BENCH_GATE_FLAGS ?=
 
-.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke chaos-smoke docs-check dev-deps
+.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke prefetch-smoke chaos-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
@@ -36,6 +36,11 @@ fleet-smoke:  ## 2-collector fleet, synthetic dry-run rows, then --status
 serve-smoke:  ## recommendation service: in-process server, all endpoints probed
 	$(PYTHON) -m repro.service.serve --smoke
 	$(PYTHON) -m repro.service.serve --smoke --no-batch --no-cache
+
+prefetch-smoke:  ## prefetch campaign (fast) + per-policy stall comparison bench
+	$(PYTHON) -m repro.data.campaign run --campaign prefetch --fast \
+	    --out /tmp/repro_io/prefetch_smoke/prefetch.jsonl --force
+	$(PYTHON) -m benchmarks.run --fast --only pipeline
 
 chaos-smoke:  ## chaos-equivalence: fleet under seeded fault injection vs clean run, merged.jsonl must be byte-identical
 	$(PYTHON) -m repro.service.fleet --collectors 2 --executor synthetic \

@@ -1,0 +1,96 @@
+"""Prefetch-policy pipeline benchmark: stall time vs. delivered throughput.
+
+Runs the token pipeline on the calibrated network/object-store simulators
+(the regimes where prefetching pays) with each ``prefetch_policy`` —
+``off`` / ``depth`` / ``clairvoyant`` — at 1 and 4 workers, and reports the
+measure-window stall time (summed ``data_wait`` seconds) and delivered MB/s
+per case.  The artifact's headline number is the clairvoyant-vs-depth stall
+reduction per (backend, workers) point: the schedule-driven prefetcher reads
+the *known* epoch order ahead, so stalls should collapse rather than merely
+overlap.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only pipeline``.  The
+full run writes ``BENCH_pipeline.json`` at the repo root so the stall
+reduction is tracked across PRs (``tools/bench_gate.py`` enforces a floor on
+the committed claim); ``--fast`` keeps it CI-sized (network_sim, 1 worker).
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import List, Tuple
+
+from ._util import emit_artifact
+
+Row = Tuple[str, float, str]
+
+ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
+
+POLICIES = ("off", "depth", "clairvoyant")
+
+
+def bench_pipeline(fast: bool, artifact_dir=None) -> List[Row]:
+    from repro.core.features import TARGET_NAME
+    from repro.data.campaign import RunContext, run_pipeline_case
+    from repro.data.storage import BACKENDS
+
+    rows: List[Row] = []
+    art = {
+        "schema": 1,
+        "metric": "measure-window stall seconds (data_wait) and delivered "
+                  "MB/s per prefetch policy",
+        "cases": [],
+        "stall_reduction": {},  # clairvoyant vs depth, per backend.wN
+    }
+    backends = ("network_sim",) if fast else ("network_sim", "object_sim")
+    worker_counts = (1,) if fast else (1, 4)
+    n_records = 192 if fast else 512
+    probe_steps, measure_steps = (1, 4) if fast else (2, 8)
+
+    ctx = RunContext()
+    stalls = {}
+    for bname in backends:
+        backend = BACKENDS[bname]
+        manifest = ctx.manifest(backend, "packed", n_records, 64, 0)
+        for w in worker_counts:
+            for policy in POLICIES:
+                r = run_pipeline_case(
+                    backend, manifest, "packed", batch=32, workers=w,
+                    seq_len=64, compute_s=0.002, probe_steps=probe_steps,
+                    measure_steps=measure_steps, block_kb=16,
+                    prefetch_policy=policy, lookahead_batches=8,
+                    cache_budget_mb=8.0, access="shuffle",
+                )
+                key = f"{bname}.w{w}.{policy}"
+                stall = float(r["data_wait_s"])
+                mbs = float(r[TARGET_NAME])
+                hit = float(r.get("prefetch_hit_ratio", 0.0))
+                stalls[(bname, w, policy)] = stall
+                art["cases"].append({
+                    "key": key, "backend": bname, "workers": w,
+                    "policy": policy, "stall_s": round(stall, 6),
+                    "delivered_mb_s": round(mbs, 3),
+                    "hit_ratio": round(hit, 4),
+                })
+                rows.append((
+                    f"pipeline_{key}", stall * 1e6,
+                    f"delivered={mbs:.1f}MB/s hit={hit:.2f}",
+                ))
+    # a fully-hidden stall still yields a finite ratio (floor at 0.1ms)
+    floor = 1e-4
+    for bname in backends:
+        for w in worker_counts:
+            red = (stalls[(bname, w, "depth")]
+                   / max(stalls[(bname, w, "clairvoyant")], floor))
+            art["stall_reduction"][f"{bname}.w{w}"] = round(red, 2)
+    art["max_stall_reduction"] = max(art["stall_reduction"].values())
+    rows.append((
+        "pipeline_stall_reduction", 0.0,
+        f"clairvoyant_vs_depth_max={art['max_stall_reduction']}x",
+    ))
+
+    row = emit_artifact(art, "BENCH_pipeline.json", fast, artifact_dir,
+                        ARTIFACT, "pipeline_artifact")
+    if row:
+        rows.append(row)
+    return rows

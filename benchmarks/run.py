@@ -4,7 +4,8 @@ roofline table. Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--only GROUP]
        [--artifact-dir DIR]
 
-``--artifact-dir`` makes the artifact-writing groups (fit/loop/fleet/serve) emit
+``--artifact-dir`` makes the artifact-writing groups (fit/loop/fleet/serve/
+pipeline) emit
 their CI-sized JSON artifacts there even in ``--fast`` mode — the input of
 the bench regression gate (``tools/bench_gate.py``).  Any group that raises
 marks the whole run failed (non-zero exit), so CI cannot green-light a run
@@ -34,6 +35,7 @@ def main(argv=None) -> None:
     from . import fleet_bench
     from . import loop_bench
     from . import paper_experiments as pe
+    from . import pipeline_bench
     from . import roofline
     from . import serve_bench
 
@@ -41,6 +43,7 @@ def main(argv=None) -> None:
         "fit": fit_bench.bench_fit,
         "fleet": fleet_bench.bench_fleet,
         "loop": loop_bench.bench_loop,
+        "pipeline": pipeline_bench.bench_pipeline,
         "serve": serve_bench.bench_serve,
         "dataset": pe.bench_dataset,
         "campaign": pe.bench_campaign,

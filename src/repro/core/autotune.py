@@ -30,7 +30,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .features import FeatureSpec
+from .features import AUTOTUNE_FEATURE_NAMES, FeatureSpec
 from .predictor import IOPerformancePredictor, PredictorSnapshot
 
 __all__ = [
@@ -41,7 +41,8 @@ __all__ = [
     "DEFAULT_SPACE",
 ]
 
-KNOB_NAMES = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth")
+KNOB_NAMES = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth",
+              "prefetch_policy", "lookahead_batches", "cache_budget_mb")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,12 @@ class ConfigSpace:
     block_kb: Sequence[int] = (4, 16, 64, 256, 1024, 4096)
     n_threads: Sequence[int] = (1, 2, 4, 8)
     prefetch_depth: Sequence[int] = (1, 2, 4)  # beyond-paper knob
+    # prefetch-policy knobs (data/prefetch.py) — numeric policy codes
+    # (0=off, 1=depth, 2=clairvoyant); single-valued by default so the
+    # paper's 1,800-config grid is unchanged unless a campaign varies them
+    prefetch_policy: Sequence[int] = (1,)
+    lookahead_batches: Sequence[int] = (8,)
+    cache_budget_mb: Sequence[float] = (64.0,)
 
     def __post_init__(self):
         for k in KNOB_NAMES:  # normalize to tuples (hashable, immutable)
@@ -217,7 +224,9 @@ class OnlineAutotuner:
         drift_threshold: float = 0.5,  # force refit if new-data median rel. error exceeds
         engine: Optional[str] = None,  # tree engine for refits (None = default)
     ):
-        self.spec = spec or FeatureSpec()
+        # default online view: paper features + prefetch knobs, so the
+        # tuner can rank/learn prefetch_policy/lookahead/cache budget
+        self.spec = spec or FeatureSpec(names=AUTOTUNE_FEATURE_NAMES)
         self.space = space
         self.refit_every = refit_every
         self.min_observations = min_observations

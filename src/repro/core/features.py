@@ -15,6 +15,7 @@ import numpy as np
 
 __all__ = [
     "FEATURE_NAMES",
+    "AUTOTUNE_FEATURE_NAMES",
     "FeatureSpec",
     "log1p_transform",
     "expm1_inverse",
@@ -38,6 +39,16 @@ FEATURE_NAMES = (
 )
 
 TARGET_NAME = "target_throughput"
+
+# Beyond-paper prefetch knobs (``data/prefetch.py``), appended for the online
+# tuner's feature view so it can rank/learn them; the offline predictor keeps
+# the paper's 11-feature spec above.  ``prefetch_policy`` is the numeric
+# policy code (0=off, 1=depth, 2=clairvoyant).
+AUTOTUNE_FEATURE_NAMES = FEATURE_NAMES + (
+    "prefetch_policy",
+    "lookahead_batches",
+    "cache_budget_mb",
+)
 
 
 @dataclasses.dataclass(frozen=True)

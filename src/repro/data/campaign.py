@@ -211,16 +211,26 @@ def run_pipeline_case(
     measure_steps: int = 6,
     prefetch_depth: int = 2,
     block_kb: int = 64,
+    prefetch_policy: str = "depth",
+    lookahead_batches: int = 8,
+    cache_budget_mb: float = 64.0,
+    access: str = "shuffle",
+    n_hosts: int = 1,
 ) -> dict:
     """Run one pipeline benchmark: probe window feeds the upstream features,
     the measure window feeds the downstream target (paper §4.3)."""
+    from .prefetch import policy_code
     from .telemetry import StepTelemetry
 
     reader = open_dataset(backend, manifest, block_kb=block_kb)
     pipe = DataPipeline.from_reader(
         reader, seq_len,
         PipelineConfig(batch_size=batch, num_workers=workers,
-                       prefetch_depth=prefetch_depth, seed=0),
+                       prefetch_depth=prefetch_depth, seed=0,
+                       prefetch_policy=prefetch_policy,
+                       lookahead_batches=lookahead_batches,
+                       cache_budget_mb=cache_budget_mb, access=access),
+        host_id=0, n_hosts=n_hosts,
     )
     tele = StepTelemetry()
     probe = StepTelemetry()
@@ -234,6 +244,7 @@ def run_pipeline_case(
             simulated_compute(compute_s)
         t.record_batch(batch_arr.shape[0], batch_arr.nbytes)
     it.close()  # stops the producer thread before teardown
+    pf_stats = pipe.prefetch_stats()
     pipe.close()
     reader.close()
     row = _blank_row("pipeline")
@@ -245,6 +256,9 @@ def run_pipeline_case(
         samples_per_second=probe.samples_per_second(),  # upstream probe
         data_loading_ratio=probe.data_loading_ratio(),
         throughput_mb_s=probe.throughput_mb_s(),
+        prefetch_policy=policy_code(prefetch_policy),
+        lookahead_batches=lookahead_batches,
+        cache_budget_mb=cache_budget_mb,
     )
     # Target = overall delivered MB/s (samples/sec x record bytes), the
     # paper's pipeline-benchmark measurement; probe features come from the
@@ -252,7 +266,12 @@ def run_pipeline_case(
     row[TARGET_NAME] = tele.throughput_mb_s()
     row["backend"] = backend.name
     row["format"] = fmt
+    row["access"] = access
     row["utilization"] = tele.simulated_utilization()
+    # stall diagnostics (not features): measure-window data-wait seconds
+    row["data_wait_s"] = float(sum(tele.data_times))
+    if pf_stats is not None:
+        row["prefetch_hit_ratio"] = pf_stats["hit_ratio"]
     return row
 
 
@@ -263,6 +282,10 @@ def _exec_pipeline(case: BenchCase, ctx: RunContext, seed: int) -> dict:
         backend, manifest, case.format, case.batch_size, case.num_workers,
         case.seq_len, compute_s=case.compute_s,
         prefetch_depth=case.prefetch_depth, block_kb=case.block_kb,
+        prefetch_policy=case.prefetch_policy,
+        lookahead_batches=case.lookahead_batches,
+        cache_budget_mb=case.cache_budget_mb,
+        access=case.access, n_hosts=case.n_hosts,
     )
 
 
@@ -948,7 +971,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     for name, hlp in (("run", "run a campaign (resumes by default)"),
                       ("resume", "alias of run: skip completed, re-run failed"),
-                      ("smoke", "run all paper campaigns fast and check summaries")):
+                      ("smoke", "run the paper + prefetch campaigns fast and check summaries")):
         p = sub.add_parser(name, help=hlp)
         if name != "smoke":
             p.add_argument("--campaign", default="paper_core")
@@ -1018,7 +1041,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.cmd == "smoke":
         failures = 0
-        for name in ("paper_random_access", "paper_pipeline", "paper_concurrent"):
+        for name in ("paper_random_access", "paper_pipeline", "paper_concurrent",
+                     "prefetch"):
             out = (args.out / f"{name}.jsonl") if args.out else _default_out(name, (0, 1), fast=True)
             res = run_campaign(name, out, fast=True, seed=args.seed,
                                progress=lambda m: print(f"  {m}"))

@@ -11,6 +11,20 @@ benchmark/classifier can compare them:
 All readers read via ``StorageBackend.read_block`` so simulated backends
 charge latency/bandwidth, and support ``block_kb``-aligned reads (the paper's
 block-size knob): a record fetch reads whole aligned blocks covering it.
+
+Reading is split into an explicit **access plan** layer so schedulers (the
+clairvoyant prefetcher in ``data/prefetch.py``) can separate offset math
+from I/O from decode:
+
+- ``record_span(i)`` — pure offset math: which file/byte-range holds record i
+- ``block_plan(indices)`` — the ordered, coalesced aligned-block fetch list
+  covering a set of records (adjacent records in one shard collapse to one
+  read)
+- ``fetch(BlockRead)`` — one ``StorageBackend.read_block`` call
+- ``decode_span(i, ...)`` — header parse / decompress, no I/O
+
+``read()`` / ``read_batch()`` are reimplemented on top of these and return
+byte-identical results to the pre-plan implementation for all four formats.
 """
 
 from __future__ import annotations
@@ -20,13 +34,14 @@ import json
 import pathlib
 import struct
 import zlib
-from typing import List, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .storage import StorageBackend
 
-__all__ = ["FORMATS", "write_dataset", "open_dataset", "DatasetReader"]
+__all__ = ["FORMATS", "BlockRead", "assemble_span", "write_dataset",
+           "open_dataset", "DatasetReader"]
 
 MAGIC = b"RPR1"
 
@@ -59,7 +74,6 @@ def write_dataset(
         }
     elif fmt in ("packed", "compressed"):
         p = backend.path(f"{name}.{fmt}")
-        offs = [0]
         with open(p, "wb") as f:
             f.write(MAGIC)
             pos = 4
@@ -104,6 +118,45 @@ def write_dataset(
     return manifest
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockRead:
+    """One planned ``StorageBackend.read_block`` call: ``size`` bytes at
+    block-aligned ``offset`` of file ``file`` (may span several aligned
+    blocks when the plan coalesced adjacent records)."""
+
+    file: int
+    offset: int
+    size: int
+
+
+def assemble_span(
+    get_block: Callable[[int, int], Optional[bytes]],
+    fi: int,
+    offset: int,
+    size: int,
+    block_bytes: int,
+) -> bytes:
+    """Stitch ``[offset, offset+size)`` of file ``fi`` from aligned blocks.
+
+    ``get_block(fi, block_offset)`` returns the block's bytes (possibly short
+    at EOF) or None/empty when unavailable — a missing or short block ends
+    the span early, and the resulting truncation surfaces in decode, never
+    here."""
+    parts: List[bytes] = []
+    start = (offset // block_bytes) * block_bytes
+    boff = start
+    while boff < offset + size:
+        blk = get_block(fi, boff)
+        if not blk:
+            break
+        parts.append(blk)
+        if len(blk) < block_bytes:
+            break
+        boff += block_bytes
+    data = b"".join(parts)
+    return data[offset - start : offset - start + size]
+
+
 @dataclasses.dataclass
 class DatasetReader:
     backend: StorageBackend
@@ -113,10 +166,15 @@ class DatasetReader:
     def __post_init__(self):
         self._files = [open(p, "rb") for p in self.manifest["files"]]
         fmt = self.manifest["format"]
-        if fmt in ("packed", "compressed"):
-            self._idx = [np.fromfile(_index_path(pathlib.Path(p)), np.uint64) for p in self.manifest["files"]]
-        elif fmt == "sharded":
-            self._idx = [np.fromfile(_index_path(pathlib.Path(p)), np.uint64) for p in self.manifest["files"]]
+        # every indexed format (packed/compressed/sharded) loads one uint64
+        # offset index per file; sharded additionally needs the record->shard
+        # cumulative counts
+        self._idx = (
+            [np.fromfile(_index_path(pathlib.Path(p)), np.uint64)
+             for p in self.manifest["files"]]
+            if fmt != "raw" else None
+        )
+        if fmt == "sharded":
             self._cum = np.cumsum([0] + list(self.manifest["shard_counts"]))
         self._file_sizes = [pathlib.Path(p).stat().st_size for p in self.manifest["files"]]
 
@@ -127,6 +185,57 @@ class DatasetReader:
     def total_bytes(self) -> int:
         return int(sum(self._file_sizes))
 
+    def file_size(self, fi: int) -> int:
+        return int(self._file_sizes[fi])
+
+    # -- plan layer: pure offset math, no I/O ------------------------------
+    def record_span(self, i: int) -> Tuple[int, int, int]:
+        """(file_index, byte_offset, byte_size) of record ``i``, header
+        included for the indexed formats."""
+        fmt = self.manifest["format"]
+        i = int(i)
+        if fmt == "raw":
+            rs = int(self.manifest["record_size"])
+            return 0, i * rs, rs
+        if fmt == "sharded":
+            fi = int(np.searchsorted(self._cum, i, side="right") - 1)
+            local = i - int(self._cum[fi])
+        else:  # packed / compressed
+            fi, local = 0, i
+        idx = self._idx[fi]
+        off = int(idx[local])
+        end = int(idx[local + 1]) if local + 1 < len(idx) else self._file_sizes[fi]
+        return fi, off, end - off
+
+    def block_plan(self, indices, block_kb: Optional[int] = None) -> List[BlockRead]:
+        """Ordered, coalesced aligned-block fetch list covering ``indices``.
+
+        Blocks appear in first-use order and exactly once; runs of adjacent
+        blocks in one file (e.g. consecutive records in one shard) collapse
+        into a single ``BlockRead``."""
+        bs = int(block_kb or self.block_kb) * 1024
+        plan: List[BlockRead] = []
+        seen = set()
+        for i in indices:
+            fi, off, size = self.record_span(int(i))
+            stop = min(((off + size + bs - 1) // bs) * bs, self._file_sizes[fi])
+            boff = (off // bs) * bs
+            while boff < stop:
+                if (fi, boff) not in seen:
+                    seen.add((fi, boff))
+                    blk_end = min(boff + bs, self._file_sizes[fi])
+                    if plan and plan[-1].file == fi and plan[-1].offset + plan[-1].size == boff:
+                        plan[-1] = BlockRead(fi, plan[-1].offset, blk_end - plan[-1].offset)
+                    else:
+                        plan.append(BlockRead(fi, boff, blk_end - boff))
+                boff += bs
+        return plan
+
+    # -- I/O ---------------------------------------------------------------
+    def fetch(self, br: BlockRead) -> bytes:
+        """Execute one planned block read through the storage backend."""
+        return self.backend.read_block(self._files[br.file], br.offset, br.size)
+
     def _read_span(self, fi: int, offset: int, size: int) -> bytes:
         """Block-aligned read covering [offset, offset+size)."""
         bs = self.block_kb * 1024
@@ -135,32 +244,26 @@ class DatasetReader:
         data = self.backend.read_block(self._files[fi], start, end - start)
         return data[offset - start : offset - start + size]
 
-    def read(self, i: int) -> bytes:
+    # -- decode: header parse / decompress, no I/O -------------------------
+    def decode_span(self, i: int, fi: int, off: int, data: bytes) -> bytes:
+        """Record ``i``'s payload from its span bytes ``data`` (which may be
+        short when the underlying file is truncated)."""
         fmt = self.manifest["format"]
         if fmt == "raw":
-            rs = self.manifest["record_size"]
-            return self._read_span(0, i * rs, rs)
-        if fmt in ("packed", "compressed"):
-            fi, local = 0, i
-        else:  # sharded
-            fi = int(np.searchsorted(self._cum, i, side="right") - 1)
-            local = i - int(self._cum[fi])
-            fmt = "packed"
-        off = int(self._idx[fi][local])
-        header = self._read_span(fi, off, 4)
-        if len(header) < 4:
+            return data
+        if len(data) < 4:
             raise IOError(
                 f"truncated record header at offset {off} in "
-                f"{self.manifest['files'][fi]} (got {len(header)}/4 bytes)"
+                f"{self.manifest['files'][fi]} (got {len(data)}/4 bytes)"
             )
-        (ln,) = struct.unpack("<I", header)
-        payload = self._read_span(fi, off + 4, ln)
+        (ln,) = struct.unpack("<I", data[:4])
+        payload = data[4 : 4 + ln]
         if len(payload) < ln:
             raise IOError(
                 f"truncated record payload at offset {off + 4} in "
                 f"{self.manifest['files'][fi]} (got {len(payload)}/{ln} bytes)"
             )
-        if self.manifest["format"] == "compressed":
+        if fmt == "compressed":
             try:
                 return zlib.decompress(payload)
             except zlib.error as exc:
@@ -170,8 +273,25 @@ class DatasetReader:
                 ) from exc
         return payload
 
+    # -- record API (plan -> fetch -> decode) ------------------------------
+    def read(self, i: int) -> bytes:
+        fi, off, size = self.record_span(int(i))
+        return self.decode_span(int(i), fi, off, self._read_span(fi, off, size))
+
     def read_batch(self, indices) -> List[bytes]:
-        return [self.read(int(i)) for i in indices]
+        idx = [int(i) for i in indices]
+        bs = self.block_kb * 1024
+        blocks = {}
+        for br in self.block_plan(idx):
+            data = self.fetch(br)
+            for boff in range(br.offset, br.offset + len(data), bs):
+                blocks[(br.file, boff)] = data[boff - br.offset : boff - br.offset + bs]
+        out = []
+        for i in idx:
+            fi, off, size = self.record_span(i)
+            span = assemble_span(lambda f, b: blocks.get((f, b)), fi, off, size, bs)
+            out.append(self.decode_span(i, fi, off, span))
+        return out
 
     def close(self):
         for f in self._files:

@@ -8,9 +8,18 @@ block_kb, format, backend. Properties needed at pod scale:
 - **restart-exact**: the sample order is a pure function of (seed, epoch,
   step); resuming from a checkpointed step reproduces the same batches.
 - **live reconfiguration**: ``reconfigure()`` swaps worker pool / prefetch /
-  block size between steps without losing position (the autotuner's actuator).
-- **prefetch**: a background thread keeps ``prefetch_depth`` batches ready;
-  workers fetch records concurrently within a batch.
+  block size between steps without losing position (the autotuner's actuator);
+  unknown knob names raise ``ValueError`` so actuator typos surface.
+- **prefetch policies** (``prefetch_policy`` knob): ``off`` fetches batches
+  synchronously; ``depth`` keeps ``prefetch_depth`` batches ready via a
+  background producer thread; ``clairvoyant`` additionally walks the known
+  epoch schedule ``lookahead_batches`` ahead and stages the underlying
+  storage blocks in a bounded cache (``data/prefetch.py``).  All three
+  policies yield byte-identical batch streams.
+- **access patterns**: ``access`` selects the epoch order — seeded
+  permutations (``shuffle``), sequential (``seq``), or a zipfian hot set
+  (``zipf``) — all pure functions of (seed, epoch), so every pattern stays
+  restart-exact.
 """
 
 from __future__ import annotations
@@ -24,9 +33,13 @@ from typing import Callable, Iterator, Optional
 import numpy as np
 
 from .formats import DatasetReader
+from .prefetch import ClairvoyantPrefetcher, policy_name
 
 __all__ = ["PipelineConfig", "TokenRecordCodec", "ImageRecordCodec",
-           "TabularRecordCodec", "DataPipeline", "SyntheticTokenSource"]
+           "TabularRecordCodec", "DataPipeline", "SyntheticTokenSource",
+           "ACCESS_PATTERNS"]
+
+ACCESS_PATTERNS = ("shuffle", "seq", "zipf")
 
 
 class _ProducerError:
@@ -45,6 +58,15 @@ class PipelineConfig:
     shuffle: bool = True
     drop_last: bool = True
     seed: int = 0
+    # prefetch-policy knobs (data/prefetch.py); "" access = derive from shuffle
+    prefetch_policy: str = "depth"
+    lookahead_batches: int = 8
+    cache_budget_mb: float = 64.0
+    access: str = ""
+
+    @classmethod
+    def knob_names(cls) -> tuple:
+        return tuple(f.name for f in dataclasses.fields(cls))
 
     def replace(self, **kw) -> "PipelineConfig":
         return dataclasses.replace(self, **kw)
@@ -154,6 +176,8 @@ class DataPipeline:
         self.n_hosts = n_hosts
         self.collate = collate or (lambda recs: np.stack(recs))
         self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._prefetcher: Optional[ClairvoyantPrefetcher] = None
+        policy_name(config.prefetch_policy)  # validate early
         self._rebuild_pool()
 
     @classmethod
@@ -165,11 +189,23 @@ class DataPipeline:
     # -- deterministic order ------------------------------------------------
     def epoch_order(self, epoch: int) -> np.ndarray:
         n = len(self.source)
-        if self.config.shuffle:
+        mode = self.config.access or ("shuffle" if self.config.shuffle else "seq")
+        if mode == "shuffle":
             rng = np.random.default_rng((self.config.seed, epoch))
             order = rng.permutation(n)
-        else:
+        elif mode == "zipf":
+            # zipfian hot set: rank r of a seeded permutation is drawn with
+            # probability ∝ 1/r^a, so a few hot records dominate the epoch;
+            # still a pure function of (seed, epoch) -> restart-exact
+            rng = np.random.default_rng((self.config.seed, epoch))
+            ranks = rng.permutation(n)
+            order = ranks[np.minimum(rng.zipf(a=1.6, size=n) - 1, n - 1)]
+        elif mode == "seq":
             order = np.arange(n)
+        else:
+            raise ValueError(
+                f"unknown access pattern {mode!r}; valid: {ACCESS_PATTERNS}"
+            )
         return order[self.host_id :: self.n_hosts]
 
     def steps_per_epoch(self) -> int:
@@ -202,12 +238,69 @@ class DataPipeline:
             recs = [self.source.read(int(i)) for i in idx]
         return self.collate(recs)
 
+    # -- clairvoyant prefetching (data/prefetch.py) ------------------------
+    def _ensure_prefetcher(self) -> Optional[ClairvoyantPrefetcher]:
+        """Lazily build the block prefetcher; None when the source has no
+        plan-layer reader (e.g. SyntheticTokenSource — nothing to prefetch)."""
+        if self._prefetcher is None:
+            reader = getattr(self.source, "reader", None)
+            if reader is None or not hasattr(reader, "block_plan"):
+                return None
+            self._prefetcher = ClairvoyantPrefetcher(
+                reader,
+                self,
+                lookahead_batches=self.config.lookahead_batches,
+                cache_budget_mb=self.config.cache_budget_mb,
+                workers=max(2, self.config.num_workers),
+            )
+        return self._prefetcher
+
+    def _drop_prefetcher(self):
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+            self._prefetcher = None
+
+    def prefetch_stats(self) -> Optional[dict]:
+        return self._prefetcher.stats() if self._prefetcher is not None else None
+
+    def _fetch_step(self, epoch: int, step: int) -> np.ndarray:
+        """One batch, honoring the *current* prefetch policy (checked per
+        step so mid-epoch reconfigure() changes mechanics, never order)."""
+        if policy_name(self.config.prefetch_policy) == "clairvoyant":
+            pf = self._ensure_prefetcher()
+            if pf is not None:
+                pf.advance(epoch, step)
+                idx = self.batch_indices(epoch, step)
+                decode = self.source.codec.decode
+
+                def _read(i):
+                    return decode(pf.read_record(int(i)))
+
+                pool = self._pool
+                recs = (list(pool.map(_read, idx)) if pool is not None
+                        else [_read(i) for i in idx])
+                return self.collate(recs)
+        return self.fetch_batch(epoch, step)
+
     def batch_nbytes(self) -> int:
         return self.config.batch_size * self.source.record_nbytes()
 
     # -- prefetched iteration ---------------------------------------------
     def iter_epoch(self, epoch: int, start_step: int = 0) -> Iterator[np.ndarray]:
-        """Prefetched iterator; restart-exact given (epoch, start_step)."""
+        """Batch iterator; restart-exact given (epoch, start_step) under
+        every prefetch policy — the step sequence and batch bytes are
+        identical whether batches are fetched synchronously (``off``),
+        through the depth-bounded producer thread (``depth``), or via the
+        clairvoyant block cache (``clairvoyant``)."""
+        if policy_name(self.config.prefetch_policy) == "off":
+            return self._iter_sync(epoch, start_step)
+        return self._iter_queued(epoch, start_step)
+
+    def _iter_sync(self, epoch: int, start_step: int) -> Iterator[np.ndarray]:
+        for s in range(start_step, self.steps_per_epoch()):
+            yield self._fetch_step(epoch, s)
+
+    def _iter_queued(self, epoch: int, start_step: int) -> Iterator[np.ndarray]:
         steps = self.steps_per_epoch()
         depth = max(1, self.config.prefetch_depth)
         q: queue.Queue = queue.Queue(maxsize=depth)
@@ -227,7 +320,7 @@ class DataPipeline:
                 for s in range(start_step, steps):
                     if stop.is_set():
                         return
-                    if not _put(self.fetch_batch(epoch, s)):
+                    if not _put(self._fetch_step(epoch, s)):
                         return
                 _put(None)
             except BaseException as e:  # noqa: BLE001 — surface in consumer
@@ -249,16 +342,39 @@ class DataPipeline:
 
     # -- live reconfiguration (autotuner actuator) --------------------------
     def reconfigure(self, **knobs) -> PipelineConfig:
+        """Apply knob changes between steps.  Unknown knob names raise
+        ``ValueError`` (a silent no-op here means an autotuner decision was
+        never actuated).  ``prefetch_policy`` accepts a name or its numeric
+        code (the config grids are numeric)."""
+        valid = PipelineConfig.knob_names()
+        unknown = sorted(set(knobs) - set(valid))
+        if unknown:
+            raise ValueError(
+                f"unknown pipeline knob(s): {', '.join(unknown)}; "
+                f"valid knobs: {', '.join(valid)}"
+            )
+        if "prefetch_policy" in knobs:
+            knobs["prefetch_policy"] = policy_name(knobs["prefetch_policy"])
         old = self.config
-        self.config = self.config.replace(
-            **{k: v for k, v in knobs.items() if hasattr(old, k)}
-        )
+        self.config = self.config.replace(**knobs)
         if self.config.num_workers != old.num_workers:
             self._rebuild_pool()
-        if self.config.block_kb != old.block_kb and hasattr(self.source, "reader"):
-            self.source.reader.block_kb = self.config.block_kb
+        if self.config.block_kb != old.block_kb:
+            if hasattr(self.source, "reader"):
+                self.source.reader.block_kb = self.config.block_kb
+            # block granularity changed: the cached plan/blocks are stale
+            self._drop_prefetcher()
+        if self._prefetcher is not None and (
+            self.config.lookahead_batches != old.lookahead_batches
+            or self.config.cache_budget_mb != old.cache_budget_mb
+        ):
+            self._prefetcher.reconfigure(
+                lookahead_batches=self.config.lookahead_batches,
+                cache_budget_mb=self.config.cache_budget_mb,
+            )
         return self.config
 
     def close(self):
         if self._pool is not None:
             self._pool.shutdown(wait=False)
+        self._drop_prefetcher()

@@ -1,0 +1,342 @@
+"""Clairvoyant prefetching over the access-plan layer (PAPERS.md: *Clairvoyant
+Prefetching for Distributed Machine Learning I/O*, Dryden et al.).
+
+The pipeline's per-epoch access order is a pure function of ``(seed, epoch,
+step)`` — ``DataPipeline.epoch_order`` — so the exact block-read sequence is
+knowable ahead of the consumer.  ``ClairvoyantPrefetcher`` walks that known
+schedule ``lookahead_batches`` ahead of the consumer, issues async block
+reads through ``StorageBackend.read_block`` (so simulated backends charge
+latency/bandwidth and the chaos harness's ``read:`` fault sites fire), and
+parks the blocks in a bounded ``BlockCache``.
+
+Eviction is schedule-aware LRU: a block whose **last scheduled use has
+already been consumed** is dropped first; only then does plain
+least-recently-used order apply.  Transient I/O errors in prefetch threads
+are retried with backoff and never poison the cache — only complete,
+successful reads are inserted; a block that ultimately cannot be prefetched
+falls back to a synchronous read on the consumer path.
+
+Policy knobs (plumbed through ``PipelineConfig`` → ``BenchCase`` →
+``ConfigSpace`` → telemetry features):
+
+- ``prefetch_policy`` ∈ {off, depth, clairvoyant}  (numeric codes 0/1/2 in
+  feature rows and config grids)
+- ``lookahead_batches`` — how many batches ahead of the consumer to schedule
+- ``cache_budget_mb``   — block cache bound in MB
+"""
+
+from __future__ import annotations
+
+import collections
+import concurrent.futures as cf
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from .formats import BlockRead, assemble_span
+
+__all__ = ["PREFETCH_POLICIES", "policy_code", "policy_name",
+           "BlockCache", "ClairvoyantPrefetcher"]
+
+PREFETCH_POLICIES = ("off", "depth", "clairvoyant")
+
+
+def policy_code(policy) -> int:
+    """Numeric code of a prefetch policy (accepts a name or a code)."""
+    if isinstance(policy, str):
+        try:
+            return PREFETCH_POLICIES.index(policy)
+        except ValueError:
+            raise ValueError(
+                f"unknown prefetch_policy {policy!r}; valid: {PREFETCH_POLICIES}"
+            ) from None
+    code = int(policy)
+    if not 0 <= code < len(PREFETCH_POLICIES):
+        raise ValueError(
+            f"unknown prefetch_policy code {policy!r}; valid: 0..{len(PREFETCH_POLICIES) - 1}"
+        )
+    return code
+
+
+def policy_name(policy) -> str:
+    """Canonical policy name (accepts a name or a numeric code)."""
+    return PREFETCH_POLICIES[policy_code(policy)]
+
+
+class _Entry:
+    __slots__ = ("data", "last_use")
+
+    def __init__(self, data: bytes, last_use: int):
+        self.data = data
+        self.last_use = last_use
+
+
+class BlockCache:
+    """Bounded block cache keyed by ``(file_index, block_offset)``.
+
+    ``pos`` is the consumer's current step; an entry whose ``last_use``
+    (last step scheduled to read it) is behind ``pos`` is expired and evicts
+    before any still-useful block.  Not thread-safe — callers serialize
+    access (``ClairvoyantPrefetcher`` holds one lock around all cache ops).
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget = max(int(budget_bytes), 1)
+        self.pos = -1
+        self.evicted = 0
+        self.expired_evictions = 0
+        self._entries: "collections.OrderedDict[Tuple[int, int], _Entry]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def get(self, key) -> Optional[bytes]:
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        self._entries.move_to_end(key)
+        return e.data
+
+    def note_use(self, key, step: int):
+        """Extend a cached block's scheduled lifetime to ``step``."""
+        e = self._entries.get(key)
+        if e is not None and step > e.last_use:
+            e.last_use = step
+
+    def put(self, key, data: bytes, last_use: int):
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._bytes -= len(old.data)
+        self._entries[key] = _Entry(data, last_use)
+        self._bytes += len(data)
+        self.evict_to_budget()
+
+    def evict_to_budget(self):
+        # keep at least one entry so a single over-budget block still serves
+        while self._bytes > self.budget and len(self._entries) > 1:
+            victim = None
+            expired = False
+            for k, e in self._entries.items():  # LRU-order scan
+                if e.last_use < self.pos:
+                    victim, expired = k, True
+                    break
+            if victim is None:
+                victim = next(iter(self._entries))
+            e = self._entries.pop(victim)
+            self._bytes -= len(e.data)
+            self.evicted += 1
+            if expired:
+                self.expired_evictions += 1
+
+
+class ClairvoyantPrefetcher:
+    """Walks a known batch schedule ahead of the consumer and keeps the
+    blocks it will need in a bounded cache.
+
+    ``schedule`` is duck-typed (``DataPipeline`` satisfies it): it provides
+    ``batch_indices(epoch, step)`` and ``steps_per_epoch()``.  ``reader`` is
+    a ``DatasetReader`` exposing the plan layer (``record_span`` /
+    ``block_plan`` / ``fetch`` / ``decode_span``).
+    """
+
+    def __init__(
+        self,
+        reader,
+        schedule,
+        lookahead_batches: int = 8,
+        cache_budget_mb: float = 64.0,
+        workers: int = 2,
+        max_retries: int = 2,
+        retry_backoff_s: float = 0.002,
+    ):
+        self.reader = reader
+        self.schedule = schedule
+        self.lookahead_batches = max(0, int(lookahead_batches))
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.block_bytes = int(reader.block_kb) * 1024
+        self.cache = BlockCache(int(float(cache_budget_mb) * 1e6))
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=max(1, int(workers)), thread_name_prefix="prefetch"
+        )
+        self._lock = threading.Lock()
+        self._inflight: Dict[Tuple[int, int], cf.Future] = {}
+        self._last_use: Dict[Tuple[int, int], int] = {}
+        self._epoch: Optional[int] = None
+        self._steps = 0
+        self._sched_hi = 0
+        self._hits = 0
+        self._misses = 0
+        self._waits = 0
+        self._retries = 0
+        self._failed_fetches = 0
+        self._prefetched_blocks = 0
+        self._prefetched_bytes = 0
+
+    # -- scheduling --------------------------------------------------------
+    def advance(self, epoch: int, step: int):
+        """Consumer is about to fetch batch ``step``: mark its position (for
+        expiry) and schedule block reads up to ``step + lookahead_batches``."""
+        with self._lock:
+            if epoch != self._epoch:
+                self._epoch = epoch
+                self._steps = int(self.schedule.steps_per_epoch())
+                self._sched_hi = step
+                self._last_use.clear()
+            self.cache.pos = step
+            hi = min(self._steps, step + 1 + self.lookahead_batches)
+            for s in range(max(self._sched_hi, step), hi):
+                self._schedule_step(epoch, s)
+            self._sched_hi = max(self._sched_hi, hi)
+
+    def _schedule_step(self, epoch: int, s: int):
+        # lock held; record every block's scheduled use, then submit fetches
+        # for runs of blocks that are neither cached nor in flight
+        for br in self.reader.block_plan(self.schedule.batch_indices(epoch, s)):
+            run: List[Tuple[int, int]] = []  # (block_offset, block_end)
+            end = br.offset + br.size
+            boff = br.offset
+            while boff < end:
+                key = (br.file, boff)
+                prev = self._last_use.get(key, -1)
+                if s > prev:
+                    self._last_use[key] = s
+                if key in self.cache:
+                    self.cache.note_use(key, s)
+                    run = self._submit_run(br.file, run)
+                elif key in self._inflight:
+                    run = self._submit_run(br.file, run)
+                else:
+                    run.append((boff, min(boff + self.block_bytes, end)))
+                boff += self.block_bytes
+            self._submit_run(br.file, run)
+
+    def _submit_run(self, fi: int, run: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+        if run:
+            start, span_end = run[0][0], run[-1][1]
+            try:
+                fut = self._pool.submit(self._fetch_span, fi, start, span_end - start)
+            except RuntimeError:
+                return []  # closed concurrently: consumer falls back to sync reads
+            for boff, _ in run:
+                self._inflight[(fi, boff)] = fut
+        return []
+
+    # -- prefetch worker ---------------------------------------------------
+    def _fetch_span(self, fi: int, start: int, size: int):
+        data = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                data = self.reader.fetch(BlockRead(fi, start, size))
+                break
+            except OSError:
+                # transient I/O fault (incl. injected FaultInjected): retry
+                # with backoff; never insert anything on failure
+                with self._lock:
+                    self._retries += 1
+                if attempt == self.max_retries:
+                    break
+                time.sleep(self.retry_backoff_s * (attempt + 1))
+        with self._lock:
+            if data is None:
+                self._failed_fetches += 1
+                for boff in range(start, start + size, self.block_bytes):
+                    self._inflight.pop((fi, boff), None)
+                return
+            for boff in range(start, start + size, self.block_bytes):
+                key = (fi, boff)
+                self._inflight.pop(key, None)
+                blk = data[boff - start : boff - start + self.block_bytes]
+                if blk:
+                    self.cache.put(key, blk, self._last_use.get(key, self.cache.pos))
+                    self._prefetched_blocks += 1
+                    self._prefetched_bytes += len(blk)
+
+    # -- consumer path -----------------------------------------------------
+    def read_record(self, i: int) -> bytes:
+        """Record ``i``'s payload, served from the block cache when possible
+        (thread-safe: the pipeline's worker pool may call this concurrently)."""
+        fi, off, size = self.reader.record_span(int(i))
+        data = assemble_span(self._get_block, fi, off, size, self.block_bytes)
+        return self.reader.decode_span(int(i), fi, off, data)
+
+    def _get_block(self, fi: int, boff: int) -> bytes:
+        key = (fi, boff)
+        with self._lock:
+            data = self.cache.get(key)
+            fut = self._inflight.get(key)
+        if data is not None:
+            with self._lock:
+                self._hits += 1
+            return data
+        if fut is not None:
+            cf.wait([fut])
+            with self._lock:
+                data = self.cache.get(key)
+                if data is not None:
+                    self._hits += 1
+                    self._waits += 1
+            if data is not None:
+                return data
+        return self._sync_fetch(fi, boff)
+
+    def _sync_fetch(self, fi: int, boff: int) -> bytes:
+        """Miss path: read one aligned block directly, with the same bounded
+        retry as the async path.  Persistent errors propagate to the caller."""
+        size = min(boff + self.block_bytes, self.reader.file_size(fi)) - boff
+        if size <= 0:
+            return b""
+        for attempt in range(self.max_retries + 1):
+            try:
+                data = self.reader.fetch(BlockRead(fi, boff, size))
+                break
+            except OSError:
+                with self._lock:
+                    self._retries += 1
+                if attempt == self.max_retries:
+                    raise
+                time.sleep(self.retry_backoff_s * (attempt + 1))
+        with self._lock:
+            self._misses += 1
+            self.cache.put((fi, boff), data, self._last_use.get((fi, boff), self.cache.pos))
+        return data
+
+    # -- knobs / stats / lifecycle ----------------------------------------
+    def reconfigure(self, lookahead_batches: Optional[int] = None,
+                    cache_budget_mb: Optional[float] = None):
+        with self._lock:
+            if lookahead_batches is not None:
+                self.lookahead_batches = max(0, int(lookahead_batches))
+            if cache_budget_mb is not None:
+                self.cache.budget = max(1, int(float(cache_budget_mb) * 1e6))
+                self.cache.evict_to_budget()
+
+    def stats(self) -> dict:
+        with self._lock:
+            served = self._hits + self._misses
+            return {
+                "hits": self._hits,
+                "misses": self._misses,
+                "waits": self._waits,
+                "hit_ratio": self._hits / served if served else 0.0,
+                "retries": self._retries,
+                "failed_fetches": self._failed_fetches,
+                "prefetched_blocks": self._prefetched_blocks,
+                "prefetched_mb": self._prefetched_bytes / 1e6,
+                "cached_blocks": len(self.cache),
+                "cached_mb": self.cache.nbytes / 1e6,
+                "evicted": self.cache.evicted,
+                "expired_evictions": self.cache.expired_evictions,
+            }
+
+    def close(self):
+        self._pool.shutdown(wait=False, cancel_futures=True)

@@ -79,6 +79,12 @@ class BenchCase:
     compute_s: float = 0.002              # pipeline: simulated step compute
     n_records: int = 1024                 # pipeline: dataset size (records)
     seq_len: int = 256                    # pipeline: tokens per record
+    # pipeline: prefetch-policy knobs + access pattern (data/prefetch.py)
+    prefetch_policy: str = "depth"        # off | depth | clairvoyant
+    lookahead_batches: int = 8            # clairvoyant: batches scheduled ahead
+    cache_budget_mb: float = 64.0         # clairvoyant: block cache bound
+    access: str = "shuffle"               # shuffle | seq | zipf epoch order
+    n_hosts: int = 1                      # sharded epochs: this host's slice of H
 
     def __post_init__(self):
         if self.bench_type not in BENCH_TYPES:
@@ -158,6 +164,8 @@ def _fmt_id_part(name: str, value) -> str:
         "backend": "", "format": "", "batch_size": "b", "num_workers": "w",
         "block_kb": "k", "file_size_mb": "mb", "n_samples": "n",
         "n_threads": "t", "prefetch_depth": "pf",
+        "prefetch_policy": "", "lookahead_batches": "la",
+        "cache_budget_mb": "cb", "access": "", "n_hosts": "h",
     }
     prefix = abbrev.get(name, name[:2])
     if isinstance(value, float) and value == int(value):
@@ -344,3 +352,57 @@ def fleet_probe(fast: bool = False) -> List[BenchCase]:
                   block_kb=kb, file_size_mb=4, n_samples=n, tags=tags)
         for b, n, kb in combos
     ]
+
+
+_PF_POLICIES = ("off", "depth", "clairvoyant")
+
+
+def _pf_case(backend: str, fmt: str, access: str, policy: str, workers: int,
+             tags: Tuple[str, ...], n_records: int = 1024,
+             n_hosts: int = 1) -> BenchCase:
+    cid = f"pfc-{fmt}-{backend}-{access}-{policy}-w{workers}"
+    if n_hosts != 1:
+        cid += f"-h{n_hosts}"
+    if n_records != 1024:
+        cid += f"-r{n_records}"
+    return BenchCase(
+        id=cid, bench_type="pipeline", backend=backend, format=fmt,
+        batch_size=32, num_workers=workers, block_kb=16,
+        n_records=n_records, prefetch_policy=policy, lookahead_batches=8,
+        cache_budget_mb=4.0, access=access, n_hosts=n_hosts, tags=tags,
+    )
+
+
+@register_campaign(
+    "prefetch",
+    "prefetch-policy family: off/depth/clairvoyant across distributed "
+    "shuffle patterns on the simulated network/object backends",
+)
+def prefetch(fast: bool = False) -> List[BenchCase]:
+    """Pipeline cases where stalls actually bite (simulated network/object
+    latency), sweeping ``prefetch_policy`` against the distributed shuffle
+    patterns the clairvoyant prefetcher exploits: seeded permutations
+    (``shuffle``), zipfian hot sets (``zipf``), and sharded epochs
+    (``n_hosts=2`` — one host's slice of a 2-host run)."""
+    tags = ("prefetch",)
+    if fast:
+        cases = [
+            _pf_case("network_sim", "packed", a, p, 0, tags, n_records=192)
+            for a in ("shuffle", "zipf") for p in _PF_POLICIES
+        ]
+        cases.append(_pf_case("network_sim", "sharded", "shuffle", "clairvoyant",
+                              0, tags, n_records=192, n_hosts=2))
+        return cases
+    cases = [
+        _pf_case(b, fmt, a, p, w, tags)
+        for b in ("network_sim", "object_sim")
+        for fmt in ("packed", "sharded")
+        for a in ("shuffle", "zipf")
+        for p in _PF_POLICIES
+        for w in (1, 4)
+    ]
+    cases += [
+        _pf_case("network_sim", "sharded", "shuffle", p, 1, tags, n_hosts=2)
+        for p in _PF_POLICIES
+    ]
+    return cases

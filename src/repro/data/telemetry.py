@@ -78,12 +78,21 @@ class StepTelemetry:
         """Paper Fig 1: fraction of wall time the accelerator computes."""
         return 1.0 - self.data_loading_ratio()
 
-    def features(self, batch_size: int, num_workers: int, block_kb: int = 0) -> dict:
-        """Export the paper's pipeline-benchmark features for the autotuner."""
+    def features(self, batch_size: int, num_workers: int, block_kb: int = 0,
+                 prefetch_policy=0, lookahead_batches: int = 0,
+                 cache_budget_mb: float = 0.0) -> dict:
+        """Export the paper's pipeline-benchmark features for the autotuner,
+        plus the prefetch knobs (``prefetch_policy`` accepts a name or code
+        and is exported as its numeric code — feature rows are numeric)."""
+        from .prefetch import policy_code
+
         return {
             "batch_size": batch_size,
             "num_workers": num_workers,
             "block_kb": block_kb,
+            "prefetch_policy": policy_code(prefetch_policy),
+            "lookahead_batches": int(lookahead_batches),
+            "cache_budget_mb": float(cache_budget_mb),
             "samples_per_second": self.samples_per_second(),
             "data_loading_ratio": self.data_loading_ratio(),
             "throughput_mb_s": self.throughput_mb_s(),

@@ -178,6 +178,9 @@ class Trainer:
             batch_size=self.pipeline.config.batch_size,
             num_workers=self.pipeline.config.num_workers,
             block_kb=self.pipeline.config.block_kb,
+            prefetch_policy=self.pipeline.config.prefetch_policy,
+            lookahead_batches=self.pipeline.config.lookahead_batches,
+            cache_budget_mb=self.pipeline.config.cache_budget_mb,
         )
         self.autotuner.observe(feats, feats["throughput_mb_s"])
         self.autotuner.maybe_refit()
@@ -186,11 +189,16 @@ class Trainer:
             "num_workers": self.pipeline.config.num_workers,
             "block_kb": self.pipeline.config.block_kb,
             "prefetch_depth": self.pipeline.config.prefetch_depth,
+            "prefetch_policy": feats["prefetch_policy"],  # numeric code
+            "lookahead_batches": self.pipeline.config.lookahead_batches,
+            "cache_budget_mb": self.pipeline.config.cache_budget_mb,
         }
         decision = self.autotuner.decide(current, feats)
         if decision.reconfigure:
             knobs = {k: v for k, v in decision.config.items()
-                     if k in ("num_workers", "block_kb", "prefetch_depth")}
+                     if k in ("num_workers", "block_kb", "prefetch_depth",
+                              "prefetch_policy", "lookahead_batches",
+                              "cache_budget_mb")}
             print(f"[autotune] reconfiguring pipeline: {knobs} "
                   f"(predicted +{decision.predicted_gain:.0%})")
             self.pipeline.reconfigure(**knobs)

@@ -104,6 +104,25 @@ def _serve_art():
     }
 
 
+def _pipeline_art():
+    stalls = {"off": 0.40, "depth": 0.38, "clairvoyant": 0.005}
+    cases = []
+    reduction = {}
+    for backend in ("network_sim", "object_sim"):
+        for w in (1, 4):
+            for policy, stall in stalls.items():
+                cases.append({
+                    "key": f"{backend}.w{w}.{policy}", "backend": backend,
+                    "workers": w, "policy": policy, "stall_s": stall,
+                    "delivered_mb_s": 3.0 if policy == "clairvoyant" else 0.2,
+                    "hit_ratio": 1.0 if policy == "clairvoyant" else 0.0,
+                })
+            reduction[f"{backend}.w{w}"] = round(
+                stalls["depth"] / stalls["clairvoyant"], 2)
+    return {"schema": 1, "cases": cases, "stall_reduction": reduction,
+            "max_stall_reduction": max(reduction.values())}
+
+
 @pytest.fixture()
 def arts(tmp_path):
     committed = tmp_path / "repo"
@@ -115,6 +134,7 @@ def arts(tmp_path):
         (d / "BENCH_loop.json").write_text(json.dumps(_loop_art()))
         (d / "BENCH_fleet.json").write_text(json.dumps(_fleet_art()))
         (d / "BENCH_serve.json").write_text(json.dumps(_serve_art()))
+        (d / "BENCH_pipeline.json").write_text(json.dumps(_pipeline_art()))
     return committed, fresh
 
 
@@ -306,6 +326,60 @@ def test_gate_catches_serve_latency_regression(arts):
     gate = bench_gate.run_gate(fresh, committed)
     assert not gate.hard
     assert any("recommend.batched.c32.p50" in m for m in gate.soft)
+
+
+def test_gate_hard_fails_when_pipeline_policy_row_is_dropped(arts):
+    """The fast pipeline bench silently dropping a policy row (say the
+    clairvoyant one the stall claim rests on) must hard-fail."""
+    committed, fresh = arts
+    art = _pipeline_art()
+    art["cases"] = [c for c in art["cases"]
+                    if c["key"] != "network_sim.w1.clairvoyant"]
+    _rewrite(fresh, "BENCH_pipeline.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("network_sim.w1.clairvoyant" in m and "dropped" in m
+               for m in gate.hard)
+
+
+def test_gate_hard_fails_when_committed_stall_reduction_below_floor(arts):
+    """The committed clairvoyant-vs-depth stall reduction dipping below the
+    1.5x floor on every case means the prefetcher stopped paying."""
+    committed, fresh = arts
+    art = _pipeline_art()
+    art["stall_reduction"] = {k: 1.2 for k in art["stall_reduction"]}
+    _rewrite(committed, "BENCH_pipeline.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("stall reduction" in m and "below the required" in m
+               for m in gate.hard)
+
+
+def test_gate_flags_fresh_stall_reduction_collapse(arts):
+    """A fresh run where clairvoyant barely beats depth is a regression
+    flag (runner noise), not a hard failure."""
+    committed, fresh = arts
+    art = _pipeline_art()
+    for c in art["cases"]:
+        if c["policy"] == "clairvoyant":
+            c["stall_s"] = 0.36
+    art["stall_reduction"] = {k: 1.06 for k in art["stall_reduction"]}
+    _rewrite(fresh, "BENCH_pipeline.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("pipeline: fresh clairvoyant-vs-depth" in m for m in gate.soft)
+
+
+def test_gate_catches_pipeline_stall_regression(arts):
+    """An off/depth stall blowing up 10x against the machine factor is a
+    regression after calibration against the other pipeline rows."""
+    committed, fresh = arts
+    art = _pipeline_art()
+    for c in art["cases"]:
+        if c["key"] == "object_sim.w1.depth":
+            c["stall_s"] *= 10.0
+    _rewrite(fresh, "BENCH_pipeline.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("object_sim.w1.depth.stall" in m for m in gate.soft)
 
 
 def test_gate_hard_fails_when_required_fast_row_is_dropped(arts):

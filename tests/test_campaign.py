@@ -286,8 +286,12 @@ def test_collect_observations_schema_unchanged(obs_fast):
     rows, cols = obs_fast
     assert len(rows) == 26  # seed fast-mode count: 8 ra + 16 pl + 2 cc
     base = set(FEATURE_NAMES) | {TARGET_NAME, "bench_type", "backend"}
+    # measured knob/telemetry columns added after the seed (deliberate
+    # features, consumed by the autotuner) — anything else is leakage
+    known_extras = {"format", "utilization", "access", "data_wait_s",
+                    "prefetch_policy", "lookahead_batches", "cache_budget_mb"}
     for row in rows:
-        extra = set(row) - base - {"format", "utilization"}
+        extra = set(row) - base - known_extras
         assert not extra, extra  # no provenance leakage into observation rows
         assert base <= set(row)
     assert set(cols) == set(FEATURE_NAMES) | {TARGET_NAME}

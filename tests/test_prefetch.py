@@ -1,0 +1,344 @@
+"""Access-plan layer + clairvoyant prefetcher (docs/prefetching.md).
+
+The load-bearing guarantees:
+
+- the plan layer (``record_span`` / ``block_plan`` / ``fetch`` /
+  ``decode_span``) reproduces ``read()``/``read_batch()`` byte-for-byte for
+  all four formats, with coalesced, deduplicated block plans;
+- all three prefetch policies deliver byte-identical batch streams, across
+  formats, access patterns, and mid-epoch restarts — and ``reconfigure()``
+  mid-epoch never duplicates or drops a batch;
+- the block cache evicts schedule-expired blocks before useful ones;
+- the prefetch knobs flow through telemetry features, the ``prefetch``
+  campaign, and the online autotuner's recommendation path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.autotune import KNOB_NAMES, ConfigSpace, OnlineAutotuner
+from repro.core.features import AUTOTUNE_FEATURE_NAMES, FEATURE_NAMES
+from repro.data import (
+    BACKENDS,
+    DataPipeline,
+    PipelineConfig,
+    StepTelemetry,
+    TokenRecordCodec,
+    open_dataset,
+    write_dataset,
+)
+from repro.data.formats import BlockRead, assemble_span
+from repro.data.prefetch import (
+    PREFETCH_POLICIES,
+    BlockCache,
+    ClairvoyantPrefetcher,
+    policy_code,
+    policy_name,
+)
+from repro.data.registry import get_campaign
+
+FORMATS = ("raw", "packed", "compressed", "sharded")
+
+
+@pytest.fixture(scope="module")
+def tmpfs():
+    return BACKENDS["tmpfs"]
+
+
+def _dataset(tmpfs, fmt, n=48, seq_len=32, seed=7, tag=""):
+    codec = TokenRecordCodec(seq_len)
+    rng = np.random.default_rng(seed)
+    recs = [codec.encode(rng.integers(0, 50_000, size=seq_len, dtype=np.int32))
+            for _ in range(n)]
+    man = write_dataset(tmpfs, f"pf_{fmt}{tag}", recs, fmt)
+    return man, recs, codec
+
+
+# ---------------------------------------------------------------- plan layer
+
+def test_policy_codes_roundtrip():
+    for code, name in enumerate(PREFETCH_POLICIES):
+        assert policy_code(name) == code
+        assert policy_code(code) == code
+        assert policy_name(code) == name
+        assert policy_name(name) == name
+    with pytest.raises(ValueError):
+        policy_code("eager")
+    with pytest.raises(ValueError):
+        policy_code(3)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_record_span_plus_decode_matches_read(fmt, tmpfs):
+    man, recs, _ = _dataset(tmpfs, fmt, tag="_span")
+    with open_dataset(tmpfs, man, block_kb=4) as r:
+        for i in (0, 1, 23, 47):
+            fi, off, size = r.record_span(i)
+            assert size > 0
+            span = r.fetch(BlockRead(fi, off, size))
+            assert r.decode_span(i, fi, off, span) == recs[i]
+            assert r.read(i) == recs[i]
+
+
+def test_block_plan_coalesces_and_dedups(tmpfs):
+    man, _, codec = _dataset(tmpfs, "packed", tag="_plan")
+    with open_dataset(tmpfs, man, block_kb=4) as r:
+        # sequential indices coalesce into one contiguous read
+        plan = r.block_plan(range(48))
+        assert len(plan) == 1
+        assert plan[0].offset == 0
+        assert plan[0].offset % 4096 == 0
+        # duplicate indices plan each block once
+        assert r.block_plan([3, 3, 3]) == r.block_plan([3])
+        # every planned block is aligned to the block size
+        for br in r.block_plan([0, 17, 44]):
+            assert br.offset % 4096 == 0
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_read_batch_byte_identity(fmt, tmpfs):
+    man, recs, _ = _dataset(tmpfs, fmt, tag="_batch")
+    with open_dataset(tmpfs, man, block_kb=4) as r:
+        idx = [5, 2, 2, 47, 0, 31]
+        assert r.read_batch(idx) == [recs[i] for i in idx]
+
+
+def test_assemble_span_crosses_block_boundaries():
+    blob = bytes(range(256)) * 4  # 1 KiB
+    bs = 64
+
+    def get_block(fi, boff):
+        return blob[boff:boff + bs]
+
+    for off, size in ((0, 10), (60, 10), (63, 129), (0, len(blob))):
+        assert assemble_span(get_block, 0, off, size, bs) == blob[off:off + size]
+
+
+# ------------------------------------------------------- policy equivalence
+
+def _pipe(tmpfs, man, seq_len, **kw):
+    reader = open_dataset(tmpfs, man, block_kb=kw.pop("block_kb", 4))
+    cfg = PipelineConfig(batch_size=8, seed=3, **kw)
+    return DataPipeline.from_reader(reader, seq_len, cfg), reader
+
+
+def _collect(pipe, epoch=0, start_step=0):
+    out = list(pipe.iter_epoch(epoch, start_step=start_step))
+    return [b.copy() for b in out]
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("shuffle", [True, False])
+def test_policy_equivalence_and_restart(fmt, shuffle, tmpfs):
+    """3 policies x 4 formats x shuffle on/off x mid-epoch resume: identical
+    batch streams everywhere."""
+    man, _, _ = _dataset(tmpfs, fmt, tag="_eq")
+    ref = None
+    for policy in PREFETCH_POLICIES:
+        pipe, reader = _pipe(tmpfs, man, 32, shuffle=shuffle,
+                             prefetch_policy=policy, lookahead_batches=4,
+                             cache_budget_mb=1.0, num_workers=2)
+        full = _collect(pipe)
+        resumed = _collect(pipe, start_step=2)
+        stats = pipe.prefetch_stats()
+        pipe.close()
+        reader.close()
+        if ref is None:
+            ref = full
+        assert len(full) == pipe.steps_per_epoch()
+        for a, b in zip(full, ref):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(resumed, ref[2:]):
+            np.testing.assert_array_equal(a, b)
+        if policy == "clairvoyant":
+            assert stats is not None and stats["hits"] > 0
+
+
+def test_zipf_access_is_restart_exact(tmpfs):
+    man, _, _ = _dataset(tmpfs, "packed", tag="_zipf")
+    streams = []
+    for policy in ("off", "clairvoyant"):
+        pipe, reader = _pipe(tmpfs, man, 32, access="zipf",
+                             prefetch_policy=policy, cache_budget_mb=1.0)
+        order = pipe.epoch_order(1)
+        assert order.shape[0] == 48
+        assert len(set(order.tolist())) < 48  # hot set repeats records
+        streams.append(_collect(pipe, epoch=1))
+        pipe.close()
+        reader.close()
+    for a, b in zip(*streams):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_reconfigure_mid_epoch_no_dup_no_drop(tmpfs):
+    """Switching policy (and knobs) mid-epoch changes mechanics only: the
+    remaining batches continue exactly where the stream left off."""
+    man, _, _ = _dataset(tmpfs, "packed", tag="_mid")
+    pipe, reader = _pipe(tmpfs, man, 32, prefetch_policy="off")
+    ref = _collect(pipe)
+    got = []
+    it = pipe.iter_epoch(0)
+    for s, batch in enumerate(it):
+        got.append(batch.copy())
+        if s == 1:
+            pipe.reconfigure(prefetch_policy="clairvoyant",
+                             lookahead_batches=2, cache_budget_mb=1.0)
+        elif s == 3:
+            pipe.reconfigure(prefetch_policy=0)  # numeric code for "off"
+    assert len(got) == len(ref)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+    pipe.close()
+    reader.close()
+
+
+def test_reconfigure_rejects_unknown_knobs(tmpfs):
+    man, _, _ = _dataset(tmpfs, "packed", tag="_knob")
+    pipe, reader = _pipe(tmpfs, man, 32)
+    with pytest.raises(ValueError, match="unknown pipeline knob"):
+        pipe.reconfigure(prefetch_dept=4)  # typo must surface, not no-op
+    cfg = pipe.reconfigure(prefetch_policy=2)
+    assert cfg.prefetch_policy == "clairvoyant"
+    with pytest.raises(ValueError, match="prefetch_policy"):
+        pipe.reconfigure(prefetch_policy="eager")
+    pipe.close()
+    reader.close()
+
+
+def test_block_kb_reconfigure_drops_stale_prefetcher(tmpfs):
+    man, _, _ = _dataset(tmpfs, "packed", tag="_bkb")
+    pipe, reader = _pipe(tmpfs, man, 32, prefetch_policy="clairvoyant",
+                         cache_budget_mb=1.0)
+    first = pipe.fetch_batch(0, 0)
+    before = _collect(pipe)
+    assert pipe.prefetch_stats() is not None
+    pipe.reconfigure(block_kb=8)
+    assert pipe.prefetch_stats() is None  # stale plan granularity dropped
+    assert reader.block_kb == 8
+    after = _collect(pipe)
+    np.testing.assert_array_equal(first, after[0])
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    pipe.close()
+    reader.close()
+
+
+# ---------------------------------------------------------------- the cache
+
+def test_block_cache_schedule_aware_eviction():
+    c = BlockCache(budget_bytes=25)  # holds two 10-byte blocks
+    c.put((0, 0), b"B" * 10, last_use=5)   # LRU-oldest but still scheduled
+    c.put((0, 10), b"A" * 10, last_use=1)  # expired once pos > 1
+    c.pos = 3
+    c.put((0, 20), b"C" * 10, last_use=6)
+    # plain LRU would evict B (oldest); schedule-aware evicts expired A
+    assert (0, 0) in c and (0, 20) in c
+    assert (0, 10) not in c
+    assert c.evicted == 1 and c.expired_evictions == 1
+    # with nothing expired, fall back to LRU order
+    c.put((0, 30), b"D" * 10, last_use=9)
+    assert (0, 0) not in c
+    assert c.evicted == 2 and c.expired_evictions == 1
+    assert c.nbytes <= 25
+
+
+def test_block_cache_keeps_one_over_budget_entry():
+    c = BlockCache(budget_bytes=4)
+    c.put((0, 0), b"x" * 64, last_use=0)
+    assert len(c) == 1 and c.get((0, 0)) == b"x" * 64
+
+
+def test_prefetcher_reconfigure_shrinks_cache(tmpfs):
+    man, _, _ = _dataset(tmpfs, "packed", n=64, tag="_shrink")
+    reader = open_dataset(tmpfs, man, block_kb=1)
+    pipe = DataPipeline.from_reader(
+        reader, 32, PipelineConfig(batch_size=8, seed=0, block_kb=1,
+                                   prefetch_policy="clairvoyant"))
+    pf = ClairvoyantPrefetcher(reader, pipe, lookahead_batches=8,
+                               cache_budget_mb=1.0, workers=1)
+    for s in range(4):
+        pf.advance(0, s)
+        for i in pipe.batch_indices(0, s):
+            pf.read_record(int(i))
+    assert len(pf.cache) > 1
+    pf.reconfigure(cache_budget_mb=1e-6)  # ~1 byte: evict down to one entry
+    assert len(pf.cache) == 1
+    assert pf.stats()["evicted"] > 0
+    pf.close()
+    pipe.close()
+    reader.close()
+
+
+# ------------------------------------------------------- features / knobs
+
+def test_autotune_feature_names_extend_paper_spec():
+    assert AUTOTUNE_FEATURE_NAMES[: len(FEATURE_NAMES)] == FEATURE_NAMES
+    for knob in ("prefetch_policy", "lookahead_batches", "cache_budget_mb"):
+        assert knob in AUTOTUNE_FEATURE_NAMES
+        assert knob in KNOB_NAMES
+        assert knob not in FEATURE_NAMES  # the paper's 11 stay untouched
+
+
+def test_telemetry_features_export_prefetch_knobs():
+    t = StepTelemetry()
+    with t.data_wait():
+        pass
+    with t.compute():
+        pass
+    t.record_batch(8, 1024)
+    f = t.features(batch_size=8, num_workers=2, block_kb=16,
+                   prefetch_policy="clairvoyant", lookahead_batches=4,
+                   cache_budget_mb=32.0)
+    assert f["prefetch_policy"] == 2  # numeric code in feature rows
+    assert f["lookahead_batches"] == 4
+    assert f["cache_budget_mb"] == 32.0
+
+
+def test_default_config_space_grid_unchanged():
+    """The new knobs are single-valued by default: the paper's 1,800-config
+    grid must not grow underneath existing campaigns."""
+    assert ConfigSpace().n_candidates == 1800
+
+
+def test_prefetch_campaign_registered():
+    camp = get_campaign("prefetch")
+    for fast in (True, False):
+        cases = camp.cases(fast)
+        assert cases
+        ids = [c.id for c in cases]
+        assert len(ids) == len(set(ids))  # resume/shard keys must be unique
+        assert {c.prefetch_policy for c in cases} == set(PREFETCH_POLICIES)
+        assert all(c.bench_type == "pipeline" for c in cases)
+        assert any(c.n_hosts == 2 for c in cases)  # sharded-epoch coverage
+        assert any(c.access == "zipf" for c in cases)
+    full = camp.cases(False)
+    assert {c.backend for c in full} == {"network_sim", "object_sim"}
+
+
+def test_autotuner_recommends_clairvoyant_when_it_wins():
+    """Regression: the online tuner must rank/learn the new knobs — fed a
+    run where clairvoyant wins, decide() proposes it."""
+    space = ConfigSpace(batch_size=(32,), num_workers=(0,), block_kb=(16,),
+                        n_threads=(1,), prefetch_depth=(2,),
+                        prefetch_policy=(0, 1, 2))
+    tuner = OnlineAutotuner(space=space, refit_every=3, min_observations=6,
+                            min_config_diversity=3, gain_threshold=0.10)
+    assert tuner._varied_knobs == ("prefetch_policy",)
+    rng = np.random.default_rng(0)
+    throughput = {0: 40.0, 1: 55.0, 2: 220.0}
+    for rep in range(4):
+        for code, mbs in throughput.items():
+            feats = {"prefetch_policy": code, "file_size_mb": 12.0,
+                     "n_samples": 0.0}
+            tuner.observe(feats, mbs * (1.0 + 0.02 * rng.standard_normal()))
+    assert tuner.maybe_refit()
+    context = {"prefetch_policy": 1, "file_size_mb": 12.0, "n_samples": 0.0,
+               "throughput_mb_s": throughput[1]}
+    ranked = tuner.ranked(context, top_k=3)
+    assert ranked and ranked[0]["prefetch_policy"] == 2
+    current = {"batch_size": 32, "num_workers": 0, "block_kb": 16,
+               "n_threads": 1, "prefetch_depth": 2, "prefetch_policy": 1}
+    decision = tuner.decide(current, context)
+    assert decision.reconfigure
+    assert decision.config["prefetch_policy"] == 2
+    assert decision.predicted_gain > 0.5

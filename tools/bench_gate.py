@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Bench regression gate: compare a fresh ``make bench-fast`` run against the
 committed ``BENCH_fit.json`` / ``BENCH_loop.json`` / ``BENCH_fleet.json`` /
-``BENCH_serve.json``.
+``BENCH_serve.json`` / ``BENCH_pipeline.json``.
 
 The committed artifacts were produced on a different machine than CI, so raw
 timings are not directly comparable.  The gate is *schema-aware* and
@@ -45,7 +45,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # (artifact file, loader producing {key: (fresh_value, committed_value)} plus
 # hard failures) — one comparator per artifact schema.
 ARTIFACTS = ("BENCH_fit.json", "BENCH_loop.json", "BENCH_fleet.json",
-             "BENCH_serve.json")
+             "BENCH_serve.json", "BENCH_pipeline.json")
 
 # The rows a fast (`make bench-fast`) run is REQUIRED to produce.  A fresh
 # run missing one of these means a benchmark silently stopped running —
@@ -68,6 +68,14 @@ EXPECTED_SERVE_CLIENTS = (1, 8, 32)
 # 32 concurrent clients, micro-batched scoring must deliver >= 2x the QPS of
 # the unbatched baseline on at least one endpoint (and never lose on any).
 MIN_COMMITTED_SERVE_SPEEDUP_C32 = 2.0
+# Every (backend, workers, policy) stall row the fast pipeline bench must
+# produce; the clairvoyant prefetcher's headline claim, enforced on the
+# COMMITTED artifact: on at least one simulated-storage case, walking the
+# known epoch schedule ahead must cut stall time >= 1.5x vs depth prefetch.
+EXPECTED_FAST_PIPELINE_KEYS = tuple(
+    f"network_sim.w1.{p}" for p in ("off", "depth", "clairvoyant")
+)
+MIN_COMMITTED_PIPELINE_STALL_REDUCTION = 1.5
 # Data-integrity counters: nonzero anywhere in an artifact is a hard failure
 # (the run measured corrupt/quarantined data); absent keys pass (artifacts
 # recorded before the counters existed).
@@ -308,6 +316,68 @@ class Gate:
             )
         self.compare_timings("serve", pairs)
 
+    def check_pipeline(self, fresh: dict, committed: dict) -> None:
+        def by_key(art: dict) -> dict:
+            return {c.get("key"): c for c in (art.get("cases") or [])}
+
+        fcases, ccases = by_key(fresh), by_key(committed)
+        pairs: Dict[str, Tuple[float, float]] = {}
+        for key in EXPECTED_FAST_PIPELINE_KEYS:
+            frow = fcases.get(key)
+            if frow is None:
+                self.hard_fail(
+                    f"pipeline: fast run is required to measure {key} but "
+                    f"did not (policy row silently dropped?)"
+                )
+                continue
+            stall = frow.get("stall_s")
+            if not (isinstance(stall, (int, float)) and math.isfinite(stall)
+                    and stall >= 0):
+                self.hard_fail(f"pipeline: {key} fresh stall_s is {stall!r}")
+            mbs = frow.get("delivered_mb_s")
+            if not (isinstance(mbs, (int, float)) and math.isfinite(mbs)
+                    and mbs > 0):
+                self.hard_fail(
+                    f"pipeline: {key} fresh delivered_mb_s is {mbs!r}")
+        for key, crow in ccases.items():
+            frow = fcases.get(key)
+            if frow is None:
+                continue  # full-run-only cases (object_sim, 4 workers)
+            if crow.get("policy") == "clairvoyant":
+                # clairvoyant stalls are near-constant residue, not
+                # workload-proportional: the fast run's shorter measure
+                # window skews their ratio off the machine factor.  The
+                # stall_reduction floor below is their gate.
+                self.skipped += 1
+                continue
+            fs, cs = frow.get("stall_s"), crow.get("stall_s")
+            if isinstance(fs, (int, float)) and isinstance(cs, (int, float)) \
+                    and fs > 0 and cs > 0:
+                pairs[f"{key}.stall"] = (fs, cs)
+
+        # the headline clairvoyant claim is enforced on the committed artifact
+        # (same-machine numbers: no calibration caveats apply)
+        creds = [v for v in (committed.get("stall_reduction") or {}).values()
+                 if isinstance(v, (int, float)) and math.isfinite(v)]
+        best = max(creds, default=None)
+        if best is None or best < MIN_COMMITTED_PIPELINE_STALL_REDUCTION:
+            self.hard_fail(
+                f"pipeline: committed clairvoyant-vs-depth stall reduction "
+                f"peaks at {best} — below the required "
+                f"{MIN_COMMITTED_PIPELINE_STALL_REDUCTION}x"
+            )
+        # fresh reductions vary with runner load: regression-flag, don't fail
+        freds = [v for v in (fresh.get("stall_reduction") or {}).values()
+                 if isinstance(v, (int, float)) and math.isfinite(v)]
+        fbest = max(freds, default=None)
+        if fbest is not None and fbest < 1.2:
+            self.soft.append(
+                f"pipeline: fresh clairvoyant-vs-depth stall reduction "
+                f"peaked at {fbest}x (committed artifact promises "
+                f">={MIN_COMMITTED_PIPELINE_STALL_REDUCTION}x)"
+            )
+        self.compare_timings("pipeline", pairs)
+
 
 def run_gate(
     fresh_dir: pathlib.Path,
@@ -321,6 +391,7 @@ def run_gate(
         "BENCH_loop.json": gate.check_loop,
         "BENCH_fleet.json": gate.check_fleet,
         "BENCH_serve.json": gate.check_serve,
+        "BENCH_pipeline.json": gate.check_pipeline,
     }
     for name in ARTIFACTS:
         committed_path = repo_root / name
