@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_FAST_DIR ?= /tmp/repro_io/bench_fast
 BENCH_GATE_FLAGS ?=
 
-.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke prefetch-smoke chaos-smoke docs-check dev-deps
+.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke prefetch-smoke chaos-smoke transfer-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
@@ -54,6 +54,12 @@ chaos-smoke:  ## chaos-equivalence: fleet under seeded fault injection vs clean 
 	cmp /tmp/repro_io/chaos_smoke/clean/merged.jsonl /tmp/repro_io/chaos_smoke/chaos/merged.jsonl
 	$(PYTHON) -m repro.service.fleet --status --out-dir /tmp/repro_io/chaos_smoke/chaos
 	$(PYTHON) -m repro.service.serve --smoke --chaos-seed 123
+
+transfer-smoke:  ## leave-one-backend-out harness (fast) + one k=5 calibration curve
+	$(PYTHON) -m repro.core.transfer --fast --k 0 5 \
+	    --out /tmp/repro_io/transfer_smoke/report.json
+	$(PYTHON) -m repro.core.transfer --fast --n-per-backend 32 \
+	    --models linear ridge --k 0 5 --json > /dev/null
 
 docs-check:  ## docs CLI references + intra-repo links (tools/docs_check.py)
 	$(PYTHON) tools/docs_check.py

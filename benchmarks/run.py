@@ -5,7 +5,7 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--only GROUP]
        [--artifact-dir DIR]
 
 ``--artifact-dir`` makes the artifact-writing groups (fit/loop/fleet/serve/
-pipeline) emit
+pipeline/transfer) emit
 their CI-sized JSON artifacts there even in ``--fast`` mode — the input of
 the bench regression gate (``tools/bench_gate.py``).  Any group that raises
 marks the whole run failed (non-zero exit), so CI cannot green-light a run
@@ -38,6 +38,7 @@ def main(argv=None) -> None:
     from . import pipeline_bench
     from . import roofline
     from . import serve_bench
+    from . import transfer_bench
 
     groups = {
         "fit": fit_bench.bench_fit,
@@ -45,6 +46,7 @@ def main(argv=None) -> None:
         "loop": loop_bench.bench_loop,
         "pipeline": pipeline_bench.bench_pipeline,
         "serve": serve_bench.bench_serve,
+        "transfer": transfer_bench.bench_transfer,
         "dataset": pe.bench_dataset,
         "campaign": pe.bench_campaign,
         "pca": pe.bench_pca,

@@ -1,0 +1,80 @@
+"""Cross-backend transfer benchmark: zero-shot vs few-shot calibrated error.
+
+Runs the leave-one-backend-out harness (``repro.core.transfer``) on the
+synthetic four-backend transfer track and reports, per held-out backend,
+the zero-shot MAPE of the calibration model and the k-shot learning curve.
+The artifact's headline number is the k<=25 calibration MAPE reduction per
+fold: an affine residual correction fitted from a handful of observations
+must repair most of the scale error a model trained on the *other* backends
+makes on a backend it has never seen.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only transfer``.  The
+full run writes ``BENCH_transfer.json`` at the repo root so the calibration
+claim is tracked across PRs (``tools/bench_gate.py`` enforces a floor on the
+committed reduction); ``--fast`` keeps it CI-sized (72 rows/backend, three
+models) while still covering all four simulated backends, so every fold the
+gate expects exists in both modes.
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import List, Tuple
+
+from ._util import emit_artifact
+
+Row = Tuple[str, float, str]
+
+ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_transfer.json"
+
+
+def bench_transfer(fast: bool, artifact_dir=None) -> List[Row]:
+    from repro.core.transfer import (
+        DEFAULT_KS,
+        evaluate_transfer,
+        synthetic_transfer_observations,
+    )
+
+    n_per_backend = 72 if fast else 160
+    models = ("linear", "ridge", "xgboost") if fast else None  # None = full zoo
+    ks = (0, 5, 25) if fast else DEFAULT_KS
+
+    obs, groups = synthetic_transfer_observations(
+        n_per_backend=n_per_backend, seed=0)
+    timings: dict = {}
+    report = evaluate_transfer(
+        obs, groups, models=models, ks=ks, seed=0, timings=timings)
+
+    art = {
+        "schema": 1,
+        "metric": "leave-one-backend-out MAPE, zero-shot vs k-shot affine "
+                  "calibration, per held-out backend",
+        "n_per_backend": n_per_backend,
+        # the harness report is deterministic; wall-clock lives outside it
+        "report": report,
+        "fold_seconds": {g: round(t, 6) for g, t in sorted(timings.items())},
+        "mape_reduction_k25": {
+            g: f["calibration"]["mape_reduction_k25"]
+            for g, f in report["folds"].items()
+        },
+        "max_mape_reduction_k25": report["max_mape_reduction_k25"],
+    }
+
+    rows: List[Row] = []
+    for gname, fold in report["folds"].items():
+        zero = fold["calibration"]["curve"]["k0"]["mape"]
+        red = fold["calibration"]["mape_reduction_k25"]
+        rows.append((
+            f"transfer_{gname}", timings.get(gname, 0.0) * 1e6,
+            f"zero_shot_mape={zero:.1f}% reduction_k25={red}x",
+        ))
+    rows.append((
+        "transfer_mape_reduction", 0.0,
+        f"calibrated_vs_zero_shot_max={art['max_mape_reduction_k25']}x",
+    ))
+
+    row = emit_artifact(art, "BENCH_transfer.json", fast, artifact_dir,
+                        ARTIFACT, "transfer_artifact")
+    if row:
+        rows.append(row)
+    return rows

@@ -16,6 +16,9 @@ import numpy as np
 __all__ = [
     "FEATURE_NAMES",
     "AUTOTUNE_FEATURE_NAMES",
+    "HOST_PROFILE_FEATURE_NAMES",
+    "TRANSFER_FEATURE_NAMES",
+    "transfer_spec",
     "FeatureSpec",
     "log1p_transform",
     "expm1_inverse",
@@ -49,6 +52,27 @@ AUTOTUNE_FEATURE_NAMES = FEATURE_NAMES + (
     "lookahead_batches",
     "cache_budget_mb",
 )
+
+# Host-profile features (``core/transfer.py``): who measured a row, not what
+# was measured.  Derived per storage backend / host from fleet provenance and
+# baseline microbench fingerprints, and appended to the paper spec so one
+# model can be trained across heterogeneous backends and evaluated
+# leave-one-backend-out.  ``backend_class`` is the numeric backend code
+# (``transfer.BACKEND_CLASSES``).
+HOST_PROFILE_FEATURE_NAMES = (
+    "backend_class",
+    "host_cpu_count",
+    "host_page_cache_mb",
+    "baseline_read_mb_s",
+    "baseline_write_mb_s",
+)
+
+TRANSFER_FEATURE_NAMES = FEATURE_NAMES + HOST_PROFILE_FEATURE_NAMES
+
+
+def transfer_spec() -> "FeatureSpec":
+    """The cross-backend spec: paper features + host-profile columns."""
+    return FeatureSpec(names=TRANSFER_FEATURE_NAMES)
 
 
 @dataclasses.dataclass(frozen=True)

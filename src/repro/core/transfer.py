@@ -1,0 +1,734 @@
+"""Cross-backend transfer: leave-one-backend-out evaluation + few-shot
+residual calibration.
+
+The paper's 0.991 R² is an *in-distribution* number: train and test rows come
+from the same host and the same storage backends.  The question that makes
+the predictor useful at fleet scale is generalization — train on one storage
+backend/host profile, predict on another (PAPERS.md's *ML-based Modeling to
+Predict I/O Performance on Different Storage Sub-systems*).  This module
+answers it three ways:
+
+1. **Host-profile features** (``features.HOST_PROFILE_FEATURE_NAMES``): who
+   measured a row, not what was measured — backend class, cpu count,
+   page-cache size, and baseline read/write microbench fingerprints.  They
+   are appended to the paper's 11-feature spec (``features.transfer_spec``)
+   so one model can be trained across heterogeneous backends.
+2. **A leave-one-group-out harness** (:func:`evaluate_transfer`): hold out
+   every backend (or host) in turn, fit the model zoo on the rest, and
+   report per-held-out-group R²/MAPE — the honest transfer counterpart of
+   the in-distribution CV in ``predictor.evaluate_zoo``.
+3. **Few-shot calibration** (:class:`AffineCalibrator`,
+   :class:`ResidualGBTCalibrator`): a residual correction fitted from
+   ``k ≪ 100`` observations on the new backend, swept over
+   ``k ∈ {0, 5, 10, 25, 50}`` to show dozens of rows recover most of the
+   in-distribution accuracy.  Tree ensembles cannot extrapolate beyond the
+   throughput range they were trained on, so a never-seen backend's
+   predictions are off by roughly a multiplicative factor — which is exactly
+   what an affine correction in log1p space removes.  An affine map with
+   ``a > 0`` is monotone, so calibration changes *absolute* predictions
+   without reordering a ranked recommendation list.
+
+Reports are **deterministic**: same inputs + seed → byte-identical
+``json.dumps(report, sort_keys=True)``.  Wall-clock timings are therefore
+returned out-of-band (the ``timings`` argument), never inside the report.
+
+CLI::
+
+    python -m repro.core.transfer --fast                 # synthetic track
+    python -m repro.core.transfer --records merged.jsonl # real campaign rows
+    python -m repro.core.transfer --group host --k 0 5 25
+
+The synthetic track (:func:`synthetic_transfer_observations`) is a
+deterministic backend-heterogeneous dataset modeled on the four shipped
+storage tiers — the fixture behind ``tests/test_transfer.py``,
+``make transfer-smoke`` and ``BENCH_transfer.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import sys
+import time
+import zlib
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .features import (
+    FEATURE_NAMES,
+    HOST_PROFILE_FEATURE_NAMES,
+    TARGET_NAME,
+    TRANSFER_FEATURE_NAMES,
+    FeatureSpec,
+    expm1_inverse,
+    log1p_transform,
+    transfer_spec,
+)
+from .metrics import pct_errors, r2_score
+from .predictor import MODEL_ZOO, make_model
+
+__all__ = [
+    "BACKEND_CLASSES",
+    "HostProfile",
+    "default_profiles",
+    "profile_for_backend",
+    "measure_host_profile",
+    "synthetic_transfer_observations",
+    "SYNTHETIC_BACKENDS",
+    "observations_from_records",
+    "group_folds",
+    "AffineCalibrator",
+    "ResidualGBTCalibrator",
+    "make_calibrator",
+    "evaluate_transfer",
+    "format_report",
+    "DEFAULT_KS",
+    "main",
+]
+
+# Numeric backend codes for the ``backend_class`` feature.  Unknown backends
+# get a stable crc32-derived code >= 4 (stable across processes, unlike
+# ``hash()``), so a new storage tier never collides with the shipped four.
+BACKEND_CLASSES = {"tmpfs": 0, "disk": 1, "network_sim": 2, "object_sim": 3}
+
+DEFAULT_KS = (0, 5, 10, 25, 50)
+
+
+def backend_class(name: str) -> int:
+    known = BACKEND_CLASSES.get(name)
+    if known is not None:
+        return known
+    return 4 + zlib.crc32(str(name).encode()) % 96
+
+
+@dataclasses.dataclass(frozen=True)
+class HostProfile:
+    """Host-profile fingerprint of one (host, backend) measurement context.
+
+    ``baseline_read_mb_s``/``baseline_write_mb_s`` are single-stream
+    microbench fingerprints — what this backend delivers for a plain
+    sequential transfer, before any pipeline/knob effects."""
+
+    backend: str
+    backend_class: int
+    cpu_count: int = 1
+    page_cache_mb: float = 0.0
+    baseline_read_mb_s: float = 0.0
+    baseline_write_mb_s: float = 0.0
+
+    def as_features(self) -> Dict[str, float]:
+        """The ``HOST_PROFILE_FEATURE_NAMES`` columns for this profile."""
+        return {
+            "backend_class": float(self.backend_class),
+            "host_cpu_count": float(self.cpu_count),
+            "host_page_cache_mb": float(self.page_cache_mb),
+            "baseline_read_mb_s": float(self.baseline_read_mb_s),
+            "baseline_write_mb_s": float(self.baseline_write_mb_s),
+        }
+
+
+# Calibrated default fingerprints for the four shipped tiers (read, write,
+# per-op latency in ms).  Machine-independent on purpose: the deterministic
+# synthetic track and record evaluation on machines that never ran a
+# microbench both key off these; ``measure_host_profile`` replaces them with
+# measured numbers when asked.
+_DEFAULT_FINGERPRINTS = {
+    "tmpfs": (5200.0, 4600.0, 0.0),
+    "disk": (1750.0, 1150.0, 0.05),
+    "network_sim": (1040.0, 960.0, 1.0),
+    "object_sim": (330.0, 290.0, 8.0),
+}
+
+_SYNTH_LATENCY_MS = {name: lat for name, (_, _, lat) in
+                     _DEFAULT_FINGERPRINTS.items()}
+
+SYNTHETIC_BACKENDS = ("tmpfs", "disk", "network_sim", "object_sim")
+
+_DEFAULT_CPU = 8
+_DEFAULT_PAGE_CACHE_MB = 4096.0
+
+
+def default_profiles() -> Dict[str, HostProfile]:
+    """Deterministic profiles for the shipped backends (no I/O performed)."""
+    return {
+        name: HostProfile(
+            backend=name,
+            backend_class=backend_class(name),
+            cpu_count=_DEFAULT_CPU,
+            page_cache_mb=_DEFAULT_PAGE_CACHE_MB,
+            baseline_read_mb_s=read,
+            baseline_write_mb_s=write,
+        )
+        for name, (read, write, _lat) in _DEFAULT_FINGERPRINTS.items()
+    }
+
+
+def profile_for_backend(
+    name: str, profiles: Optional[Dict[str, HostProfile]] = None
+) -> HostProfile:
+    """Profile for ``name``, synthesizing a zeroed one for unknown backends
+    (stable ``backend_class``, zero fingerprints: "never measured")."""
+    profiles = profiles if profiles is not None else default_profiles()
+    prof = profiles.get(name)
+    if prof is not None:
+        return prof
+    return HostProfile(backend=name, backend_class=backend_class(name))
+
+
+def _page_cache_mb() -> float:
+    """Best-effort page-cache size from /proc/meminfo (0.0 when unreadable)."""
+    try:
+        for line in pathlib.Path("/proc/meminfo").read_text().splitlines():
+            if line.startswith("Cached:"):
+                return float(line.split()[1]) / 1024.0
+    except (OSError, ValueError, IndexError):
+        pass
+    return 0.0
+
+
+def measure_host_profile(backend, size_mb: float = 2.0,
+                         block_kb: int = 256, seed: int = 0) -> HostProfile:
+    """Measured fingerprint: time one sequential write + read on ``backend``.
+
+    ``backend`` is a ``repro.data.storage.StorageBackend``.  The probe is a
+    few MB on purpose — a fingerprint, not a benchmark — so fleet collectors
+    can afford one per (host, backend) at startup."""
+    rng = np.random.default_rng(seed)
+    block = int(block_kb) * 1024
+    n_blocks = max(1, int(size_mb * 1024 * 1024) // block)
+    payload = rng.integers(0, 256, size=block, dtype=np.uint8).tobytes()
+    path = backend.path(f"hostprofile_{seed}.bin")
+    t0 = time.perf_counter()
+    with open(path, "wb") as f:
+        for _ in range(n_blocks):
+            f.write(payload)
+            backend.charge(block)
+        f.flush()
+        os.fsync(f.fileno())
+    write_s = max(time.perf_counter() - t0, 1e-9)
+    t0 = time.perf_counter()
+    with open(path, "rb") as f:
+        for i in range(n_blocks):
+            backend.read_block(f, i * block, block)
+    read_s = max(time.perf_counter() - t0, 1e-9)
+    path.unlink(missing_ok=True)
+    total_mb = n_blocks * block / 1e6
+    return HostProfile(
+        backend=backend.name,
+        backend_class=backend_class(backend.name),
+        cpu_count=os.cpu_count() or 1,
+        page_cache_mb=round(_page_cache_mb(), 1),
+        baseline_read_mb_s=round(total_mb / read_s, 2),
+        baseline_write_mb_s=round(total_mb / write_s, 2),
+    )
+
+
+# ------------------------------------------------------------------ data
+
+def synthetic_transfer_observations(
+    n_per_backend: int = 96,
+    backends: Sequence[str] = SYNTHETIC_BACKENDS,
+    seed: int = 0,
+    profiles: Optional[Dict[str, HostProfile]] = None,
+) -> Tuple[dict, List[str]]:
+    """Deterministic backend-heterogeneous observations: ``(columns, groups)``.
+
+    Each backend contributes ``n_per_backend`` rows whose target throughput
+    scales with the backend's baseline fingerprint (multiplicative — a pure
+    shift in log space) and suffers a latency penalty interacting with the
+    block size.  Knob effects (workers, batch, threads, block) are shared
+    across backends, so a model trained on three backends has seen the
+    *shape* but not the *scale* of the fourth — the exact failure mode
+    few-shot affine calibration is designed to repair.
+
+    Returns the column dict over ``TRANSFER_FEATURE_NAMES`` +
+    ``target_throughput``, and the parallel per-row backend labels.
+    """
+    profiles = profiles if profiles is not None else default_profiles()
+    rng = np.random.default_rng(seed)
+    cols: Dict[str, List[np.ndarray]] = {n: [] for n in TRANSFER_FEATURE_NAMES}
+    targets: List[np.ndarray] = []
+    groups: List[str] = []
+    n = int(n_per_backend)
+    for name in backends:
+        prof = profile_for_backend(name, profiles)
+        scale = max(prof.baseline_read_mb_s, 1.0)
+        lat_ms = _SYNTH_LATENCY_MS.get(name, 0.0)
+
+        block = rng.choice([16.0, 64.0, 256.0, 1024.0], size=n)
+        workers = rng.choice([1.0, 2.0, 4.0, 8.0], size=n)
+        batch = rng.choice([16.0, 32.0, 64.0, 128.0], size=n)
+        threads = rng.choice([1.0, 2.0, 4.0], size=n)
+        file_mb = rng.choice([64.0, 256.0, 1024.0], size=n)
+        n_samples = rng.choice([200.0, 400.0, 800.0], size=n)
+
+        # shared knob shape x backend-specific scale x latency penalty
+        shape = ((block / 256.0) ** 0.2
+                 * (1.0 + 0.55 * np.log2(workers))
+                 * (batch / 64.0) ** 0.15
+                 * threads ** 0.25)
+        penalty = 1.0 / (1.0 + lat_ms * 64.0 / block)
+        noise = np.exp(rng.normal(0.0, 0.04, size=n))
+        target = 0.35 * scale * shape * penalty * noise
+
+        # measured per-row proxies (noisy, like real probe measurements)
+        single = scale * penalty * np.exp(rng.normal(0.0, 0.05, size=n))
+        iops = single * 1024.0 / block
+        sps = target / batch * 64.0 * np.exp(rng.normal(0.0, 0.1, size=n))
+        load_ratio = np.clip(
+            1.0 / (1.0 + 0.002 * single) + rng.normal(0.0, 0.02, size=n),
+            0.01, 0.99)
+        aggregate = single * workers ** 0.8 * np.exp(
+            rng.normal(0.0, 0.05, size=n))
+
+        per_backend = {
+            "block_kb": block,
+            "file_size_mb": file_mb,
+            "n_samples": n_samples,
+            "throughput_mb_s": single,
+            "iops": iops,
+            "n_threads": threads,
+            "batch_size": batch,
+            "samples_per_second": sps,
+            "data_loading_ratio": load_ratio,
+            "num_workers": workers,
+            "aggregate_throughput_mb_s": aggregate,
+        }
+        per_backend.update(
+            {k: np.full(n, v) for k, v in prof.as_features().items()})
+        for key in TRANSFER_FEATURE_NAMES:
+            cols[key].append(np.asarray(per_backend[key], np.float64))
+        targets.append(target)
+        groups.extend([name] * n)
+    observations = {k: np.concatenate(v) for k, v in cols.items()}
+    observations[TARGET_NAME] = np.concatenate(targets)
+    return observations, groups
+
+
+def observations_from_records(
+    records: Iterable[dict],
+    profiles: Optional[Dict[str, HostProfile]] = None,
+    group_key: str = "backend",
+) -> Tuple[dict, List[str]]:
+    """``(columns, groups)`` from campaign JSONL records.
+
+    Successful rows contribute the 11 paper features (missing keys -> 0,
+    like ``FeatureSpec.row``) plus host-profile columns looked up per
+    backend.  ``group_key`` selects the fold label: ``"backend"`` (the
+    row's storage backend) or ``"host"`` (the collecting host from record
+    provenance — note canonical merges strip ``host``, so leave-one-host-out
+    needs raw shard records)."""
+    profiles = profiles if profiles is not None else default_profiles()
+    rows: List[dict] = []
+    groups: List[str] = []
+    for r in records:
+        if r.get("status") != "ok" or not r.get("row"):
+            continue
+        row = r["row"]
+        backend = str(row.get("backend") or "?")
+        if group_key == "host":
+            groups.append(str(r.get("host") or "?"))
+        else:
+            groups.append(backend)
+        merged = dict(row)
+        merged.update(profile_for_backend(backend, profiles).as_features())
+        rows.append(merged)
+    observations = {
+        name: np.asarray([float(r.get(name, 0.0) or 0.0) for r in rows],
+                         np.float64)
+        for name in TRANSFER_FEATURE_NAMES + (TARGET_NAME,)
+    }
+    return observations, groups
+
+
+def group_folds(groups: Sequence[str]) -> Dict[str, np.ndarray]:
+    """Leave-one-group-out folds: group label -> held-out row indices.
+
+    Disjoint and complete by construction — every row lands in exactly one
+    held-out fold (its own group's) — and deterministically ordered (sorted
+    group labels, ascending indices)."""
+    by_group: Dict[str, List[int]] = {}
+    for i, g in enumerate(groups):
+        by_group.setdefault(str(g), []).append(i)
+    return {g: np.asarray(ix, np.int64) for g, ix in sorted(by_group.items())}
+
+
+# ------------------------------------------------------------ calibration
+
+class AffineCalibrator:
+    """Affine residual correction in log1p space: ``ŷ = a·p + b``.
+
+    ``k = 0`` -> identity (zero-shot); ``k = 1`` (or a degenerate prediction
+    spread) -> offset-only, the pure scale correction; ``k >= 2`` -> least
+    squares, falling back to offset-only if the fitted slope is non-positive
+    (a tiny sample must never invert the prediction ordering — monotone
+    corrections leave ranked recommendations unchanged)."""
+
+    kind = "affine"
+
+    def __init__(self, seed: int = 0):
+        self.a = 1.0
+        self.b = 0.0
+        self.n = 0
+
+    def fit(self, X: np.ndarray, pred_log: np.ndarray, y_log: np.ndarray):
+        p = np.asarray(pred_log, np.float64).ravel()
+        y = np.asarray(y_log, np.float64).ravel()
+        self.n = int(p.size)
+        if p.size == 0:
+            return self
+        if p.size == 1 or float(np.ptp(p)) < 1e-9:
+            self.a, self.b = 1.0, float(np.mean(y - p))
+            return self
+        pm, ym = float(p.mean()), float(y.mean())
+        var = float(np.mean((p - pm) ** 2))
+        cov = float(np.mean((p - pm) * (y - ym)))
+        a = cov / (var + 1e-12)
+        if a <= 0.0:
+            self.a, self.b = 1.0, ym - pm
+        else:
+            self.a, self.b = a, ym - a * pm
+        return self
+
+    def apply(self, X: np.ndarray, pred_log: np.ndarray) -> np.ndarray:
+        return self.a * np.asarray(pred_log, np.float64) + self.b
+
+    def as_dict(self) -> dict:
+        return {"kind": self.kind, "a": round(self.a, 6),
+                "b": round(self.b, 6), "n": self.n}
+
+
+class ResidualGBTCalibrator:
+    """Shallow GBT on residuals ``y_log - pred_log`` over the feature row.
+
+    For larger ``k`` (a few dozen rows) a depth-2 booster picks up
+    knob-dependent residual structure an affine map cannot; below
+    ``min_rows`` it degrades to the affine correction — a handful of rows
+    cannot support tree splits."""
+
+    kind = "gbt"
+
+    def __init__(self, seed: int = 0, n_estimators: int = 24,
+                 max_depth: int = 2, min_rows: int = 16):
+        self.seed = seed
+        self.n_estimators = n_estimators
+        self.max_depth = max_depth
+        self.min_rows = min_rows
+        self.model = None
+        self.affine = AffineCalibrator(seed)
+        self.n = 0
+
+    def fit(self, X: np.ndarray, pred_log: np.ndarray, y_log: np.ndarray):
+        X = np.asarray(X, np.float64)
+        p = np.asarray(pred_log, np.float64).ravel()
+        y = np.asarray(y_log, np.float64).ravel()
+        self.n = int(p.size)
+        self.affine.fit(X, p, y)
+        if p.size >= self.min_rows:
+            from .gbt import GBTConfig, GBTRegressor
+
+            self.model = GBTRegressor(GBTConfig(
+                n_estimators=self.n_estimators, max_depth=self.max_depth,
+                learning_rate=0.3, subsample=1.0, seed=self.seed))
+            self.model.fit(X, y - self.affine.apply(X, p))
+        return self
+
+    def apply(self, X: np.ndarray, pred_log: np.ndarray) -> np.ndarray:
+        out = self.affine.apply(X, pred_log)
+        if self.model is not None:
+            out = out + self.model.predict(np.asarray(X, np.float64))
+        return out
+
+    def as_dict(self) -> dict:
+        return {"kind": self.kind, "n": self.n,
+                "estimators": 0 if self.model is None else self.n_estimators,
+                "affine": self.affine.as_dict()}
+
+
+_CALIBRATORS = {"affine": AffineCalibrator, "gbt": ResidualGBTCalibrator}
+
+
+def make_calibrator(kind: str = "affine", seed: int = 0):
+    try:
+        return _CALIBRATORS[kind](seed=seed)
+    except KeyError:
+        raise ValueError(
+            f"unknown calibrator {kind!r}; choose from {sorted(_CALIBRATORS)}"
+        ) from None
+
+
+# --------------------------------------------------------------- harness
+
+def evaluate_transfer(
+    observations: dict,
+    groups: Sequence[str],
+    models: Optional[Sequence[str]] = None,
+    spec: Optional[FeatureSpec] = None,
+    calibration_model: str = "xgboost",
+    calibrator_kind: str = "affine",
+    ks: Sequence[int] = DEFAULT_KS,
+    seed: int = 0,
+    group_key: str = "backend",
+    engine: Optional[str] = None,
+    timings: Optional[dict] = None,
+) -> dict:
+    """Leave-one-group-out transfer report for the model zoo + calibration
+    learning curve.
+
+    For every distinct group label the harness fits each model on all other
+    groups and scores the held-out group.  The held-out rows are split
+    deterministically (seeded per fold) into a calibration pool of
+    ``max(ks)`` rows and a fixed evaluation set; every ``k`` — including
+    ``k = 0``, the zero-shot baseline — is scored on the *same* evaluation
+    rows, so the learning curve compares like with like.
+
+    The returned report is deterministic: same inputs + ``seed`` give a
+    byte-identical ``json.dumps(report, sort_keys=True)``.  Pass a
+    ``timings`` dict to receive wall-clock seconds per fold out-of-band
+    (they never enter the report).
+    """
+    if spec is None:
+        have_profile = all(n in observations
+                           for n in HOST_PROFILE_FEATURE_NAMES)
+        spec = transfer_spec() if have_profile else FeatureSpec()
+    X = spec.matrix(observations)
+    y_raw = np.asarray(observations[TARGET_NAME], np.float64)
+    y_log = log1p_transform(y_raw)
+    if len(groups) != X.shape[0]:
+        raise ValueError(
+            f"groups length {len(groups)} != n_rows {X.shape[0]}")
+    folds = group_folds(groups)
+    if len(folds) < 2:
+        raise ValueError(
+            "leave-one-group-out needs >= 2 distinct groups, got "
+            f"{sorted(folds)}")
+    model_names = list(models) if models else list(MODEL_ZOO)
+    ks = tuple(sorted({int(k) for k in ks}))
+    if any(k < 0 for k in ks):
+        raise ValueError(f"negative calibration k in {ks}")
+    max_k = max(ks) if ks else 0
+
+    report: dict = {
+        "schema": 1,
+        "group_key": group_key,
+        "seed": int(seed),
+        "ks": list(ks),
+        "n_rows": int(X.shape[0]),
+        "n_features": int(spec.n_features),
+        "models": sorted(set(model_names) | {calibration_model}),
+        "calibration_model": calibration_model,
+        "calibrator": calibrator_kind,
+        "folds": {},
+    }
+    all_idx = np.arange(X.shape[0])
+    in_fold = {g: set(ix.tolist()) for g, ix in folds.items()}
+    for gname, test_idx in folds.items():
+        t_fold = time.perf_counter()
+        mask = np.ones(X.shape[0], bool)
+        mask[test_idx] = False
+        train_idx = all_idx[mask]
+        if train_idx.size == 0:
+            continue
+        # deterministic per-fold calibration/eval split of the held-out rows:
+        # reserve at least a quarter of the fold (>= 1 row) for evaluation
+        rng = np.random.default_rng([int(seed), zlib.crc32(gname.encode())])
+        perm = test_idx[rng.permutation(test_idx.size)]
+        n_calib = min(max_k, test_idx.size - max(1, test_idx.size // 4))
+        n_calib = max(n_calib, 0)
+        calib_pool, eval_idx = perm[:n_calib], perm[n_calib:]
+        ks_eff = [k for k in ks if k <= n_calib]
+        if not ks_eff or ks_eff[0] != 0:
+            ks_eff = [0] + ks_eff
+
+        fold: dict = {
+            "n_train": int(train_idx.size),
+            "n_test": int(test_idx.size),
+            "n_eval": int(eval_idx.size),
+            "n_calib_pool": int(n_calib),
+            "zoo": {},
+        }
+        fitted = {}
+        for name in model_names:
+            m = make_model(name, seed, engine=engine)
+            m.fit(X[train_idx], y_log[train_idx])
+            fitted[name] = m
+            pred = m.predict(X[eval_idx])
+            pe = pct_errors(y_raw[eval_idx], expm1_inverse(pred))
+            fold["zoo"][name] = {
+                "r2": round(r2_score(y_log[eval_idx], pred), 6),
+                "mape": round(pe["mean_pct_err"], 6),
+                "median_ape": round(pe["median_pct_err"], 6),
+            }
+        cal_model = fitted.get(calibration_model)
+        if cal_model is None:
+            cal_model = make_model(calibration_model, seed, engine=engine)
+            cal_model.fit(X[train_idx], y_log[train_idx])
+        pred_eval = cal_model.predict(X[eval_idx])
+
+        curve: dict = {}
+        calibrators: dict = {}
+        for k in ks_eff:
+            if k == 0:
+                corrected = pred_eval
+            else:
+                idx = calib_pool[:k]
+                cal = make_calibrator(calibrator_kind, seed)
+                cal.fit(X[idx], cal_model.predict(X[idx]), y_log[idx])
+                corrected = cal.apply(X[eval_idx], pred_eval)
+                calibrators[f"k{k}"] = cal.as_dict()
+            pe = pct_errors(y_raw[eval_idx], expm1_inverse(corrected))
+            curve[f"k{k}"] = {
+                "mape": round(pe["mean_pct_err"], 6),
+                "median_ape": round(pe["median_pct_err"], 6),
+                "r2": round(r2_score(y_log[eval_idx], corrected), 6),
+            }
+        zero = curve["k0"]["mape"]
+        reductions = {
+            f"k{k}": round(zero / max(curve[f"k{k}"]["mape"], 1e-6), 4)
+            for k in ks_eff if k > 0
+        }
+        small_ks = [k for k in ks_eff if 0 < k <= 25]
+        k_star = max(small_ks) if small_ks else None
+        fold["calibration"] = {
+            "curve": curve,
+            "calibrators": calibrators,
+            "mape_reduction": reductions,
+            "mape_reduction_k25": (
+                reductions[f"k{k_star}"] if k_star is not None else None),
+        }
+        report["folds"][gname] = fold
+        if timings is not None:
+            timings[gname] = time.perf_counter() - t_fold
+
+    reductions_k25 = [
+        f["calibration"]["mape_reduction_k25"]
+        for f in report["folds"].values()
+        if f["calibration"]["mape_reduction_k25"] is not None
+    ]
+    report["max_mape_reduction_k25"] = (
+        max(reductions_k25) if reductions_k25 else None)
+    # a self-check, not an assumption: every row in exactly one held-out fold
+    covered = sum(len(s) for s in in_fold.values())
+    assert covered == X.shape[0], "folds must cover every row exactly once"
+    return report
+
+
+def format_report(report: dict) -> str:
+    """Human-readable per-fold table (deterministic, no timings)."""
+    lines = [
+        f"leave-one-{report['group_key']}-out: {report['n_rows']} rows, "
+        f"{len(report['folds'])} folds, "
+        f"calibration={report['calibration_model']}/{report['calibrator']} "
+        f"k={report['ks']}"
+    ]
+    hdr = (f"{'held-out':16s} {'n_tr':>5s} {'n_ev':>5s} {'best zoo':>14s} "
+           f"{'r2':>7s} {'mape0':>8s} {'mape25':>8s} {'cut':>6s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for gname, fold in sorted(report["folds"].items()):
+        best = min(fold["zoo"].items(), key=lambda kv: kv[1]["mape"])
+        curve = fold["calibration"]["curve"]
+        small = [k for k in report["ks"] if 0 < k <= 25
+                 and f"k{k}" in curve]
+        mape25 = curve[f"k{max(small)}"]["mape"] if small else float("nan")
+        red = fold["calibration"]["mape_reduction_k25"]
+        lines.append(
+            f"{gname:16s} {fold['n_train']:>5d} {fold['n_eval']:>5d} "
+            f"{best[0]:>14s} {best[1]['r2']:>7.3f} "
+            f"{curve['k0']['mape']:>8.1f} {mape25:>8.1f} "
+            f"{'-' if red is None else f'{red:.1f}x':>6s}"
+        )
+    if report.get("max_mape_reduction_k25") is not None:
+        lines.append(
+            f"max few-shot (k<=25) MAPE reduction: "
+            f"{report['max_mape_reduction_k25']:.1f}x")
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------------------ CLI
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.transfer",
+        description="Leave-one-backend-out (or leave-one-host-out) transfer "
+                    "evaluation of the model zoo, with a few-shot residual-"
+                    "calibration learning curve per held-out group.",
+    )
+    ap.add_argument("--records", type=pathlib.Path, nargs="+", default=None,
+                    help="campaign/merged JSONL files to evaluate "
+                         "(default: the deterministic synthetic track)")
+    ap.add_argument("--group", choices=("backend", "host"), default="backend",
+                    help="fold key: leave one backend or one host out")
+    ap.add_argument("--models", nargs="+", default=None,
+                    help="model zoo subset (default: the whole zoo)")
+    ap.add_argument("--model", default="xgboost",
+                    help="model the calibration curve is computed for")
+    ap.add_argument("--calibrator", choices=sorted(_CALIBRATORS),
+                    default="affine", help="residual corrector kind")
+    ap.add_argument("--k", type=int, nargs="+", default=list(DEFAULT_KS),
+                    help="calibration learning-curve sizes (0 = zero-shot)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="model + fold-split seed (reports are deterministic "
+                         "for a fixed seed)")
+    ap.add_argument("--n-per-backend", type=int, default=96,
+                    help="synthetic-track rows per backend")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized: 72 rows/backend, linear+ridge+xgboost")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write the JSON report here (sorted keys)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the JSON report instead of the table")
+    args = ap.parse_args(argv)
+
+    if args.records:
+        missing = [p for p in args.records if not p.exists()]
+        if missing:
+            print(f"error: no such result file: "
+                  f"{', '.join(map(str, missing))}", file=sys.stderr)
+            return 2
+        from ..data.campaign import load_records  # lazy: core must not
+
+        # depend on the data layer at import time
+        records: List[dict] = []
+        for p in args.records:
+            records.extend(load_records(p))
+        observations, groups = observations_from_records(
+            records, group_key=args.group)
+        if not groups:
+            print("error: no successful observation rows in the given "
+                  "records", file=sys.stderr)
+            return 2
+    else:
+        n = min(args.n_per_backend, 72) if args.fast else args.n_per_backend
+        observations, groups = synthetic_transfer_observations(
+            n_per_backend=n, seed=args.seed)
+
+    models = args.models
+    if models is None and args.fast:
+        models = ["linear", "ridge", "xgboost"]
+    try:
+        report = evaluate_transfer(
+            observations, groups, models=models, ks=args.k, seed=args.seed,
+            calibration_model=args.model, calibrator_kind=args.calibrator,
+            group_key=args.group,
+        )
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    payload = json.dumps(report, sort_keys=True, indent=2)
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(payload + "\n")
+    print(payload if args.json else format_report(report))
+    if args.out:
+        print(f"report -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

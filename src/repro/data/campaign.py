@@ -73,6 +73,7 @@ __all__ = [
     "set_fault_hook",
     "summarize",
     "format_summary",
+    "format_backends",
     "simulated_compute",
     "run_pipeline_case",
     "main",
@@ -902,12 +903,32 @@ def summarize(records: Iterable[dict], corrupt_lines: int = 0) -> dict:
             fails[key] = fails.get(key, 0) + 1
             if r.get("status") == "quarantined":
                 n_quarantined += 1
+    backends: Dict[str, dict] = {}
+    for r in latest.values():
+        case = r.get("case", {})
+        b = str(case.get("backend", "?"))
+        agg = backends.setdefault(b, {"rows": 0, "failures": 0,
+                                      "quarantined": 0, "retried": 0})
+        if r.get("status") == "ok" and r.get("row"):
+            agg["rows"] += 1
+            agg["retried"] += int(r.get("retries", 0))
+        else:
+            agg["failures"] += 1
+            if r.get("status") == "quarantined":
+                agg["quarantined"] += 1
+    for agg in backends.values():
+        total = agg["rows"] + agg["failures"]
+        agg["error_rate"] = round(agg["failures"] / total, 6) if total else 0.0
     return {
         "n_ok": n_ok,
         "n_failed": n_err,
         "n_quarantined": n_quarantined,
         "n_retried": n_retried,
         "corrupt_lines": int(corrupt_lines),
+        # per-backend breakdown: makes leave-one-backend-out transfer splits
+        # auditable (docs/transfer.md) — corrupt_lines is file-level and
+        # cannot be attributed to a backend, so it stays a top-level count
+        "backends": {b: backends[b] for b in sorted(backends)},
         "groups": {
             "/".join(k): {
                 "target_throughput_mb_s": _dist(v),
@@ -918,6 +939,28 @@ def summarize(records: Iterable[dict], corrupt_lines: int = 0) -> dict:
         "failed_groups": {"/".join(k): n for k, n in sorted(fails.items())
                           if k not in groups},
     }
+
+
+def format_backends(report: dict) -> str:
+    """Per-backend table for ``summarize --by-backend``: one row per storage
+    backend with row counts, failures, and error rate, so transfer splits
+    (leave-one-backend-out, ``core/transfer.py``) are auditable at a glance.
+    ``corrupt_lines`` is a file-level count and is reported in the header."""
+    head = f"backends={len(report.get('backends', {}))}"
+    if report.get("corrupt_lines"):
+        head += f" corrupt_lines={report['corrupt_lines']} (file-level)"
+    lines = [head]
+    hdr = (f"{'backend':16s} {'rows':>6s} {'failed':>6s} {'quar':>5s} "
+           f"{'retried':>7s} {'err_rate':>8s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for name, agg in report.get("backends", {}).items():
+        lines.append(
+            f"{name:16s} {agg['rows']:>6d} {agg['failures']:>6d} "
+            f"{agg['quarantined']:>5d} {agg['retried']:>7d} "
+            f"{agg['error_rate']:>8.4f}"
+        )
+    return "\n".join(lines)
 
 
 def format_summary(report: dict) -> str:
@@ -993,6 +1036,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_sum.add_argument("--out", type=pathlib.Path, nargs="+", required=True,
                        help="one or more campaign JSONL files (e.g. per-shard)")
     p_sum.add_argument("--json", action="store_true", help="print JSON, not a table")
+    p_sum.add_argument("--by-backend", action="store_true",
+                       help="per-backend breakdown (rows, error rates) instead "
+                            "of the per-group table")
 
     p_merge = sub.add_parser(
         "merge",
@@ -1036,7 +1082,12 @@ def main(argv: Optional[List[str]] = None) -> int:
             records.extend(recs)
             total_corrupt += nc
         report = summarize(records, corrupt_lines=total_corrupt)
-        print(json.dumps(report, indent=2) if args.json else format_summary(report))
+        if args.json:
+            out = report["backends"] if args.by_backend else report
+            print(json.dumps(out, indent=2))
+        else:
+            print(format_backends(report) if args.by_backend
+                  else format_summary(report))
         return 0 if report["n_ok"] and not report["n_failed"] else 1
 
     if args.cmd == "smoke":

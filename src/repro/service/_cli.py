@@ -42,6 +42,10 @@ def add_tuning_args(ap: argparse.ArgumentParser) -> None:
                     help="predicted gain needed to adopt a proposal")
     ap.add_argument("--drift-threshold", type=float, default=0.5,
                     help="median relative error on new rows that forces a refit")
+    ap.add_argument("--calibration-k", type=int, default=25,
+                    help="max rows for the few-shot residual calibration a "
+                         "never-before-seen backend profile triggers instead "
+                         "of a full refit (0 = disable calibration)")
     ap.add_argument("--case-deadline", type=float, default=None,
                     help="per-case wall-clock deadline, seconds (a case "
                          "overrunning it is recorded as a timeout failure; "

@@ -49,6 +49,7 @@ import numpy as np
 
 from ..core.autotune import DEFAULT_SPACE, KNOB_NAMES, ConfigSpace, OnlineAutotuner
 from ..core.features import TARGET_NAME
+from ..core.transfer import AffineCalibrator
 from ..data.campaign import (
     RunContext,
     RunResult,
@@ -62,7 +63,7 @@ from ..data.campaign import (
 )
 from ..data.registry import Campaign
 from ._cli import add_chaos_args, add_tuning_args, chaos_plan_from_args
-from .state import STATE_SCHEMA_VERSION, ZERO_FAULTS, LoopState
+from .state import STATE_SCHEMA_VERSION, ZERO_FAULTS, ZERO_TRANSFER, LoopState
 
 __all__ = ["LoopConfig", "ContinuousTuningLoop", "main", "DEFAULT_LOOP_DIR",
            "add_tuning_args", "config_kwargs_from_args"]
@@ -95,6 +96,11 @@ class LoopConfig:
     max_retries: int = 2                 # transient-failure retries per case
     backoff_s: float = 0.05              # base of the exponential backoff
     quarantine_after: Optional[int] = 3  # permanent failures before quarantine
+    # Cross-backend transfer (docs/transfer.md): a cycle whose rows include a
+    # never-before-seen backend profile triggers a few-shot residual
+    # calibration from at most this many of the new backend's rows INSTEAD of
+    # a full refit that cycle (0 disables calibration entirely).
+    calibration_k: int = 25
 
     def __post_init__(self):
         self.out_dir = pathlib.Path(self.out_dir)
@@ -129,6 +135,8 @@ class ContinuousTuningLoop:
         self._case_order: Optional[dict] = None  # case_id -> campaign position
         self.merge_corrupt_lines = 0    # malformed shard lines at last merge
         self._rejected_keys: set = set()  # keys refused by the refit guard
+        self._known_profiles: set = set()  # backend profiles seen in rows
+        self.calibrators: dict = {}     # backend -> AffineCalibrator
         self.tuner = OnlineAutotuner(
             space=cfg.space,
             refit_every=cfg.refit_every,
@@ -220,6 +228,58 @@ class ContinuousTuningLoop:
             self._log(f"refit guard: rejected {n_rejected} poisoned row(s)")
         return clean, n_rejected
 
+    def _transfer_step(self, cycle_rows: List[dict]) -> dict:
+        """Detect never-before-seen backend profiles in this cycle's rows
+        and few-shot-calibrate for them instead of a full refit.
+
+        A new backend's rows land outside the fitted model's training
+        distribution; tree models cannot extrapolate, so their drift score
+        would force a full refit — on a handful of rows that would mostly
+        relearn what the model already knows.  Instead, an affine residual
+        correction in log1p space is fitted from at most
+        ``cfg.calibration_k`` of the new backend's rows
+        (``core.transfer.AffineCalibrator``) and the scheduled refit is
+        skipped for the cycle.  The correction is monotone, so the ranked
+        recommendation order is unchanged — only absolute predictions move.
+        Returns the cycle record's ``transfer`` provenance block.
+
+        Deterministic replay contract: ``_warm_start`` re-runs this method
+        on exactly the rows the live cycle saw, so a resumed loop rebuilds
+        the same ``_known_profiles`` set, the same calibrators, and the same
+        skipped-refit schedule as the uninterrupted run."""
+        seen = sorted({str(r["backend"]) for r in cycle_rows
+                       if r.get("backend")})
+        new = [b for b in seen if b not in self._known_profiles]
+        self._known_profiles.update(seen)
+        block = {**ZERO_TRANSFER, "new_profiles": new,
+                 "known_profiles": len(self._known_profiles),
+                 "calibrations": {}}
+        if not new or not self.tuner.fitted or self.cfg.calibration_k <= 0:
+            return block
+        n_rows = 0
+        calibrations = {}
+        for backend in new:
+            rows = [r for r in cycle_rows
+                    if str(r.get("backend")) == backend
+                    ][: self.cfg.calibration_k]
+            if not rows:
+                continue
+            preds = np.asarray(
+                [self.tuner.predictor.predict_throughput(r) for r in rows])
+            actual = np.asarray(
+                [float(r.get(TARGET_NAME, 0.0)) for r in rows])
+            cal = AffineCalibrator().fit(
+                None, np.log1p(np.maximum(preds, 0.0)), np.log1p(actual))
+            self.calibrators[backend] = cal
+            calibrations[backend] = cal.as_dict()
+            n_rows += len(rows)
+        if n_rows:
+            block.update(calibrated=True, calibration_rows=n_rows,
+                         calibrations=calibrations)
+            self._log(f"transfer: new backend profile(s) {new} — "
+                      f"calibrated on {n_rows} row(s) instead of refitting")
+        return block
+
     def _repair_shards(self, upto: int) -> int:
         """Re-run failed cases of already-completed cycles.
 
@@ -274,10 +334,15 @@ class ContinuousTuningLoop:
             # is identical no matter how many collectors produced the cycle;
             # the same validation guard as the live path keeps the resumed
             # model identical to the uninterrupted run's
-            clean, _ = self._validate_records(
-                canonical_records(records, self._case_positions()))
+            canon = canonical_records(records, self._case_positions())
+            clean, _ = self._validate_records(canon)
             n += self.tuner.ingest_records(clean)
-            self.tuner.maybe_refit()
+            # replay the transfer step on the same rows the live cycle saw:
+            # a cycle that calibrated instead of refitting must skip the
+            # refit here too, or the resumed model drifts off the original
+            transfer = self._transfer_step(rows_from_records(canon))
+            if not transfer["calibrated"]:
+                self.tuner.maybe_refit()
         for rec in self.state.cycles():
             decision = rec.get("decision") or {}
             if decision.get("explore") and decision.get("config"):
@@ -357,11 +422,17 @@ class ContinuousTuningLoop:
             [r for r in merged if r.get("seed") in seed_set])
 
         # 3. refit: zero-copy ingest of the new rows, drift-aware schedule —
-        # behind the validation guard that refuses poisoned observations
+        # behind the validation guard that refuses poisoned observations.
+        # A cycle whose rows introduce a never-before-seen backend profile
+        # calibrates few-shot instead of refitting (docs/transfer.md).
         clean, n_rejected = self._validate_records(merged)
         n_new = self.tuner.ingest_records(clean)
         t0 = time.perf_counter()
-        refit = self.tuner.maybe_refit()
+        transfer = self._transfer_step(cycle_rows)
+        if transfer["calibrated"]:
+            refit = False  # calibration replaces this cycle's refit
+        else:
+            refit = self.tuner.maybe_refit()
         refit_s = time.perf_counter() - t0
         drift = self.tuner.last_drift
 
@@ -440,6 +511,7 @@ class ContinuousTuningLoop:
                 "rejected_rows": n_rejected,
                 "rollback": rollback,
             },
+            "transfer": transfer,
             "current_config": new_config,
             "elapsed_s": round(time.perf_counter() - t_cycle, 6),
             "host": socket.gethostname(),
@@ -538,6 +610,20 @@ def _format_status(cycles: List[dict], state_corrupt_lines: int = 0) -> str:
         lines.append("faults: " + " ".join(f"{k}={v}" for k, v
                                            in totals.items())
                      + f" rollbacks={rollbacks}")
+    # transfer provenance aggregated over the cycle log (schema v4; older
+    # records upgrade to an all-clear block, so this never KeyErrors)
+    calibrated_cycles = 0
+    calibration_rows = 0
+    profiles: set = set()
+    for r in cycles:
+        t = r.get("transfer") or {}
+        calibrated_cycles += bool(t.get("calibrated"))
+        calibration_rows += int(t.get("calibration_rows", 0))
+        profiles.update(t.get("new_profiles") or [])
+    if calibrated_cycles:
+        lines.append(f"transfer: profiles={len(profiles)} "
+                     f"calibrated_cycles={calibrated_cycles} "
+                     f"calibration_rows={calibration_rows}")
     return "\n".join(lines)
 
 
@@ -551,6 +637,7 @@ def config_kwargs_from_args(args: argparse.Namespace) -> dict:
         min_observations=args.min_observations,
         gain_threshold=args.gain_threshold,
         drift_threshold=args.drift_threshold,
+        calibration_k=args.calibration_k,
         case_deadline_s=args.case_deadline,
         max_retries=args.max_retries,
         quarantine_after=(None if args.quarantine_after <= 0

@@ -8,10 +8,10 @@ carries the cycle's full provenance — seed window, dataset growth, refit and
 recommend latency, drift score, per-host collection stats, and the decision
 taken — so the state file doubles as the loop's audit log.
 
-Record schema (``STATE_SCHEMA_VERSION = 3``)::
+Record schema (``STATE_SCHEMA_VERSION = 4``)::
 
     {
-      "schema_version": 3,
+      "schema_version": 4,
       "cycle": 0,                      # 0-based cycle index (the resume key)
       "status": "ok",
       "campaign": "paper_core",
@@ -40,6 +40,14 @@ Record schema (``STATE_SCHEMA_VERSION = 3``)::
         "retried": 0, "timeouts": 0, "quarantined": 0, "write_retries": 0,
         "corrupt_lines": 0, "rejected_rows": 0, "rollback": false
       },
+      "transfer": {                    # v4 cross-backend provenance
+        "new_profiles": [],            #   backend profiles first seen here
+        "known_profiles": 0,           #   distinct profiles known after cycle
+        "calibrated": false,           #   few-shot calibration ran instead
+                                       #     of a full refit this cycle
+        "calibration_rows": 0,         #   rows consumed by the calibrator(s)
+        "calibrations": {}             #   backend -> affine (a, b) log-space
+      },
       "current_config": {...knobs...}, # config in force AFTER this cycle
       "elapsed_s": 3.2,
       "host": "...", "timestamp": 1780000000.0
@@ -53,6 +61,10 @@ Version 3 adds the ``faults`` provenance block (retry / timeout / quarantine
 / write-retry / corrupt-line / rejected-row counts plus the refit
 ``rollback`` flag — see ``docs/robustness.md``); the v2 -> v3 upgrade
 synthesizes a zeroed block, so pre-hardening state files read as fault-free.
+Version 4 adds the ``transfer`` provenance block (never-before-seen backend
+profiles and the few-shot calibrations they triggered — see
+``docs/transfer.md``); the v3 -> v4 upgrade synthesizes an all-clear block,
+so pre-transfer state files read as "no new profiles ever appeared".
 
 ``LoopState`` dedups by cycle keeping the latest record, tolerating the
 torn-trailing-line artifacts of a killed writer AND of a writer caught
@@ -81,10 +93,11 @@ import threading
 import time
 from typing import Dict, List, Optional, Union
 
-__all__ = ["STATE_SCHEMA_VERSION", "ZERO_FAULTS", "LoopState", "FleetLog",
-           "upgrade_record", "read_complete_records"]
+__all__ = ["STATE_SCHEMA_VERSION", "ZERO_FAULTS", "ZERO_TRANSFER",
+           "LoopState", "FleetLog", "upgrade_record",
+           "read_complete_records"]
 
-STATE_SCHEMA_VERSION = 3
+STATE_SCHEMA_VERSION = 4
 
 # The v3 ``faults`` provenance block, all-clear.  Every cycle record carries
 # one; the v2 -> v3 upgrade synthesizes this for pre-hardening records.
@@ -96,6 +109,17 @@ ZERO_FAULTS = {
     "corrupt_lines": 0,   # malformed shard lines skipped during merge
     "rejected_rows": 0,   # rows the refit validation guard refused to ingest
     "rollback": False,    # did this cycle roll the model back a generation
+}
+
+# The v4 ``transfer`` provenance block, all-clear: no never-before-seen
+# backend profile appeared, so no few-shot calibration ran.  The v3 -> v4
+# upgrade synthesizes this for pre-transfer records.
+ZERO_TRANSFER = {
+    "new_profiles": [],    # backend profiles first seen this cycle
+    "known_profiles": 0,   # distinct profiles known after this cycle
+    "calibrated": False,   # few-shot calibration ran instead of a refit
+    "calibration_rows": 0, # rows consumed by the calibrator(s)
+    "calibrations": {},    # backend -> affine (a, b) in log1p space
 }
 
 
@@ -153,7 +177,10 @@ def upgrade_record(record: dict) -> dict:
     written before the fleet subsystem keep working unmodified on disk.
 
     v2 -> v3: synthesize a zeroed ``faults`` block — a pre-hardening cycle
-    recorded no fault provenance, which reads as "none observed"."""
+    recorded no fault provenance, which reads as "none observed".
+
+    v3 -> v4: synthesize an all-clear ``transfer`` block — a pre-transfer
+    cycle never detected a new backend profile nor ran a calibration."""
     if record.get("schema_version", 1) >= STATE_SCHEMA_VERSION:
         return record
     record = dict(record)
@@ -166,6 +193,8 @@ def upgrade_record(record: dict) -> dict:
         "releases": 0,
     }})
     record.setdefault("faults", dict(ZERO_FAULTS))
+    record.setdefault("transfer", {**ZERO_TRANSFER, "new_profiles": [],
+                                   "calibrations": {}})
     record["schema_version"] = STATE_SCHEMA_VERSION
     return record
 

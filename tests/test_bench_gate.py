@@ -123,6 +123,44 @@ def _pipeline_art():
             "max_stall_reduction": max(reduction.values())}
 
 
+def _transfer_art():
+    folds = {}
+    zero = {"tmpfs": 60.0, "disk": 25.0, "network_sim": 30.0,
+            "object_sim": 300.0}
+    for backend, k0 in zero.items():
+        k25 = round(k0 / (4.0 if backend in ("tmpfs", "object_sim") else 1.3), 4)
+        folds[backend] = {
+            "n_train": 144, "n_test": 48, "n_eval": 23, "n_calib_pool": 25,
+            "zoo": {"xgboost": {"r2": 0.7, "mape": k0, "median_ape": k0 / 2}},
+            "calibration": {
+                "curve": {
+                    "k0": {"mape": k0, "median_ape": k0 / 2, "r2": 0.7},
+                    "k25": {"mape": k25, "median_ape": k25 / 2, "r2": 0.9},
+                },
+                "calibrators": {"k25": {"kind": "affine", "a": 1.0,
+                                        "b": 0.5, "n": 25}},
+                "mape_reduction": {"k25": round(k0 / k25, 4)},
+                "mape_reduction_k25": round(k0 / k25, 4),
+            },
+        }
+    reductions = {b: f["calibration"]["mape_reduction_k25"]
+                  for b, f in folds.items()}
+    return {
+        "schema": 1,
+        "n_per_backend": 48,
+        "report": {
+            "schema": 1, "group_key": "backend", "seed": 0, "ks": [0, 25],
+            "n_rows": 192, "n_features": 16, "models": ["xgboost"],
+            "calibration_model": "xgboost", "calibrator": "affine",
+            "folds": folds,
+            "max_mape_reduction_k25": max(reductions.values()),
+        },
+        "fold_seconds": {b: 1.5 for b in zero},
+        "mape_reduction_k25": reductions,
+        "max_mape_reduction_k25": max(reductions.values()),
+    }
+
+
 @pytest.fixture()
 def arts(tmp_path):
     committed = tmp_path / "repo"
@@ -135,6 +173,7 @@ def arts(tmp_path):
         (d / "BENCH_fleet.json").write_text(json.dumps(_fleet_art()))
         (d / "BENCH_serve.json").write_text(json.dumps(_serve_art()))
         (d / "BENCH_pipeline.json").write_text(json.dumps(_pipeline_art()))
+        (d / "BENCH_transfer.json").write_text(json.dumps(_transfer_art()))
     return committed, fresh
 
 
@@ -380,6 +419,65 @@ def test_gate_catches_pipeline_stall_regression(arts):
     gate = bench_gate.run_gate(fresh, committed)
     assert not gate.hard
     assert any("object_sim.w1.depth.stall" in m for m in gate.soft)
+
+
+def test_gate_hard_fails_when_transfer_fold_is_dropped(arts):
+    """The fast transfer run silently dropping a held-out backend fold (say
+    object_sim — the one the calibration claim rests on) must hard-fail."""
+    committed, fresh = arts
+    art = _transfer_art()
+    del art["report"]["folds"]["object_sim"]
+    del art["fold_seconds"]["object_sim"]
+    del art["mape_reduction_k25"]["object_sim"]
+    _rewrite(fresh, "BENCH_transfer.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("'object_sim'" in m and "dropped" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_when_committed_calibration_below_floor(arts):
+    """The committed calibrated-vs-zero-shot MAPE reduction dipping below
+    the 1.5x floor on every fold means few-shot calibration stopped paying."""
+    committed, fresh = arts
+    art = _transfer_art()
+    art["mape_reduction_k25"] = {k: 1.1 for k in art["mape_reduction_k25"]}
+    _rewrite(committed, "BENCH_transfer.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("MAPE reduction" in m and "below the required" in m
+               for m in gate.hard)
+
+
+def test_gate_flags_fresh_calibration_collapse(arts):
+    """A fresh run where calibration barely improves on zero-shot is a
+    regression flag (CI-sized track noise), not a hard failure."""
+    committed, fresh = arts
+    art = _transfer_art()
+    art["mape_reduction_k25"] = {k: 1.05 for k in art["mape_reduction_k25"]}
+    _rewrite(fresh, "BENCH_transfer.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("transfer: fresh calibrated-vs-zero-shot" in m
+               for m in gate.soft)
+
+
+def test_gate_hard_fails_on_bad_transfer_zero_shot_mape(arts):
+    committed, fresh = arts
+    art = _transfer_art()
+    art["report"]["folds"]["disk"]["calibration"]["curve"]["k0"]["mape"] = 0.0
+    _rewrite(fresh, "BENCH_transfer.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("disk fresh zero-shot mape" in m for m in gate.hard)
+
+
+def test_gate_catches_transfer_fold_slowdown(arts):
+    """One fold's wall-clock blowing up 10x against the machine factor is a
+    regression after calibration against the other folds."""
+    committed, fresh = arts
+    art = _transfer_art()
+    art["fold_seconds"]["network_sim"] *= 10.0
+    _rewrite(fresh, "BENCH_transfer.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("network_sim.fold" in m for m in gate.soft)
 
 
 def test_gate_hard_fails_when_required_fast_row_is_dropped(arts):

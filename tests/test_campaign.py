@@ -10,6 +10,7 @@ from repro.core.features import FEATURE_NAMES, TARGET_NAME
 from repro.data.campaign import (
     RunContext,
     completed_keys,
+    format_backends,
     load_records,
     main as campaign_main,
     run_campaign,
@@ -263,6 +264,65 @@ def test_summarize_groups_and_failures(tmp_path):
     assert report["n_ok"] == 5 and report["n_failed"] == 0
     (g,) = report["groups"].values()
     assert g["failures"] == 0
+
+
+def test_summarize_by_backend_breakdown(tmp_path):
+    """Per-backend rows/error-rate breakdown (transfer-split auditability)."""
+    camp = Campaign(
+        "multi", "two-backend campaign",
+        lambda fast=False: tuple(
+            BenchCase(id=f"m-{i:02d}", bench_type="concurrent",
+                      backend="tmpfs" if i % 2 == 0 else "disk")
+            for i in range(6)
+        ),
+    )
+    out = tmp_path / "mb.jsonl"
+
+    def flaky(case, ctx, seed):
+        if case.backend == "disk" and case.id.endswith("05"):
+            raise ValueError("disk boom")
+        return {TARGET_NAME: 5.0, "bench_type": case.bench_type,
+                "backend": case.backend}
+
+    run_campaign(camp, out, executor=flaky)
+    report = summarize(load_records(out), corrupt_lines=2)
+    assert sorted(report["backends"]) == ["disk", "tmpfs"]
+    assert report["backends"]["tmpfs"] == {
+        "rows": 3, "failures": 0, "quarantined": 0, "retried": 0,
+        "error_rate": 0.0,
+    }
+    disk = report["backends"]["disk"]
+    assert disk["rows"] == 2 and disk["failures"] == 1
+    assert disk["error_rate"] == pytest.approx(1 / 3, abs=1e-6)
+    # corrupt_lines is file-level, surfaced alongside (not split across) backends
+    assert report["corrupt_lines"] == 2
+    table = format_backends(report)
+    assert "corrupt_lines=2" in table and "disk" in table and "tmpfs" in table
+
+
+def test_cli_summarize_by_backend(tmp_path, capsys):
+    camp = Campaign(
+        "multi2", "two-backend campaign",
+        lambda fast=False: tuple(
+            BenchCase(id=f"n-{i:02d}", bench_type="concurrent",
+                      backend="tmpfs" if i < 2 else "disk")
+            for i in range(4)
+        ),
+    )
+    out = tmp_path / "nb.jsonl"
+    run_campaign(camp, out, executor=_ok_executor([]))
+    assert campaign_main(["summarize", "--out", str(out), "--by-backend"]) == 0
+    text = capsys.readouterr().out
+    assert "backend" in text and "err_rate" in text
+    assert campaign_main(
+        ["summarize", "--out", str(out), "--by-backend", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload == {
+        "tmpfs": {"rows": 2, "failures": 0, "quarantined": 0, "retried": 0,
+                  "error_rate": 0.0},
+        "disk": {"rows": 2, "failures": 0, "quarantined": 0, "retried": 0,
+                 "error_rate": 0.0},
+    }
 
 
 # ---------------------------------------------------------------- end-to-end

@@ -308,6 +308,65 @@ def test_loop_refit_guard_rejects_poisoned_rows(tmp_path):
     assert records[-1]["n_observations"] == 10  # 12 rows - 2 rejected
 
 
+def test_kill_mid_calibration_resumes_without_double_counting(tmp_path):
+    """A crash inside the few-shot calibration (after the cycle's rows are on
+    disk, before the cycle record lands) must not double-count calibration
+    rows on resume: the re-run cycle calibrates once, from the same rows, and
+    the state file's total matches an uninterrupted run exactly."""
+    def switching(case, ctx, seed):
+        backend = "syn_a" if seed < 1100 else "syn_b"
+        scale = 1.0 if backend == "syn_a" else 3.0
+        thr = scale * 100.0 * (1 + case.num_workers) * (1 + 0.002 * (seed % 5))
+        return {TARGET_NAME: thr, "batch_size": case.batch_size,
+                "num_workers": case.num_workers, "block_kb": case.block_kb,
+                "file_size_mb": 8.0, "bench_type": "pipeline",
+                "backend": backend}
+
+    def cfg_for(name):
+        return LoopConfig(out_dir=tmp_path / name, campaign=_campaign(),
+                          cycles=2, space=_space(), min_observations=6,
+                          refit_every=6)
+
+    clean = ContinuousTuningLoop(cfg_for("clean"), executor=switching).run()
+    assert clean[1]["transfer"]["calibrated"]
+    clean_rows = sum(c["transfer"]["calibration_rows"] for c in clean)
+
+    # crash mid-calibration: cycle 1's shard data is durable, its record is
+    # not — the moral equivalent of kill -9 inside _transfer_step
+    from repro.core.transfer import AffineCalibrator
+    from repro.service import loop as loop_mod
+
+    class _Killed(RuntimeError):
+        pass
+
+    class _CrashingCalibrator(AffineCalibrator):
+        def fit(self, X, pred_log, y_log):
+            raise _Killed("kill -9 mid-calibration")
+
+    cfg = cfg_for("chaos")
+    orig = loop_mod.AffineCalibrator
+    loop_mod.AffineCalibrator = _CrashingCalibrator
+    try:
+        with pytest.raises(_Killed):
+            ContinuousTuningLoop(cfg, executor=switching).run()
+    finally:
+        loop_mod.AffineCalibrator = orig
+    st = LoopState(cfg.out_dir / "loop_state.jsonl")
+    assert st.next_cycle() == 1  # cycle 1 never completed
+
+    # resume: the re-run cycle re-detects syn_b and calibrates exactly once
+    calls = []
+    rest = ContinuousTuningLoop(cfg, executor=lambda c, x, s:
+                                (calls.append(s), switching(c, x, s))[1]).run()
+    assert [r["cycle"] for r in rest] == [1]
+    assert rest[0]["transfer"]["calibrated"]
+    resumed = st.cycles()
+    assert sum(c["transfer"]["calibration_rows"] for c in resumed) == clean_rows
+    assert resumed[1]["transfer"] == clean[1]["transfer"]
+    # cycle 1's rows were already durable: nothing was re-collected
+    assert 1000 not in set(calls)
+
+
 def test_autotuner_rollback_restores_previous_generation():
     """``rollback()`` republishes the previous model under a *new*
     generation (cache invalidation must fire), flags the tuner degraded, and

@@ -214,6 +214,122 @@ def test_loop_merged_dataset_dedups_shards(tmp_path):
     assert all(row[TARGET_NAME] > 0 for row in rows)
 
 
+# ------------------------------------------------- transfer (schema v4)
+
+
+def _backend_switch_executor(switch_seed):
+    """Rows report backend ``syn_a`` below ``switch_seed`` and ``syn_b`` at or
+    above it — the cycle whose seed window crosses the switch introduces a
+    never-before-seen backend profile mid-run (3x the throughput scale, the
+    multiplicative shift few-shot calibration repairs)."""
+    def ex(case, ctx, seed):
+        backend = "syn_a" if seed < switch_seed else "syn_b"
+        scale = 1.0 if backend == "syn_a" else 3.0
+        thr = scale * 100.0 * (1 + case.num_workers) * (1 + 0.002 * (seed % 5))
+        return {TARGET_NAME: thr, "batch_size": case.batch_size,
+                "num_workers": case.num_workers, "block_kb": case.block_kb,
+                "file_size_mb": 8.0, "bench_type": "pipeline",
+                "backend": backend}
+    return ex
+
+
+def test_new_backend_profile_calibrates_instead_of_refitting(tmp_path):
+    """Cycle 2's seed window (1200+) introduces backend ``syn_b``: the loop
+    must fit a few-shot affine calibration from that cycle's rows and skip
+    the scheduled refit, recording both in the v4 ``transfer`` block."""
+    cfg = _cfg(tmp_path / "xfer")
+    loop = ContinuousTuningLoop(cfg, executor=_backend_switch_executor(1200))
+    records = loop.run()
+
+    t0, t1, t2 = (r["transfer"] for r in records)
+    # cycle 0: first profile appears before any model exists -> no calibration
+    assert t0["new_profiles"] == ["syn_a"] and t0["known_profiles"] == 1
+    assert not t0["calibrated"] and records[0]["refit"]
+    # cycle 1: nothing new
+    assert t1["new_profiles"] == [] and not t1["calibrated"]
+    # cycle 2: syn_b appears with a fitted model -> calibrate, skip refit
+    assert t2["new_profiles"] == ["syn_b"] and t2["known_profiles"] == 2
+    assert t2["calibrated"] and not records[2]["refit"]
+    assert 0 < t2["calibration_rows"] <= cfg.calibration_k
+    cal = t2["calibrations"]["syn_b"]
+    assert cal["kind"] == "affine" and cal["n"] == t2["calibration_rows"]
+    assert "syn_b" in loop.calibrators and loop.calibrators["syn_b"].a > 0
+    # the state file round-trips the transfer block at schema v4
+    st = LoopState(cfg.out_dir / "loop_state.jsonl")
+    stored = st.cycles()
+    assert all(c["schema_version"] == 4 for c in stored)
+    assert stored[2]["transfer"] == t2
+
+
+def test_calibration_k_zero_disables_calibration(tmp_path):
+    cfg = _cfg(tmp_path / "nok", calibration_k=0)
+    records = ContinuousTuningLoop(
+        cfg, executor=_backend_switch_executor(1200)).run()
+    t2 = records[2]["transfer"]
+    assert t2["new_profiles"] == ["syn_b"]
+    assert not t2["calibrated"] and t2["calibrations"] == {}
+    assert records[2]["refit"]  # the scheduled refit ran as usual
+
+
+def test_resume_replays_calibration_decision(tmp_path):
+    """Kill after the calibration cycle: the warm-started resume must rebuild
+    the same known-profile set and skipped-refit schedule, so the remaining
+    cycles reach the same decisions as an uninterrupted run."""
+    cfg = _cfg(tmp_path / "xkill", cycles=4)
+    ex = _backend_switch_executor(1200)
+    first = ContinuousTuningLoop(cfg, executor=ex).run(max_cycles=3)
+    assert first[2]["transfer"]["calibrated"]
+    rest = ContinuousTuningLoop(cfg, executor=ex).run()
+    assert [r["cycle"] for r in rest] == [3]
+    # syn_b is known after resume: no re-calibration, refits resume
+    assert rest[0]["transfer"]["new_profiles"] == []
+    assert not rest[0]["transfer"]["calibrated"]
+
+    straight = ContinuousTuningLoop(
+        _cfg(tmp_path / "xstraight", cycles=4), executor=ex).run()
+    resumed = LoopState(cfg.out_dir / "loop_state.jsonl").cycles()
+    for a, b in zip(straight, resumed):
+        assert _decision_view(a) == _decision_view(b)
+        assert a["transfer"] == b["transfer"]
+        assert a["refit"] == b["refit"]
+
+
+def test_state_upgrades_v1_v2_v3_to_v4(tmp_path):
+    """Records written by every previous schema read back as v4 with the
+    synthesized provenance blocks, idempotently."""
+    from repro.service.state import (
+        STATE_SCHEMA_VERSION, ZERO_FAULTS, ZERO_TRANSFER, upgrade_record,
+    )
+
+    st = LoopState(tmp_path / "state.jsonl")
+    st.append({"schema_version": 1, "cycle": 0, "status": "ok",
+               "host": "box-a", "n_executed": 4, "n_failures": 1,
+               "current_config": {"num_workers": 0}})
+    st.append({"schema_version": 2, "cycle": 1, "status": "ok",
+               "collectors": 2, "releases": 0, "hosts": {},
+               "current_config": {"num_workers": 2}})
+    st.append({"schema_version": 3, "cycle": 2, "status": "ok",
+               "collectors": 1, "releases": 0, "hosts": {},
+               "faults": {**ZERO_FAULTS, "retried": 3},
+               "current_config": {"num_workers": 4}})
+    v1, v2, v3 = st.cycles()
+    assert all(c["schema_version"] == STATE_SCHEMA_VERSION
+               for c in (v1, v2, v3))
+    # v1 grew the per-host block from its flat fields
+    assert v1["hosts"]["host_0"] == {"host": "box-a", "n_executed": 4,
+                                     "n_failures": 1, "releases": 0}
+    # pre-hardening/pre-transfer records read as all-clear
+    assert v1["faults"] == ZERO_FAULTS and v2["faults"] == ZERO_FAULTS
+    assert v3["faults"]["retried"] == 3  # existing blocks are preserved
+    for c in (v1, v2, v3):
+        assert c["transfer"] == ZERO_TRANSFER
+    # upgrades are idempotent and never alias the zero blocks
+    assert upgrade_record(v1) == v1
+    v1["transfer"]["new_profiles"].append("mutated")
+    assert ZERO_TRANSFER["new_profiles"] == []
+    assert v2["transfer"]["new_profiles"] == []
+
+
 # ---------------------------------------------------------------- state
 
 

@@ -1,0 +1,327 @@
+"""Cross-backend transfer semantics (``repro.core.transfer``): fold
+disjointness/completeness, byte-identical report determinism, the few-shot
+calibration learning curve, host profiles, and the CLI."""
+
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.features import (
+    FEATURE_NAMES,
+    HOST_PROFILE_FEATURE_NAMES,
+    TARGET_NAME,
+    TRANSFER_FEATURE_NAMES,
+    transfer_spec,
+)
+from repro.core.transfer import (
+    AffineCalibrator,
+    BACKEND_CLASSES,
+    ResidualGBTCalibrator,
+    SYNTHETIC_BACKENDS,
+    backend_class,
+    default_profiles,
+    evaluate_transfer,
+    format_report,
+    group_folds,
+    main as transfer_main,
+    make_calibrator,
+    measure_host_profile,
+    observations_from_records,
+    profile_for_backend,
+    synthetic_transfer_observations,
+)
+
+FAST_MODELS = ("linear", "ridge")
+
+
+@pytest.fixture(scope="module")
+def synth():
+    """Small synthetic track shared by the harness tests (module-scoped:
+    generation is cheap, but the fitted folds are not)."""
+    return synthetic_transfer_observations(n_per_backend=48, seed=0)
+
+
+@pytest.fixture(scope="module")
+def report(synth):
+    obs, groups = synth
+    return evaluate_transfer(obs, groups, models=FAST_MODELS,
+                             calibration_model="xgboost", seed=0)
+
+
+# ---------------------------------------------------------------- features
+
+def test_transfer_spec_extends_paper_spec():
+    spec = transfer_spec()
+    assert spec.names[: len(FEATURE_NAMES)] == FEATURE_NAMES
+    assert spec.names == TRANSFER_FEATURE_NAMES
+    assert set(HOST_PROFILE_FEATURE_NAMES) <= set(spec.names)
+    assert spec.n_features == len(FEATURE_NAMES) + len(HOST_PROFILE_FEATURE_NAMES)
+
+
+def test_backend_class_codes_stable_and_disjoint():
+    for name, code in BACKEND_CLASSES.items():
+        assert backend_class(name) == code
+    # unknown backends: stable across calls, never colliding with the four
+    assert backend_class("lustre_fs") == backend_class("lustre_fs")
+    assert backend_class("lustre_fs") >= 4
+    assert backend_class("lustre_fs") != backend_class("beegfs")
+
+
+def test_default_profiles_cover_shipped_backends():
+    profiles = default_profiles()
+    assert set(profiles) == set(SYNTHETIC_BACKENDS)
+    for name, prof in profiles.items():
+        feats = prof.as_features()
+        assert set(feats) == set(HOST_PROFILE_FEATURE_NAMES)
+        assert feats["baseline_read_mb_s"] > 0
+    # tiers are ordered: tmpfs > disk > network_sim > object_sim
+    reads = [profiles[n].baseline_read_mb_s for n in SYNTHETIC_BACKENDS]
+    assert reads == sorted(reads, reverse=True)
+
+
+def test_profile_for_unknown_backend_synthesized():
+    prof = profile_for_backend("exotic_store")
+    assert prof.backend == "exotic_store"
+    assert prof.backend_class == backend_class("exotic_store")
+    assert prof.baseline_read_mb_s == 0.0  # "never measured"
+
+
+def test_measure_host_profile_real_io(tmp_path):
+    from repro.data.storage import StorageBackend
+
+    backend = StorageBackend("disk_t", tmp_path)
+    prof = measure_host_profile(backend, size_mb=0.5, block_kb=64)
+    assert prof.backend == "disk_t"
+    assert prof.baseline_read_mb_s > 0 and prof.baseline_write_mb_s > 0
+    assert prof.cpu_count >= 1
+    assert not list(tmp_path.glob("hostprofile_*"))  # probe file cleaned up
+
+
+# ------------------------------------------------------------------ folds
+
+def test_group_folds_disjoint_and_complete(synth):
+    _, groups = synth
+    folds = group_folds(groups)
+    assert set(folds) == set(SYNTHETIC_BACKENDS)
+    all_idx = np.concatenate(list(folds.values()))
+    assert len(all_idx) == len(groups)
+    assert len(set(all_idx.tolist())) == len(groups)  # disjoint
+    for g, ix in folds.items():
+        assert all(groups[i] == g for i in ix.tolist())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(["a", "b", "c", "d"]), min_size=2, max_size=64))
+def test_every_row_in_exactly_one_fold(labels):
+    """Property: each observation lands in exactly one held-out fold."""
+    folds = group_folds(labels)
+    seen = [i for ix in folds.values() for i in ix.tolist()]
+    assert sorted(seen) == list(range(len(labels)))
+    for g, ix in folds.items():
+        assert {labels[i] for i in ix.tolist()} == {g}
+
+
+# ------------------------------------------------------------- calibrators
+
+def test_affine_calibrator_k0_is_identity():
+    cal = AffineCalibrator()
+    p = np.linspace(1.0, 5.0, 7)
+    assert np.allclose(cal.apply(None, p), p)
+    cal.fit(None, np.empty(0), np.empty(0))
+    assert np.allclose(cal.apply(None, p), p)
+
+
+def test_affine_calibrator_single_row_is_offset_only():
+    cal = AffineCalibrator().fit(None, np.asarray([2.0]), np.asarray([3.5]))
+    assert cal.a == 1.0 and cal.b == pytest.approx(1.5)
+
+
+def test_affine_calibrator_recovers_scale_shift():
+    rng = np.random.default_rng(0)
+    p = rng.uniform(1.0, 6.0, 40)
+    y = 1.3 * p + 0.7
+    cal = AffineCalibrator().fit(None, p, y)
+    assert cal.a == pytest.approx(1.3, abs=1e-9)
+    assert cal.b == pytest.approx(0.7, abs=1e-9)
+    assert np.allclose(cal.apply(None, p), y)
+
+
+def test_affine_calibrator_never_inverts_ordering():
+    # anti-correlated residuals would fit a <= 0: fall back to offset-only
+    p = np.asarray([1.0, 2.0, 3.0, 4.0])
+    y = np.asarray([4.0, 3.0, 2.0, 1.0])
+    cal = AffineCalibrator().fit(None, p, y)
+    assert cal.a == 1.0  # monotone by construction
+    out = cal.apply(None, p)
+    assert np.all(np.diff(out) > 0)  # ranking preserved
+
+
+def test_gbt_calibrator_degrades_to_affine_below_min_rows():
+    X = np.random.default_rng(1).uniform(size=(8, 3))
+    p = np.linspace(1.0, 3.0, 8)
+    cal = ResidualGBTCalibrator(min_rows=16).fit(X, p, p + 0.5)
+    assert cal.model is None
+    assert cal.as_dict()["estimators"] == 0
+    assert np.allclose(cal.apply(X, p), p + 0.5)
+
+
+def test_gbt_calibrator_fits_residual_structure():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(size=(64, 3))
+    p = rng.uniform(1.0, 4.0, 64)
+    y = p + np.where(X[:, 0] > 0.5, 1.0, -1.0)  # knob-dependent residual
+    cal = ResidualGBTCalibrator(min_rows=16).fit(X, p, y)
+    assert cal.model is not None
+    err = np.abs(cal.apply(X, p) - y)
+    base = np.abs(AffineCalibrator().fit(X, p, y).apply(X, p) - y)
+    assert err.mean() < base.mean()
+
+
+def test_make_calibrator_rejects_unknown_kind():
+    assert make_calibrator("affine").kind == "affine"
+    assert make_calibrator("gbt").kind == "gbt"
+    with pytest.raises(ValueError, match="unknown calibrator"):
+        make_calibrator("quantile")
+
+
+# ---------------------------------------------------------------- harness
+
+def test_report_covers_all_folds_and_models(report):
+    assert set(report["folds"]) == set(SYNTHETIC_BACKENDS)
+    for fold in report["folds"].values():
+        assert set(fold["zoo"]) == set(FAST_MODELS)
+        assert fold["n_train"] + fold["n_test"] == report["n_rows"]
+        assert fold["n_eval"] >= fold["n_test"] // 4
+        curve = fold["calibration"]["curve"]
+        assert "k0" in curve
+        for point in curve.values():
+            assert np.isfinite(point["mape"]) and point["mape"] >= 0
+
+
+def test_report_is_deterministic(synth):
+    obs, groups = synth
+    a = evaluate_transfer(obs, groups, models=FAST_MODELS, seed=0)
+    b = evaluate_transfer(obs, groups, models=FAST_MODELS, seed=0)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_timings_stay_out_of_the_report(synth):
+    obs, groups = synth
+    timings = {}
+    with_t = evaluate_transfer(obs, groups, models=FAST_MODELS, seed=0,
+                               timings=timings)
+    without = evaluate_transfer(obs, groups, models=FAST_MODELS, seed=0)
+    assert json.dumps(with_t, sort_keys=True) == json.dumps(without, sort_keys=True)
+    assert set(timings) == set(SYNTHETIC_BACKENDS)
+    assert all(t > 0 for t in timings.values())
+
+
+def test_calibration_curve_monotone_on_synthetic_track(synth):
+    """k=25 must beat zero-shot where transfer actually fails: the scale
+    extremes (tmpfs, object_sim) force the tree model to extrapolate, and
+    the backend scale is a pure log-space shift — exactly what the affine
+    correction removes.  Interior folds sit inside the training range, so
+    calibration is allowed to be a wash there, but never much worse."""
+    obs, groups = synth
+    rep = evaluate_transfer(obs, groups, models=("xgboost",), ks=(0, 25),
+                            calibration_model="xgboost", seed=0)
+    for gname, fold in rep["folds"].items():
+        curve = fold["calibration"]["curve"]
+        if gname in ("tmpfs", "object_sim"):  # extrapolated folds
+            assert curve["k25"]["mape"] <= curve["k0"]["mape"], gname
+        else:
+            assert curve["k25"]["mape"] <= 1.2 * curve["k0"]["mape"], gname
+    assert rep["max_mape_reduction_k25"] >= 1.5
+
+
+def test_evaluate_transfer_input_validation(synth):
+    obs, groups = synth
+    with pytest.raises(ValueError, match="groups length"):
+        evaluate_transfer(obs, groups[:-1], models=FAST_MODELS)
+    with pytest.raises(ValueError, match=">= 2 distinct groups"):
+        evaluate_transfer(obs, ["only"] * len(groups), models=FAST_MODELS)
+    with pytest.raises(ValueError, match="negative"):
+        evaluate_transfer(obs, groups, models=FAST_MODELS, ks=(0, -5))
+
+
+def test_observations_from_records_roundtrip():
+    records = []
+    for i, backend in enumerate(("tmpfs", "disk")):
+        for j in range(3):
+            row = {name: float(i + j + 1) for name in FEATURE_NAMES}
+            row.update({TARGET_NAME: 100.0 * (i + 1), "backend": backend})
+            records.append({"status": "ok", "row": row,
+                            "host": f"host{i}", "case_id": f"c{i}{j}"})
+    records.append({"status": "error", "case_id": "bad"})  # skipped
+    obs, groups = observations_from_records(records)
+    assert groups == ["tmpfs"] * 3 + ["disk"] * 3
+    assert set(obs) == set(TRANSFER_FEATURE_NAMES) | {TARGET_NAME}
+    assert obs["backend_class"].tolist() == [0.0] * 3 + [1.0] * 3
+    assert obs["baseline_read_mb_s"][0] > obs["baseline_read_mb_s"][3]
+    by_host, hosts = observations_from_records(records, group_key="host")
+    assert hosts == ["host0"] * 3 + ["host1"] * 3
+
+
+def test_format_report_lists_every_fold(report):
+    text = format_report(report)
+    for backend in SYNTHETIC_BACKENDS:
+        assert backend in text
+    assert "leave-one-backend-out" in text
+
+
+# -------------------------------------------------------------------- CLI
+
+def test_cli_fast_deterministic_json(tmp_path, capsys):
+    args = ["--fast", "--n-per-backend", "24", "--models", "linear", "ridge",
+            "--k", "0", "5", "--json"]
+    assert transfer_main(args) == 0
+    first = capsys.readouterr().out
+    assert transfer_main(args) == 0
+    second = capsys.readouterr().out
+    assert first == second  # byte-identical report
+    payload = json.loads(first)
+    assert set(payload["folds"]) == set(SYNTHETIC_BACKENDS)
+
+
+def test_cli_writes_report_file(tmp_path, capsys):
+    out = tmp_path / "transfer" / "report.json"
+    assert transfer_main(["--fast", "--n-per-backend", "16", "--models",
+                          "linear", "ridge", "--k", "0", "--out", str(out)]) == 0
+    assert "leave-one-backend-out" in capsys.readouterr().out
+    assert json.loads(out.read_text())["group_key"] == "backend"
+
+
+def test_cli_records_mode(tmp_path, capsys):
+    rows = []
+    for i, backend in enumerate(("tmpfs", "disk", "network_sim")):
+        for j in range(8):
+            row = {name: float(1 + i + 0.1 * j) for name in FEATURE_NAMES}
+            row.update({TARGET_NAME: 50.0 * (i + 1) + j, "backend": backend})
+            rows.append({"status": "ok", "row": row, "case_id": f"c{i}_{j}",
+                         "rep": 0, "seed": j})
+    path = tmp_path / "merged.jsonl"
+    path.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    assert transfer_main(["--records", str(path), "--models", "linear",
+                          "ridge", "--k", "0", "5"]) == 0
+    text = capsys.readouterr().out
+    assert "network_sim" in text
+
+
+def test_cli_errors_are_usage_exits(tmp_path, capsys):
+    assert transfer_main(["--records", str(tmp_path / "nope.jsonl")]) == 2
+    assert "no such result file" in capsys.readouterr().err
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert transfer_main(["--records", str(empty)]) == 2
+    assert "no successful observation rows" in capsys.readouterr().err
+    # single-group records cannot be folded
+    row = {name: 1.0 for name in FEATURE_NAMES}
+    row.update({TARGET_NAME: 10.0, "backend": "tmpfs"})
+    single = tmp_path / "single.jsonl"
+    single.write_text(json.dumps({"status": "ok", "row": row,
+                                  "case_id": "c0"}) + "\n")
+    assert transfer_main(["--records", str(single), "--models", "linear"]) == 2
+    assert "2 distinct groups" in capsys.readouterr().err
