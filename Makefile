@@ -3,10 +3,13 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 BENCH_FAST_DIR ?= /tmp/repro_io/bench_fast
 BENCH_GATE_FLAGS ?=
 
-.PHONY: test bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke prefetch-smoke chaos-smoke transfer-smoke docs-check dev-deps
+.PHONY: test native-check bench-fast bench-gate campaign-smoke loop-smoke fleet-smoke serve-smoke prefetch-smoke chaos-smoke transfer-smoke docs-check dev-deps
 
 test:  ## tier-1 suite (ROADMAP verify command)
 	$(PYTHON) -m pytest -x -q
+
+native-check:  ## fail if a C compiler is present but the native tree kernels won't load
+	$(PYTHON) tools/native_check.py
 
 bench-fast:  ## per-figure paper benchmarks, CI-sized; leaves fresh BENCH_*.json in $(BENCH_FAST_DIR)
 	$(PYTHON) -m benchmarks.run --fast --artifact-dir $(BENCH_FAST_DIR)

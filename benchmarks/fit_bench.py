@@ -15,6 +15,7 @@ correctness regression and hard-fails the CI gate (``tools/bench_gate.py``).
 
 from __future__ import annotations
 
+import os
 import pathlib
 from typing import Dict, List, Optional, Tuple
 
@@ -25,6 +26,46 @@ from ._util import emit_artifact, time_once as _time_once
 Row = Tuple[str, float, str]
 
 ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fit.json"
+
+# Thread count for the threaded-fit rows (REPRO_NATIVE_THREADS); the gate
+# enforces the >=1.5x speedup floor only on rows recorded with cores >= 2 —
+# a single-core recording machine can still prove bit-exactness, and CI's
+# multi-core runners provide the fresh speedup evidence.
+BENCH_THREADS = 4
+
+
+def _cores() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # pragma: no cover - non-Linux
+        return os.cpu_count() or 1
+
+
+def _fit_times_threads(model_ctor, X, y, threads: int, reps: int = 2):
+    """({"t1": s, "tN": s}, identical) for the batched engine at
+    REPRO_NATIVE_THREADS=1 vs =threads (env re-read at fit time)."""
+    times: Dict[str, List[float]] = {"t1": [], "tN": []}
+    models: Dict[str, object] = {}
+    prev = os.environ.get("REPRO_NATIVE_THREADS")
+    try:
+        for _ in range(reps):
+            for key, nt in (("t1", 1), ("tN", threads)):
+                os.environ["REPRO_NATIVE_THREADS"] = str(nt)
+                m = model_ctor(engine="batched")
+                times[key].append(_time_once(lambda: m.fit(X, y)))
+                models[key] = m
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_NATIVE_THREADS", None)
+        else:
+            os.environ["REPRO_NATIVE_THREADS"] = prev
+    ref = models["t1"].ensemble
+    identical = all(
+        np.array_equal(np.asarray(getattr(ref, f)),
+                       np.asarray(getattr(models["tN"].ensemble, f)))
+        for f in ("feature", "threshold", "left", "right", "value")
+    )
+    return {k: min(ts) for k, ts in times.items()}, identical
 
 
 def _synth(n: int, d: int = 11, seed: int = 0):
@@ -71,6 +112,7 @@ def bench_fit(fast: bool, artifact_dir: Optional[pathlib.Path] = None) -> List[R
         "schema": 2,
         "native_kernels": _native.available(),
         "fit": {},
+        "threads": {},
         "recommend": {},
     }
 
@@ -163,6 +205,41 @@ def bench_fit(fast: bool, artifact_dir: Optional[pathlib.Path] = None) -> List[R
                 "identical_trees": identical,
             }
 
+    # -- threaded native fit: REPRO_NATIVE_THREADS=1 vs =N ----------------
+    # Only the batched engine is timed (the native kernels are its hot
+    # path); every row also proves the threaded fit is byte-identical to
+    # the single-threaded one — the gate hard-fails on identical=false.
+    threaded = [
+        ("rf_paper_n1024_b100", 1024, 100, lambda engine: RandomForestRegressor(
+            RFConfig(n_estimators=100, seed=0), engine=engine)),
+        ("rf_paper_n10000_b100", 10_000, 100, lambda engine: RandomForestRegressor(
+            RFConfig(n_estimators=100, seed=0), engine=engine)),
+        ("gbt_paper_full_n10000_b100", 10_000, 100, lambda engine: GBTRegressor(
+            GBTConfig(n_estimators=100, seed=0), engine=engine)),
+    ]
+    cores = _cores()
+    for name, n, ne, ctor in threaded:
+        if fast and n != 1024:
+            continue
+        X, y = _synth(n)
+        t, identical = _fit_times_threads(
+            ctor, X, y, BENCH_THREADS, reps=1 if fast else 2)
+        sp = t["t1"] / t["tN"]
+        rows.append((
+            f"fit_threads_{name}", t["tN"] * 1e6,
+            f"threads={BENCH_THREADS} cores={cores} t1_us={t['t1'] * 1e6:.0f} "
+            f"speedup_threads={sp:.2f}x identical={identical}",
+        ))
+        art["threads"][name] = {
+            "n": n, "estimators": ne,
+            "threads": BENCH_THREADS, "cores": cores,
+            "native": _native.available(),
+            "t1_s": round(t["t1"], 4),
+            "tN_s": round(t["tN"], 4),
+            "speedup_threads": round(sp, 2),
+            "identical_trees": identical,
+        }
+
     # -- recommend() serving latency ------------------------------------
     n_obs = 141
     Xo, yo = _synth(n_obs)
@@ -198,6 +275,66 @@ def bench_fit(fast: bool, artifact_dir: Optional[pathlib.Path] = None) -> List[R
                 "candidates": ncand, "best_ms": round(best * 1e3, 3),
                 "configs_per_s": round(ncand / best),
             }
+
+    # -- mega-grid recommend: chunked packed-ensemble vs argpartition ----
+    # The tentpole claim: at 10^5-10^6 candidates, the chunked float32
+    # scorer (Pallas kernel on TPU, jitted dense descent elsewhere) beats
+    # the monolithic numpy/argpartition path >= 1.5x AND picks the same
+    # top-k.  Fast mode measures the 10^5 grid; full runs the 10^6 grid.
+    mega_grids = {
+        "1e5": ConfigSpace(
+            batch_size=(16, 24, 32, 48, 64, 96, 128, 192, 256, 384),
+            num_workers=(0, 1, 2, 3, 4, 6, 8, 12, 16, 24),
+            block_kb=(4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048),
+            n_threads=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32),
+            prefetch_depth=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32)),  # 10^5
+        "1e6": ConfigSpace(
+            batch_size=(16, 24, 32, 48, 64, 96, 128, 192, 256, 384),
+            num_workers=(0, 1, 2, 3, 4, 6, 8, 12, 16, 24),
+            block_kb=(4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048),
+            n_threads=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32),
+            prefetch_depth=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32),
+            prefetch_policy=(0, 1),
+            lookahead_batches=(4, 8, 16, 32, 64)),  # 10^6
+    }
+    if fast:
+        mega_grids.pop("1e6")
+    else:
+        mega_grids.pop("1e5")
+    pred = IOPerformancePredictor(model="xgboost").fit(cols)
+
+    def _topk_key(rs):
+        return [tuple(sorted((k, v) for k, v in r.items()
+                             if k != "predicted_throughput_mb_s")) for r in rs]
+
+    mega_reps = 3 if fast else 5
+    for gname, space in mega_grids.items():
+        # warm both scorers: jit compiles + knob-column/matrix caches
+        r_base = recommend(pred, ctx, space, top_k=5, scorer="oracle")
+        r_mega = recommend(pred, ctx, space, top_k=5)  # auto -> chunked/pallas
+        topk_match = _topk_key(r_base) == _topk_key(r_mega)
+        t_base = min(_time_once(
+            lambda: recommend(pred, ctx, space, top_k=5, scorer="oracle"))
+            for _ in range(mega_reps))
+        t_mega = min(_time_once(
+            lambda: recommend(pred, ctx, space, top_k=5))
+            for _ in range(mega_reps))
+        sp = t_base / t_mega
+        ncand = space.n_candidates
+        rows.append((
+            f"recommend_xgboost_mega_{gname}", t_mega * 1e6,
+            f"candidates={ncand} configs_per_s={ncand / t_mega:.0f} "
+            f"argpartition_ms={t_base * 1e3:.1f} speedup_mega={sp:.2f}x "
+            f"topk_match={topk_match}",
+        ))
+        art["recommend"][f"xgboost_mega_{gname}"] = {
+            "candidates": ncand,
+            "best_ms": round(t_mega * 1e3, 3),
+            "argpartition_ms": round(t_base * 1e3, 3),
+            "speedup_mega": round(sp, 2),
+            "configs_per_s": round(ncand / t_mega),
+            "topk_match": topk_match,
+        }
 
     row = emit_artifact(art, "BENCH_fit.json", fast, artifact_dir, ARTIFACT,
                         "fit_artifact")

@@ -18,6 +18,23 @@ compile error, load error, failed self-test — silently disables the native
 path; the numpy implementation in ``tree.py`` is always available and
 produces identical results.  ``REPRO_TREE_NATIVE=0`` disables it explicitly.
 
+Threading
+---------
+``segment_sums``, ``split_finder`` and ``partition`` accept a worker-thread
+count (``REPRO_NATIVE_THREADS``, re-read at every fit — see
+:func:`native_threads`).  Parallelism is *ownership partitioning*: the work
+items (candidate nodes for ``split_finder``/``partition``, segments for
+``segment_sums``) are split into contiguous chunks balanced by row count, and
+each item is processed end-to-end by exactly one thread running the identical
+sequential code — per-node G/H histogram accumulation stays in ascending-row
+order, the per-node feature scan stays feature-major, and every result is
+written to its fixed output slot.  No partial sum ever crosses a thread
+boundary, so the combination order is the single-threaded order by
+construction and results are bit-identical for any thread count (the
+load-time self-test proves this for threads ∈ {1, 3}).  Threads are spawned
+with raw ``pthread_create`` per call (no OpenMP runtime dependency); a failed
+spawn degrades to inline execution of that chunk.
+
 Kernels:
 
 - ``segment_sums``: per-segment sums of ``vals[rows[...]]`` replicating
@@ -34,7 +51,8 @@ Kernels:
 - ``partition``: route each split node's rows left/right on its chosen
   (feature, bin) cut, emitting the next level's grouped row array
   (all-left-blocks then all-right-blocks) and per-node left counts.
-- ``relabel_dfs``: the BFS -> reference-DFS node permutation walk.
+- ``relabel_dfs``: the BFS -> reference-DFS node permutation walk (serial —
+  the walk is inherently sequential and never hot).
 """
 
 from __future__ import annotations
@@ -45,16 +63,94 @@ import os
 import pathlib
 import subprocess
 import tempfile
+import warnings
 from typing import Optional
 
 import numpy as np
 
-__all__ = ["lib", "available"]
+__all__ = ["lib", "available", "native_threads", "MAX_THREADS"]
 
 _SOURCE = r"""
 #include <stdint.h>
 #include <string.h>
 #include <math.h>
+#include <pthread.h>
+
+/* ------------------------------------------------------------------ */
+/* Worker pool: split [0, n) work items into <= nt contiguous chunks   */
+/* balanced by per-item weight and run each chunk on its own thread.   */
+/* Every item is processed by exactly one thread running the identical */
+/* sequential code, so results are bit-identical for any nt.  Chunk 0  */
+/* runs on the calling thread; a failed pthread_create degrades to     */
+/* inline execution of that chunk.                                     */
+/* ------------------------------------------------------------------ */
+
+#define WT_MAX_THREADS 64
+
+/* fn(ctx, chunk, lo, hi): process items [lo, hi) using per-thread slab
+ * `chunk` (0 <= chunk < nt) for any scratch space. */
+typedef void (*wt_fn)(void *ctx, int64_t chunk, int64_t lo, int64_t hi);
+
+typedef struct {
+    wt_fn fn;
+    void *ctx;
+    int64_t chunk, lo, hi;
+} wt_task;
+
+static void *wt_thread_main(void *arg)
+{
+    wt_task *t = (wt_task *)arg;
+    t->fn(t->ctx, t->chunk, t->lo, t->hi);
+    return NULL;
+}
+
+/* Per-item weight is wa[i] - (wb ? wb[i] : 0); wa == NULL means unit
+ * weight.  Boundaries only affect load balance, never results. */
+static void wt_run(wt_fn fn, void *ctx, int64_t n,
+                   const int64_t *wa, const int64_t *wb, int64_t nt)
+{
+    if (nt > WT_MAX_THREADS) nt = WT_MAX_THREADS;
+    if (nt > n) nt = n;
+    if (nt <= 1) {
+        fn(ctx, 0, 0, n);
+        return;
+    }
+    int64_t bounds[WT_MAX_THREADS + 1];
+    bounds[0] = 0;
+    if (wa) {
+        double total = 0.0;
+        for (int64_t i = 0; i < n; i++)
+            total += (double)(wa[i] - (wb ? wb[i] : 0));
+        double acc = 0.0;
+        int64_t c = 1;
+        for (int64_t i = 0; i < n && c < nt; i++) {
+            acc += (double)(wa[i] - (wb ? wb[i] : 0));
+            while (c < nt && acc * (double)nt >= total * (double)c)
+                bounds[c++] = i + 1;
+        }
+        while (c < nt) bounds[c++] = n;
+        bounds[nt] = n;
+    } else {
+        for (int64_t c = 1; c <= nt; c++) bounds[c] = n * c / nt;
+    }
+    pthread_t tids[WT_MAX_THREADS];
+    wt_task tasks[WT_MAX_THREADS];
+    int started[WT_MAX_THREADS];
+    for (int64_t c = 1; c < nt; c++) {
+        tasks[c].fn = fn;
+        tasks[c].ctx = ctx;
+        tasks[c].chunk = c;
+        tasks[c].lo = bounds[c];
+        tasks[c].hi = bounds[c + 1];
+        started[c] =
+            pthread_create(&tids[c], NULL, wt_thread_main, &tasks[c]) == 0;
+    }
+    fn(ctx, 0, bounds[0], bounds[1]);
+    for (int64_t c = 1; c < nt; c++) {
+        if (started[c]) pthread_join(tids[c], NULL);
+        else fn(ctx, tasks[c].chunk, tasks[c].lo, tasks[c].hi);
+    }
+}
 
 /* numpy's pairwise summation blocking (see numpy loops.c.src), including the
  * reduce-buffer behaviour of accumulating 8192-element blocks sequentially,
@@ -98,12 +194,29 @@ static double pairwise_sum_idx(const double *vals, const int64_t *rows,
     return res;
 }
 
+typedef struct {
+    const double *vals;
+    const int64_t *rows, *starts, *counts;
+    double *out;
+} ss_ctx;
+
+static void ss_range(void *arg, int64_t chunk, int64_t lo, int64_t hi)
+{
+    ss_ctx *c = (ss_ctx *)arg;
+    (void)chunk;
+    for (int64_t i = lo; i < hi; i++)
+        c->out[i] = pairwise_sum_idx(c->vals, c->rows + c->starts[i],
+                                     c->counts[i]);
+}
+
+/* Each segment is summed whole by one thread with the exact pairwise
+ * blocking above, so the result is independent of nthreads. */
 void segment_sums(const double *vals, const int64_t *rows,
                   const int64_t *starts, const int64_t *counts,
-                  int64_t nseg, double *out)
+                  int64_t nseg, double *out, int64_t nthreads)
 {
-    for (int64_t i = 0; i < nseg; i++)
-        out[i] = pairwise_sum_idx(vals, rows + starts[i], counts[i]);
+    ss_ctx c = {vals, rows, starts, counts, out};
+    wt_run(ss_range, &c, nseg, counts, NULL, nthreads);
 }
 
 /* BFS ids -> the reference engine's DFS emission order.  perm[b] is the
@@ -138,29 +251,40 @@ void relabel_dfs(int64_t nn, const int64_t *feature, const int64_t *left,
  *     0.5 * (GL*GL/(HL+lam) + GR*GR/(HR+lam) - parent) - gamma
  * Tie-breaking is first-occurrence over row-major (feature, bin) via strict
  * greater-than updates.  colmask (uint8 [M, d]) optionally restricts
- * features per node.  hist is caller scratch of 2*d*nbmax doubles. */
-void split_finder(int64_t M, int64_t d, int64_t nbmax, int64_t n,
-                  const int64_t *rstart, const int64_t *rend,
-                  const int64_t *rows, const uint16_t *xb,
-                  const double *grad, const double *hess,
-                  const double *Gn, const double *Hn, const double *Pn,
-                  const int64_t *nb, const uint8_t *colmask,
-                  double lam, double mcw, double gamma, double *hist,
-                  double *best_gain, int64_t *best_j, int64_t *best_b,
-                  double *best_hl)
+ * features per node.  hist is caller scratch of nthreads*2*d*nbmax doubles
+ * (one G/H histogram slab per worker thread); candidate nodes are divided
+ * among threads weighted by row count, each node fully owned by one
+ * thread. */
+typedef struct {
+    int64_t d, nbmax, n;
+    const int64_t *rstart, *rend, *rows;
+    const uint16_t *xb;
+    const double *grad, *hess, *Gn, *Hn, *Pn;
+    const int64_t *nb;
+    const uint8_t *colmask;
+    double lam, mcw, gamma;
+    double *hist;
+    double *best_gain;
+    int64_t *best_j, *best_b;
+    double *best_hl;
+} sf_ctx;
+
+static void sf_range(void *arg, int64_t chunk, int64_t lo, int64_t hi)
 {
-    double *gh = hist;
-    double *hh = hist + d * nbmax;
-    for (int64_t i = 0; i < M; i++) {
-        int64_t r0 = rstart[i], r1 = rend[i];
-        double G = Gn[i], H = Hn[i], parent = Pn[i];
+    sf_ctx *c = (sf_ctx *)arg;
+    int64_t d = c->d, nbmax = c->nbmax, n = c->n;
+    double *gh = c->hist + chunk * 2 * d * nbmax;
+    double *hh = gh + d * nbmax;
+    for (int64_t i = lo; i < hi; i++) {
+        int64_t r0 = c->rstart[i], r1 = c->rend[i];
+        double G = c->Gn[i], H = c->Hn[i], parent = c->Pn[i];
         memset(gh, 0, (size_t)(d * nbmax) * sizeof(double));
         memset(hh, 0, (size_t)(d * nbmax) * sizeof(double));
-        if (hess) {
+        if (c->hess) {
             for (int64_t r = r0; r < r1; r++) {
-                int64_t id = rows[r];
-                const uint16_t *xrow = xb + (id % n) * d;
-                double g = grad[id], h = hess[id];
+                int64_t id = c->rows[r];
+                const uint16_t *xrow = c->xb + (id % n) * d;
+                double g = c->grad[id], h = c->hess[id];
                 for (int64_t j = 0; j < d; j++) {
                     gh[j * nbmax + xrow[j]] += g;
                     hh[j * nbmax + xrow[j]] += h;
@@ -168,9 +292,9 @@ void split_finder(int64_t M, int64_t d, int64_t nbmax, int64_t n,
             }
         } else {
             for (int64_t r = r0; r < r1; r++) {
-                int64_t id = rows[r];
-                const uint16_t *xrow = xb + (id % n) * d;
-                double g = grad[id];
+                int64_t id = c->rows[r];
+                const uint16_t *xrow = c->xb + (id % n) * d;
+                double g = c->grad[id];
                 for (int64_t j = 0; j < d; j++) {
                     gh[j * nbmax + xrow[j]] += g;
                     hh[j * nbmax + xrow[j]] += 1.0;
@@ -180,8 +304,8 @@ void split_finder(int64_t M, int64_t d, int64_t nbmax, int64_t n,
         double bg = -INFINITY, bhl = 0.0;
         int64_t bj = 0, bb = 0;
         for (int64_t j = 0; j < d; j++) {
-            if (colmask && !colmask[i * d + j]) continue;
-            int64_t nbj = nb[j];
+            if (c->colmask && !c->colmask[i * d + j]) continue;
+            int64_t nbj = c->nb[j];
             if (nbj <= 1) continue;
             const double *ghj = gh + j * nbmax;
             const double *hhj = hh + j * nbmax;
@@ -191,13 +315,13 @@ void split_finder(int64_t M, int64_t d, int64_t nbmax, int64_t n,
             for (int64_t b = 0; b < nbj - 1; b++) {
                 GL += ghj[b];
                 HL += hhj[b];
-                if (HL < mcw) continue;
+                if (HL < c->mcw) continue;
                 double HR = H - HL;
-                if (HR < mcw) continue;
+                if (HR < c->mcw) continue;
                 double GR = G - GL;
-                double t3 = (GL * GL) / (HL + lam);
-                double t6 = (GR * GR) / (HR + lam);
-                double g = 0.5 * ((t3 + t6) - parent) - gamma;
+                double t3 = (GL * GL) / (HL + c->lam);
+                double t6 = (GR * GR) / (HR + c->lam);
+                double g = 0.5 * ((t3 + t6) - parent) - c->gamma;
                 if (g > fbg) {
                     fbg = g;
                     fb = b;
@@ -211,58 +335,137 @@ void split_finder(int64_t M, int64_t d, int64_t nbmax, int64_t n,
                 bhl = fhl;
             }
         }
-        best_gain[i] = bg;
-        best_j[i] = bj;
-        best_b[i] = bb;
-        best_hl[i] = bhl;
+        c->best_gain[i] = bg;
+        c->best_j[i] = bj;
+        c->best_b[i] = bb;
+        c->best_hl[i] = bhl;
     }
+}
+
+void split_finder(int64_t M, int64_t d, int64_t nbmax, int64_t n,
+                  const int64_t *rstart, const int64_t *rend,
+                  const int64_t *rows, const uint16_t *xb,
+                  const double *grad, const double *hess,
+                  const double *Gn, const double *Hn, const double *Pn,
+                  const int64_t *nb, const uint8_t *colmask,
+                  double lam, double mcw, double gamma, double *hist,
+                  double *best_gain, int64_t *best_j, int64_t *best_b,
+                  double *best_hl, int64_t nthreads)
+{
+    sf_ctx c = {d, nbmax, n, rstart, rend, rows, xb, grad, hess,
+                Gn, Hn, Pn, nb, colmask, lam, mcw, gamma, hist,
+                best_gain, best_j, best_b, best_hl};
+    wt_run(sf_range, &c, M, rend, rstart, nthreads);
 }
 
 /* Route each split node's rows left/right on its (feature, bin) cut.  The
  * output layout is the batched engine's next-level frontier: all left blocks
  * in node order, then all right blocks in node order, rows ascending within
- * each block.  scratch needs 2*S+2 int64. */
+ * each block.  scratch needs 2*S+2 int64.  Two parallel passes over nodes
+ * (count, then scatter into disjoint precomputed ranges) with a serial
+ * prefix-offset step between them; each node is owned by one thread in both
+ * passes, so the output is independent of nthreads. */
+typedef struct {
+    int64_t d, n;
+    const int64_t *rstart, *rend, *rows;
+    const uint16_t *xb;
+    const int64_t *sf, *sb;
+    int64_t *out_rows, *lcounts, *loff, *roff;
+} pt_ctx;
+
+static void pt_count_range(void *arg, int64_t chunk, int64_t lo, int64_t hi)
+{
+    pt_ctx *c = (pt_ctx *)arg;
+    (void)chunk;
+    for (int64_t i = lo; i < hi; i++) {
+        int64_t j = c->sf[i], b = c->sb[i], cnt = 0;
+        for (int64_t r = c->rstart[i]; r < c->rend[i]; r++) {
+            int64_t id = c->rows[r];
+            cnt += c->xb[(id % c->n) * c->d + j] <= b;
+        }
+        c->lcounts[i] = cnt;
+    }
+}
+
+static void pt_scatter_range(void *arg, int64_t chunk, int64_t lo, int64_t hi)
+{
+    pt_ctx *c = (pt_ctx *)arg;
+    (void)chunk;
+    for (int64_t i = lo; i < hi; i++) {
+        int64_t j = c->sf[i], b = c->sb[i];
+        int64_t lo_ = c->loff[i], ro_ = c->roff[i];
+        for (int64_t r = c->rstart[i]; r < c->rend[i]; r++) {
+            int64_t id = c->rows[r];
+            if (c->xb[(id % c->n) * c->d + j] <= b) c->out_rows[lo_++] = id;
+            else c->out_rows[ro_++] = id;
+        }
+    }
+}
+
 void partition(int64_t S, int64_t d, int64_t n,
                const int64_t *rstart, const int64_t *rend,
                const int64_t *rows, const uint16_t *xb,
                const int64_t *sf, const int64_t *sb,
-               int64_t *out_rows, int64_t *lcounts, int64_t *scratch)
+               int64_t *out_rows, int64_t *lcounts, int64_t *scratch,
+               int64_t nthreads)
 {
-    int64_t total = 0;
-    for (int64_t i = 0; i < S; i++) {
-        int64_t j = sf[i], b = sb[i], c = 0;
-        for (int64_t r = rstart[i]; r < rend[i]; r++) {
-            int64_t id = rows[r];
-            c += xb[(id % n) * d + j] <= b;
-        }
-        lcounts[i] = c;
-        total += rend[i] - rstart[i];
-    }
     int64_t *loff = scratch;
     int64_t *roff = scratch + S + 1;
+    pt_ctx c = {d, n, rstart, rend, rows, xb, sf, sb,
+                out_rows, lcounts, loff, roff};
+    wt_run(pt_count_range, &c, S, rend, rstart, nthreads);
     int64_t acc = 0;
     for (int64_t i = 0; i < S; i++) { loff[i] = acc; acc += lcounts[i]; }
     for (int64_t i = 0; i < S; i++) {
         roff[i] = acc;
         acc += (rend[i] - rstart[i]) - lcounts[i];
     }
-    for (int64_t i = 0; i < S; i++) {
-        int64_t j = sf[i], b = sb[i];
-        int64_t lo = loff[i], ro = roff[i];
-        for (int64_t r = rstart[i]; r < rend[i]; r++) {
-            int64_t id = rows[r];
-            if (xb[(id % n) * d + j] <= b) out_rows[lo++] = id;
-            else out_rows[ro++] = id;
-        }
-    }
-    (void)total;
+    wt_run(pt_scatter_range, &c, S, rend, rstart, nthreads);
 }
 """
 
-_CFLAGS = ["-O2", "-fPIC", "-shared", "-ffp-contract=off", "-fno-fast-math"]
+_CFLAGS = [
+    "-O2", "-fPIC", "-shared", "-pthread",
+    "-ffp-contract=off", "-fno-fast-math",
+]
+
+#: Hard cap on worker threads (tid/scratch arrays in the C pool are fixed).
+MAX_THREADS = 64
 
 _lib: Optional[ctypes.CDLL] = None
 _tried = False
+
+_warned_threads: set = set()
+
+
+def native_threads() -> int:
+    """Worker-thread count for the parallel kernels.
+
+    Reads ``REPRO_NATIVE_THREADS`` on *every* call (the kernel wrappers call
+    it per invocation, so ``os.environ`` changes take effect at the next fit
+    — mirroring ``resolve_engine``'s late read of ``REPRO_TREE_ENGINE``).
+    Values that are not positive integers (``0``, negatives, non-ints) fall
+    back to 1 with a single warning per distinct bad value.  Results are
+    bit-identical at any setting; only wall-clock changes.
+    """
+    raw = os.environ.get("REPRO_NATIVE_THREADS")
+    if raw is None:
+        return 1
+    try:
+        val = int(str(raw).strip())
+    except ValueError:
+        val = -1
+    if val < 1:
+        if raw not in _warned_threads:
+            _warned_threads.add(raw)
+            warnings.warn(
+                f"REPRO_NATIVE_THREADS={raw!r} is not a positive integer; "
+                "falling back to 1 thread",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        return 1
+    return min(val, MAX_THREADS)
 
 
 def _cache_dir() -> pathlib.Path:
@@ -310,19 +513,19 @@ _f64 = ctypes.c_double
 
 def _bind(lib: ctypes.CDLL) -> ctypes.CDLL:
     lib.segment_sums.restype = None
-    lib.segment_sums.argtypes = [_F64, _I64, _I64, _I64, _i64, _F64]
+    lib.segment_sums.argtypes = [_F64, _I64, _I64, _I64, _i64, _F64, _i64]
     lib.relabel_dfs.restype = None
     lib.relabel_dfs.argtypes = [_i64, _I64, _I64, _I64, _I64, _I64]
     lib.split_finder.restype = None
     lib.split_finder.argtypes = [
         _i64, _i64, _i64, _i64, _I64, _I64, _I64, _U16,
         _F64, _F64, _F64, _F64, _F64, _I64, _U8,
-        _f64, _f64, _f64, _F64, _F64, _I64, _I64, _F64,
+        _f64, _f64, _f64, _F64, _F64, _I64, _I64, _F64, _i64,
     ]
     lib.partition.restype = None
     lib.partition.argtypes = [
         _i64, _i64, _i64, _I64, _I64, _I64, _U16, _I64, _I64,
-        _I64, _I64, _I64,
+        _I64, _I64, _I64, _i64,
     ]
     return lib
 
@@ -336,7 +539,13 @@ def _c64(a):
 
 
 def _selftest(lib: ctypes.CDLL) -> bool:
-    """Bit-exactness probe: the native kernels must reproduce numpy exactly."""
+    """Bit-exactness probe: the native kernels must reproduce numpy exactly.
+
+    Every kernel runs at 1 and 3 worker threads; both must match the numpy
+    transcription bit-for-bit (ownership partitioning makes the threaded
+    result the single-threaded result by construction — this check keeps it
+    that way).
+    """
     rng = np.random.default_rng(20260729)
     # -- segment_sums vs np.sum over the full blocking regime ------------
     lens = np.asarray(
@@ -346,16 +555,17 @@ def _selftest(lib: ctypes.CDLL) -> bool:
     vals = rng.normal(size=total) * 10.0 ** rng.integers(-8, 8, size=total)
     rows = rng.permutation(total).astype(np.int64)
     starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
-    out = np.empty(lens.size)
-    lib.segment_sums(
-        _p(vals, _F64), _p(rows, _I64), _p(starts, _I64), _p(lens, _I64),
-        _i64(lens.size), _p(out, _F64),
-    )
     want = np.asarray(
         [vals[rows[s : s + c]].sum() for s, c in zip(starts, lens)]
     )
-    if not np.array_equal(out, want):
-        return False
+    for nt in (1, 3):
+        out = np.empty(lens.size)
+        lib.segment_sums(
+            _p(vals, _F64), _p(rows, _I64), _p(starts, _I64), _p(lens, _I64),
+            _i64(lens.size), _p(out, _F64), _i64(nt),
+        )
+        if not np.array_equal(out, want):
+            return False
     # -- split_finder + partition vs a literal numpy transcription -------
     n, d, nbmax, M = 120, 3, 9, 4
     xb = rng.integers(0, nbmax, size=(n, d)).astype(np.uint16)
@@ -372,18 +582,28 @@ def _selftest(lib: ctypes.CDLL) -> bool:
         Gn[i] = grad[rows[rstart[i] : rend[i]]].sum()
         Hn[i] = hess[rows[rstart[i] : rend[i]]].sum()
     Pn = Gn * Gn / (Hn + lam)
-    bg = np.empty(M)
-    bj = np.empty(M, np.int64)
-    bb = np.empty(M, np.int64)
-    bhl = np.empty(M)
-    lib.split_finder(
-        _i64(M), _i64(d), _i64(nbmax), _i64(n), _p(rstart, _I64),
-        _p(rend, _I64), _p(rows, _I64), _p(xb, _U16), _p(grad, _F64),
-        _p(hess, _F64), _p(Gn, _F64), _p(Hn, _F64), _p(Pn, _F64),
-        _p(nb, _I64), None, _f64(lam), _f64(mcw), _f64(gamma),
-        _p(np.empty(2 * d * nbmax), _F64),
-        _p(bg, _F64), _p(bj, _I64), _p(bb, _I64), _p(bhl, _F64),
-    )
+    ref = None
+    for nt in (1, 3):
+        bg = np.empty(M)
+        bj = np.empty(M, np.int64)
+        bb = np.empty(M, np.int64)
+        bhl = np.empty(M)
+        lib.split_finder(
+            _i64(M), _i64(d), _i64(nbmax), _i64(n), _p(rstart, _I64),
+            _p(rend, _I64), _p(rows, _I64), _p(xb, _U16), _p(grad, _F64),
+            _p(hess, _F64), _p(Gn, _F64), _p(Hn, _F64), _p(Pn, _F64),
+            _p(nb, _I64), None, _f64(lam), _f64(mcw), _f64(gamma),
+            _p(np.empty(nt * 2 * d * nbmax), _F64),
+            _p(bg, _F64), _p(bj, _I64), _p(bb, _I64), _p(bhl, _F64),
+            _i64(nt),
+        )
+        if ref is None:
+            ref = (bg.copy(), bj.copy(), bb.copy(), bhl.copy())
+        elif not all(
+            np.array_equal(a, b) for a, b in zip(ref, (bg, bj, bb, bhl))
+        ):
+            return False
+    bg, bj, bb, bhl = ref
     for i in range(M):
         best = (-np.inf, 0, 0)
         r = rows[rstart[i] : rend[i]]
@@ -410,24 +630,32 @@ def _selftest(lib: ctypes.CDLL) -> bool:
         ):
             return False
     # partition: lefts-then-rights, ascending within each block
-    out_rows = np.empty(rows.size, np.int64)
-    lcounts = np.empty(M, np.int64)
-    lib.partition(
-        _i64(M), _i64(d), _i64(n), _p(rstart, _I64), _p(rend, _I64),
-        _p(rows, _I64), _p(xb, _U16), _p(bj, _I64), _p(bb, _I64),
-        _p(out_rows, _I64), _p(lcounts, _I64),
-        _p(np.empty(2 * M + 2, np.int64), _I64),
-    )
-    lefts, rights = [], []
-    for i in range(M):
-        r = rows[rstart[i] : rend[i]]
-        go = xb[r, bj[i]] <= bb[i]
-        lefts.append(r[go])
-        rights.append(r[~go])
-        if lcounts[i] != int(go.sum()):
+    want_rows = None
+    for nt in (1, 3):
+        out_rows = np.empty(rows.size, np.int64)
+        lcounts = np.empty(M, np.int64)
+        lib.partition(
+            _i64(M), _i64(d), _i64(n), _p(rstart, _I64), _p(rend, _I64),
+            _p(rows, _I64), _p(xb, _U16), _p(bj, _I64), _p(bb, _I64),
+            _p(out_rows, _I64), _p(lcounts, _I64),
+            _p(np.empty(2 * M + 2, np.int64), _I64), _i64(nt),
+        )
+        if want_rows is None:
+            lefts, rights = [], []
+            for i in range(M):
+                r = rows[rstart[i] : rend[i]]
+                go = xb[r, bj[i]] <= bb[i]
+                lefts.append(r[go])
+                rights.append(r[~go])
+                if lcounts[i] != int(go.sum()):
+                    return False
+            want_rows = np.concatenate(lefts + rights)
+            want_lcounts = lcounts.copy()
+        if not np.array_equal(out_rows, want_rows):
             return False
-    want_rows = np.concatenate(lefts + rights)
-    return bool(np.array_equal(out_rows, want_rows))
+        if not np.array_equal(lcounts, want_lcounts):
+            return False
+    return True
 
 
 def lib() -> Optional[ctypes.CDLL]:
@@ -460,12 +688,13 @@ def available() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def segment_sums(vals, rows, starts, counts, out):
+def segment_sums(vals, rows, starts, counts, out, nthreads=None):
     """out[i] = vals[rows[starts[i]:starts[i]+counts[i]]].sum() (pairwise)."""
+    nt = native_threads() if nthreads is None else nthreads
     lib().segment_sums(
         _p(np.ascontiguousarray(vals, np.float64), _F64),
         _p(_c64(rows), _I64), _p(_c64(starts), _I64), _p(_c64(counts), _I64),
-        _i64(counts.shape[0]), _p(out, _F64),
+        _i64(counts.shape[0]), _p(out, _F64), _i64(nt),
     )
     return out
 
@@ -483,11 +712,14 @@ def relabel_dfs(feature, left, right):
 
 
 def split_finder(rstart, rend, rows, xb, grad, hess, Gn, Hn, Pn, nb, colmask,
-                 lam, mcw, gamma, out_gain, out_j, out_b, out_hl):
+                 lam, mcw, gamma, out_gain, out_j, out_b, out_hl,
+                 nthreads=None):
     M = rstart.shape[0]
     n, d = xb.shape
     nbmax = int(nb.max()) if d else 1
-    hist = np.empty(2 * d * nbmax)
+    nt = native_threads() if nthreads is None else nthreads
+    nt = max(1, min(nt, MAX_THREADS))
+    hist = np.empty(nt * 2 * d * nbmax)
     if colmask is not None:
         colmask = np.ascontiguousarray(colmask).view(np.uint8)
     lib().split_finder(
@@ -501,11 +733,11 @@ def split_finder(rstart, rend, rows, xb, grad, hess, Gn, Hn, Pn, nb, colmask,
         None if colmask is None else _p(colmask, _U8),
         _f64(lam), _f64(mcw), _f64(gamma), _p(hist, _F64),
         _p(out_gain, _F64), _p(out_j, _I64), _p(out_b, _I64),
-        _p(out_hl, _F64),
+        _p(out_hl, _F64), _i64(nt),
     )
 
 
-def partition(rstart, rend, rows, xb, sf, sb):
+def partition(rstart, rend, rows, xb, sf, sb, nthreads=None):
     """Returns (out_rows, lcounts): next-level grouped rows + left counts."""
     S = rstart.shape[0]
     n, d = xb.shape
@@ -515,10 +747,11 @@ def partition(rstart, rend, rows, xb, sf, sb):
     out_rows = np.empty(total, np.int64)
     lcounts = np.empty(S, np.int64)
     scratch = np.empty(2 * S + 2, np.int64)
+    nt = native_threads() if nthreads is None else nthreads
     lib().partition(
         _i64(S), _i64(d), _i64(n), _p(rstart, _I64), _p(rend, _I64),
         _p(_c64(rows), _I64), _p(xb, _U16), _p(_c64(sf), _I64),
         _p(_c64(sb), _I64), _p(out_rows, _I64), _p(lcounts, _I64),
-        _p(scratch, _I64),
+        _p(scratch, _I64), _i64(nt),
     )
     return out_rows, lcounts

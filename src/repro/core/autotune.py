@@ -4,11 +4,16 @@ Two layers:
 
 1. ``recommend()`` — the paper's offline use-case: enumerate a candidate grid
    of pipeline knobs, featurize each candidate, predict log-throughput with a
-   fitted ``IOPerformancePredictor``, return ranked configs.  The prediction
-   over the whole grid is ONE batched JAX ensemble inference (milliseconds for
-   10^5 candidates), and the grid's feature matrix is built once per
-   ``ConfigSpace`` and reused across calls — per ``decide()`` only the scalar
-   context columns are rewritten in place (zero per-candidate Python work).
+   fitted ``IOPerformancePredictor``, return ranked configs.  Small grids are
+   ONE batched JAX ensemble inference (milliseconds for 10^5 candidates) over
+   a cached feature matrix — per ``decide()`` only the scalar context columns
+   are rewritten in place (zero per-candidate Python work).  Mega grids
+   (``MEGA_GRID_MIN``+ candidates) with a GBT/RF predictor are scored in
+   fixed-size float32 chunks through the packed-ensemble program — the Pallas
+   one-hot-matmul kernel on TPU, the jitted dense descent elsewhere — so the
+   per-tree intermediates stay VMEM/cache-resident instead of spilling
+   O(n_candidates x n_trees) floats to DRAM; the classic numpy path remains
+   the oracle (``scorer="oracle"``).
 
 2. ``OnlineAutotuner`` — the framework integration: lives inside the trainer
    (step-granularity telemetry) or behind the ``repro.service`` loop/fleet
@@ -30,15 +35,19 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .ensemble_base import PackedEnsemble, ceil_pow2, predict_ensemble
 from .features import AUTOTUNE_FEATURE_NAMES, FeatureSpec
 from .predictor import IOPerformancePredictor, PredictorSnapshot
 
 __all__ = [
     "ConfigSpace",
     "recommend",
+    "score_grid",
     "OnlineAutotuner",
     "AutotuneDecision",
     "DEFAULT_SPACE",
+    "MEGA_GRID_MIN",
+    "MEGA_GRID_CHUNK",
 ]
 
 KNOB_NAMES = ("batch_size", "num_workers", "block_kb", "n_threads", "prefetch_depth",
@@ -136,29 +145,174 @@ class ConfigSpace:
 DEFAULT_SPACE = ConfigSpace()
 
 
+# -- mega-grid scoring -----------------------------------------------------
+# Above MEGA_GRID_MIN candidates, an ensemble-backed recommend() stops
+# materializing the [n, F] float64 matrix + one monolithic inference and
+# instead scores fixed-size float32 chunks assembled straight from the cached
+# knob columns.  Chunks are MEGA_GRID_CHUNK rows; the tail is padded to a
+# power of two (floor _MEGA_TAIL_FLOOR) so the jit cache stays logarithmic in
+# the grid size, exactly like the serving tier's micro-batch buckets.
+MEGA_GRID_MIN = 4096
+MEGA_GRID_CHUNK = 8192
+_MEGA_TAIL_FLOOR = 256
+
+
+def _packed_model(predictor) -> Optional[PackedEnsemble]:
+    """The predictor's ``PackedEnsemble`` when its ``predict`` is exactly the
+    packed-ensemble program (GBT/RF models), else ``None``."""
+    ens = getattr(getattr(predictor, "model", None), "ensemble", None)
+    return ens if isinstance(ens, PackedEnsemble) else None
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - jax is a hard dep everywhere else
+        return False
+
+
+def _resolve_scorer(scorer: str, ens: Optional[PackedEnsemble], n: int) -> str:
+    if scorer not in ("auto", "oracle", "chunked", "pallas"):
+        raise ValueError(f"unknown scorer {scorer!r}")
+    if scorer == "oracle" or ens is None:
+        return "oracle"
+    if scorer == "auto":
+        if n < MEGA_GRID_MIN:
+            return "oracle"
+        return "pallas" if _on_tpu() else "chunked"
+    return scorer
+
+
+def _score_grid_packed(
+    ens: PackedEnsemble,
+    spec: FeatureSpec,
+    space: ConfigSpace,
+    context: dict,
+    *,
+    chunk: int,
+    pallas: bool,
+) -> np.ndarray:
+    """Float32 log-space scores of every grid candidate, chunk by chunk.
+
+    Each [chunk, F] block is written into a reused float32 buffer: knob
+    columns sliced from the cached grid, context features (chunk-invariant)
+    filled once per buffer shape.  Pad rows are scored and discarded — per-row
+    descent is independent, so padding never changes a real row."""
+    n = space.n_candidates
+    cols = space.knob_columns()
+    names = spec.names
+    knob_cols = [(j, cols[name]) for j, name in enumerate(names) if name in KNOB_NAMES]
+    ctx_vals = [
+        (j, float(context.get(name, 0.0)))
+        for j, name in enumerate(names)
+        if name not in KNOB_NAMES
+    ]
+    interpret = pallas and not _on_tpu()
+    if pallas:
+        from ..kernels.gbt_predict import gbt_predict_ensemble
+    scores = np.empty(n, np.float32)
+    buffers: Dict[int, np.ndarray] = {}
+    lo = 0
+    while lo < n:
+        rows = min(chunk, n - lo)
+        padded = chunk if rows == chunk else ceil_pow2(rows, _MEGA_TAIL_FLOOR)
+        buf = buffers.get(padded)
+        if buf is None:
+            buf = np.zeros((padded, len(names)), np.float32)
+            for j, v in ctx_vals:
+                buf[:, j] = v
+            buffers[padded] = buf
+        for j, col in knob_cols:
+            buf[:rows, j] = col[lo : lo + rows]
+            if rows < padded:
+                buf[rows:, j] = 0.0
+        if pallas:
+            out = gbt_predict_ensemble(ens, buf, interpret=interpret)
+        else:
+            out = predict_ensemble(ens, buf)
+        scores[lo : lo + rows] = np.asarray(out)[:rows]
+        lo += rows
+    return scores
+
+
+def score_grid(
+    predictor,
+    context: dict,
+    space: ConfigSpace = DEFAULT_SPACE,
+    *,
+    scorer: str = "auto",
+    chunk: int = MEGA_GRID_CHUNK,
+) -> Tuple[np.ndarray, str]:
+    """Score every candidate in the grid; returns ``(scores, mode)``.
+
+    ``scores`` is [n_candidates] and monotone in predicted throughput: raw
+    MB/s float64 under ``"oracle"`` (the classic batched numpy path), float32
+    log-space ensemble outputs under ``"chunked"``/``"pallas"`` (expm1 is
+    monotone, so the ranking is the same and the mega path skips n expm1s).
+    ``scorer="auto"`` picks the packed path for ensemble models on grids of
+    ``MEGA_GRID_MIN``+ candidates — the Pallas kernel on TPU, the jitted
+    dense descent elsewhere — and the oracle otherwise; forcing
+    ``"chunked"``/``"pallas"`` on a non-ensemble model falls back to oracle.
+    """
+    ens = _packed_model(predictor)
+    mode = _resolve_scorer(scorer, ens, space.n_candidates)
+    if mode == "oracle":
+        X = space.feature_matrix(predictor.spec, context)
+        return np.asarray(predictor.predict_throughput_batch(X)), mode
+    return (
+        _score_grid_packed(
+            ens, predictor.spec, space, context, chunk=chunk,
+            pallas=(mode == "pallas"),
+        ),
+        mode,
+    )
+
+
 def recommend(
     predictor: IOPerformancePredictor,
     context: dict,
     space: ConfigSpace = DEFAULT_SPACE,
     top_k: int = 5,
+    scorer: str = "auto",
+    chunk: int = MEGA_GRID_CHUNK,
 ) -> List[dict]:
     """Ranked top-k configurations by predicted throughput.
 
-    One cached-matrix featurization + one batched ensemble inference +
-    an O(n) argpartition; only the k winning candidate dicts are built.
+    One grid scoring (see ``score_grid``) + an O(n) argpartition; only the k
+    winning candidate dicts are built.  When the mega-grid path scored in
+    float32 log space, the winners are re-scored through the oracle path so
+    the reported ``predicted_throughput_mb_s`` values are identical to what
+    the numpy baseline would report.
     """
-    X = space.feature_matrix(predictor.spec, context)
-    pred = np.asarray(predictor.predict_throughput_batch(X))
-    n = pred.shape[0]
+    scores, mode = score_grid(predictor, context, space, scorer=scorer, chunk=chunk)
+    n = scores.shape[0]
     k = min(top_k, n)
     if k < n:
-        part = np.argpartition(-pred, k - 1)[:k]
-        order = part[np.argsort(pred[part])[::-1]]
+        part = np.argpartition(-scores, k - 1)[:k]
+        order = part[np.argsort(scores[part])[::-1]]
     else:
-        order = np.argsort(pred)[::-1]
+        order = np.argsort(scores)[::-1]
+    winners = [space.candidate(i) for i in order]
+    if mode == "oracle":
+        pred_k = scores[order]
+    else:
+        names = predictor.spec.names
+        Xk = np.empty((k, len(names)), np.float64)
+        for r, cand in enumerate(winners):
+            for j, name in enumerate(names):
+                Xk[r, j] = (
+                    float(cand[name]) if name in KNOB_NAMES
+                    else float(context.get(name, 0.0))
+                )
+        pred_k = np.asarray(predictor.predict_throughput_batch(Xk))
+        resort = np.argsort(-pred_k, kind="stable")
+        winners = [winners[int(r)] for r in resort]
+        pred_k = pred_k[resort]
     return [
-        {**space.candidate(i), "predicted_throughput_mb_s": float(pred[i])}
-        for i in order
+        {**cand, "predicted_throughput_mb_s": float(pred_k[r])}
+        for r, cand in enumerate(winners)
     ]
 
 

@@ -19,7 +19,22 @@ import numpy as np
 
 from .tree import TreeArrays
 
-__all__ = ["PackedEnsemble", "pack_trees", "predict_ensemble", "predict_ensemble_np"]
+__all__ = [
+    "PackedEnsemble",
+    "pack_trees",
+    "predict_ensemble",
+    "predict_ensemble_np",
+    "ceil_pow2",
+]
+
+
+def ceil_pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor).
+
+    Shared by the serving tier's micro-batcher and the mega-grid scorer's
+    tail chunk: padding row counts to powers of two keeps the number of
+    distinct jit-compiled shapes logarithmic in the batch-size range."""
+    return 1 << max(max(int(n), int(floor)) - 1, 0).bit_length()
 
 
 @dataclasses.dataclass

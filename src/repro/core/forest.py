@@ -17,6 +17,7 @@ from .ensemble_base import PackedEnsemble, pack_trees, predict_ensemble
 from .tree import (
     BinnedData,
     TreeBuilderConfig,
+    _colsample_base,
     bin_features,
     build_forest_batched,
     build_tree,
@@ -62,20 +63,24 @@ class RandomForestRegressor:
         )
         ybar = float(y.mean())
         engine = resolve_engine(self.engine)
-        if engine == "batched" and cfg.colsample >= 1.0:
-            # All B trees in one lockstep ensemble build: the bootstrap draw
-            # order is the per-tree loop's, so these fits are bit-identical
-            # to the level/reference engines.  colsample < 1.0 keeps the
-            # per-tree loop below instead: single-tree batched builds replay
-            # the level engine's RNG stream exactly, so the seeded ensemble
-            # stays identical across batched/level regardless of engine.
+        if engine == "batched":
+            # All B trees in one lockstep ensemble build.  The per-tree loop
+            # below consumes the shared stream as (bootstrap_t, colsample
+            # base key_t) per tree; pre-drawing both in the same order here
+            # replays it exactly, and the keyed per-node column draws make
+            # the lockstep build bit-identical to the level/reference
+            # engines at any colsample.
             W = np.empty((cfg.n_estimators, n))
+            col_keys = [] if cfg.colsample < 1.0 else None
             for t in range(cfg.n_estimators):
                 W[t] = np.bincount(rng.integers(0, n, size=n), minlength=n)
+                if col_keys is not None:
+                    col_keys.append(_colsample_base(rng))
             grads = -(y - ybar)[None, :] * W
             trees = [
                 t for t, _ in build_forest_batched(
-                    binned, grads, W, tcfg, colsample=cfg.colsample
+                    binned, grads, W, tcfg,
+                    colsample=cfg.colsample, col_keys=col_keys,
                 )
             ]
         else:

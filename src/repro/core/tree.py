@@ -20,14 +20,19 @@ Two builder engines produce the same trees (see ``docs/fit-engine.md``):
 - ``"reference"``: the original per-node DFS builder, kept as the slow oracle
   for equivalence tests and benchmarks.
 
-With ``colsample == 1.0`` the two engines are bit-identical: the level-wise
-engine accumulates every histogram bin in the same ascending-row order the
+The engines are bit-identical at any ``colsample``: the level-wise engine
+accumulates every histogram bin in the same ascending-row order the
 reference's per-node ``np.bincount`` does, evaluates the gain formula with the
 same elementwise float64 operations, reproduces the reference's
 first-occurrence argmax tie-breaking, and finally relabels its breadth-first
-node ids into the reference's DFS emission order.  (With ``colsample < 1.0``
-the engines consume the column-sampling RNG in different node orders, so
-trees are equivalent in distribution but not replayable across engines.)
+node ids into the reference's DFS emission order.  Column subsampling
+(``colsample < 1.0``) is traversal-order independent by construction: each
+tree consumes exactly *one* draw from the caller's generator (a 62-bit base
+key — see ``_colsample_base``), and every node's feature subset comes from a
+fresh generator keyed on ``(base, heap path)`` (root = 1, children ``2p`` /
+``2p + 1`` — ``_colsample_cols``).  DFS, level-wise frontier, and lockstep
+batched builds therefore draw identical per-node subsets no matter what
+order they visit nodes in, so all three engines replay each other exactly.
 
 Both engines also return the per-row leaf assignment they already know from
 partitioning, so boosting (gbt.py) updates its running predictions by
@@ -133,6 +138,42 @@ def _leaf_value(G: float, H: float, lam: float) -> float:
     return float(-G / (H + lam))
 
 
+def _colsample_base(rng: np.random.Generator) -> int:
+    """The one draw a column-subsampled tree consumes from ``rng``.
+
+    Every engine draws this exactly once per tree, before expanding any node,
+    so the shared stream advances identically no matter which engine builds
+    the tree (or whether trees are built serially or in lockstep)."""
+    return int(rng.integers(0, np.int64(1) << 62))
+
+
+def _colsample_cols(base: int, path: int, d: int, k: int) -> np.ndarray:
+    """Feature subset for the node at heap ``path`` (root=1, children 2p and
+    2p+1) of the tree keyed ``base``.
+
+    A fresh generator seeded on ``(base, path)`` makes the draw a pure
+    function of tree identity and node position — independent of the order
+    nodes are visited in, which is what lets DFS (reference), frontier
+    (level), and lockstep (batched) builds produce identical subsets.
+
+    The subset is returned in ascending feature order so that the
+    reference's sequential feature loop breaks equal-gain ties the same way
+    the vectorized engines' row-major argmax does."""
+    words = [base & 0xFFFFFFFF, (base >> 32) & 0xFFFFFFFF]
+    p = int(path)
+    while True:  # low-to-high 32-bit limbs; last limb nonzero (path >= 1)
+        words.append(p & 0xFFFFFFFF)
+        p >>= 32
+        if not p:
+            break
+    return np.sort(np.random.default_rng(words).choice(d, size=k, replace=False))
+
+
+def _path_dtype(max_depth: int):
+    """Heap paths fit int64 through depth 62; Python ints beyond that."""
+    return np.int64 if max_depth <= 60 else object
+
+
 @dataclasses.dataclass
 class BinnedData:
     """Pre-binned features plus the level-wise engine's per-fit precomputes.
@@ -212,11 +253,13 @@ def _build_reference(
         return len(feature) - 1
 
     root = new_node()
-    stack = [(root, np.arange(n), 0)]
+    stack = [(root, np.arange(n), 0, 1)]  # (..., heap path)
     lam = cfg.reg_lambda
+    sample_cols = colsample < 1.0 and rng is not None
+    cs_base = _colsample_base(rng) if sample_cols else 0
 
     while stack:
-        nid, rows, depth = stack.pop()
+        nid, rows, depth, path = stack.pop()
         g = grad[rows]
         h = hess[rows]
         G, H = float(g.sum()), float(h.sum())
@@ -232,9 +275,9 @@ def _build_reference(
         best = None  # (gain, feat, bin_idx)
         if not make_leaf:
             feats = np.arange(d)
-            if colsample < 1.0 and rng is not None:
+            if sample_cols:
                 k = max(1, int(round(colsample * d)))
-                feats = rng.choice(d, size=k, replace=False)
+                feats = _colsample_cols(cs_base, path, d, k)
             for j in feats:
                 e = edges[j]
                 nb = e.size + 1
@@ -277,8 +320,8 @@ def _build_reference(
         left[nid] = lid
         right[nid] = rid
         gains[nid] = gbest
-        stack.append((lid, lrows, depth + 1))
-        stack.append((rid, rrows, depth + 1))
+        stack.append((lid, lrows, depth + 1, 2 * path))
+        stack.append((rid, rrows, depth + 1, 2 * path + 1))
 
     tree = TreeArrays(
         feature=np.asarray(feature, np.int32),
@@ -365,6 +408,7 @@ def _build_levelwise(
 
     sample_cols = colsample < 1.0 and rng is not None
     k_cols = max(1, int(round(colsample * d))) if sample_cols else d
+    cs_base = _colsample_base(rng) if sample_cols else 0
     # Rows with grad == hess == 0 (e.g. GBT's subsample mask) contribute exact
     # +0.0 to every histogram bin, so they can skip the scatter-add (they still
     # partition, for the leaf assignment).  With 0/1 hessians — GBT regression,
@@ -393,6 +437,7 @@ def _build_levelwise(
     counts = np.asarray([n], dtype=np.int64)
     level_start = 0  # BFS id of the first frontier node
     n_alloc = 1
+    paths = np.ones(1, dtype=_path_dtype(cfg.max_depth))  # heap paths
 
     for depth in range(cfg.max_depth + 1):
         F = counts.shape[0]
@@ -517,11 +562,14 @@ def _build_levelwise(
                 gain -= cfg.gamma
             gain[~ok] = -np.inf
             if sample_cols:
-                # Per-node column subsample over candidate nodes in frontier
-                # order (not the reference's DFS order — see module docstring).
+                # Per-node column subsets keyed on (tree base, heap path) —
+                # identical to the reference's DFS draws by construction.
                 col_mask = np.zeros((M, d), bool)
-                for i in (cand if dense else range(C)):
-                    col_mask[i, rng.choice(d, size=k_cols, replace=False)] = True
+                for mi, node in (
+                    zip(cand, cand) if dense else enumerate(cand)
+                ):
+                    cols = _colsample_cols(cs_base, int(paths[node]), d, k_cols)
+                    col_mask[mi, cols] = True
                 gain[~col_mask] = -np.inf
             # First-occurrence argmax over row-major (feature, bin) replicates
             # the reference tie-breaking: earliest feature whose max attains
@@ -583,6 +631,7 @@ def _build_levelwise(
         lcounts = np.add.reduceat(go_left.astype(np.int64), seg)
         srows = np.concatenate([arows[go_left], arows[~go_left]])
         counts = np.concatenate([lcounts, scounts - lcounts])
+        paths = np.concatenate([2 * paths[sn], 2 * paths[sn] + 1])
         level_start = n_alloc
         n_alloc += 2 * S
 
@@ -947,21 +996,26 @@ def build_forest_batched(
     cfg: TreeBuilderConfig,
     rngs=None,
     colsample: float = 1.0,
+    col_keys=None,
 ) -> List[Tuple[TreeArrays, np.ndarray]]:
     """Grow all ``B`` independent trees level-by-level in lockstep.
 
     ``grads``/``hesses`` are ``[B, n]`` per-tree gradient/hessian rows over
     the shared binning.  Returns one ``(tree, leaf_of_row)`` pair per tree,
-    bit-identical to running the reference builder per tree (``colsample ==
-    1.0``; with ``colsample < 1.0``, ``rngs`` must hold one generator per
-    tree, consumed per tree in BFS frontier order — the level engine's order,
-    so single-tree batched builds replay the level engine exactly).
+    bit-identical to running the reference builder per tree at any
+    ``colsample``.  With ``colsample < 1.0`` pass either ``rngs`` (one
+    generator per tree; each is consumed for exactly one ``_colsample_base``
+    draw up front) or ``col_keys`` (the base keys themselves, for callers
+    that interleave key draws with other per-tree consumption of a shared
+    stream — see ``RandomForestRegressor.fit``).  Per-node feature subsets
+    are then keyed on ``(base, heap path)``, so the lockstep build draws the
+    same subsets the serial engines draw.
 
     The heavy per-level work — per-node G/H sums, histogram + best-split
     search, and the row partition — runs in the native kernels of
     ``_native.py`` when a C compiler is available (bit-exact by construction
-    and load-time self-test), falling back to vectorized numpy layouts
-    otherwise:
+    and load-time self-test; ``REPRO_NATIVE_THREADS`` workers, re-read here
+    at every fit), falling back to vectorized numpy layouts otherwise:
 
     - *fused* (small frontiers): one scatter-add over flattened
       ``(node, feature, bin)`` keys for every candidate node of every tree,
@@ -988,8 +1042,12 @@ def build_forest_batched(
     if XbT is None:
         XbT = data._XbT = np.ascontiguousarray(Xb.T)
 
-    sample_cols = colsample < 1.0 and rngs is not None
+    sample_cols = colsample < 1.0 and (rngs is not None or col_keys is not None)
     k_cols = max(1, int(round(colsample * d))) if sample_cols else d
+    if sample_cols and col_keys is None:
+        # One base-key draw per tree, in tree order — exactly what the
+        # serial engines consume from these generators.
+        col_keys = [_colsample_base(r) for r in rngs]
     grad_flat = grads.reshape(-1)
     hess_flat = hesses.reshape(-1)
     # Integer hessians (RF bootstrap counts, GBT regression's 0/1 subsample
@@ -1017,6 +1075,10 @@ def build_forest_batched(
     counts = np.full(B, n, dtype=np.int64)
     node_tree = np.arange(B, dtype=np.int64)
     node_bfs = np.zeros(B, dtype=np.int64)  # per-tree BFS id of each node
+    node_path = (
+        np.ones(B, dtype=_path_dtype(cfg.max_depth)) if sample_cols else None
+    )
+    nthreads = _native.native_threads() if nat else 1  # re-read per fit
     n_alloc = np.ones(B, dtype=np.int64)
     leaf_flat = np.zeros(B * n, dtype=np.int64)
     H_state = hesses.sum(axis=1) if hess_int else None
@@ -1038,7 +1100,9 @@ def build_forest_batched(
         gsort = hsort = None
         G = np.empty(F)
         if nat:
-            _native.segment_sums(grad_flat, srows, starts[:-1], counts, G)
+            _native.segment_sums(
+                grad_flat, srows, starts[:-1], counts, G, nthreads=nthreads
+            )
         else:
             gsort = grad_flat if at_root else np.take(grad_flat, srows)
             _segment_sums(gsort, starts[:-1], counts, G)
@@ -1047,7 +1111,9 @@ def build_forest_batched(
         else:
             H = np.empty(F)
             if nat:
-                _native.segment_sums(hess_flat, srows, starts[:-1], counts, H)
+                _native.segment_sums(
+                    hess_flat, srows, starts[:-1], counts, H, nthreads=nthreads
+                )
             else:
                 hsort = hess_flat if at_root else np.take(hess_flat, srows)
                 _segment_sums(hsort, starts[:-1], counts, H)
@@ -1071,16 +1137,16 @@ def build_forest_batched(
         if C and nbmax > 1:
             col_mask = None
             if sample_cols:
-                # Per-tree RNG, consumed in each tree's BFS frontier order
-                # (the level engine's order), independent of tree count.
+                # Keyed per-node subsets: (tree base key, heap path) fully
+                # determine the draw, so lockstep order is irrelevant.
                 col_mask = np.zeros((C, d), bool)
-                order = np.argsort(
-                    node_tree[cand] * (np.int64(1) << 40) + node_bfs[cand],
-                    kind="stable",
-                )
-                for ci in order:
-                    t = int(node_tree[cand[ci]])
-                    col_mask[ci, rngs[t].choice(d, size=k_cols, replace=False)] = True
+                for ci in range(C):
+                    node = cand[ci]
+                    base = col_keys[int(node_tree[node])]
+                    cols = _colsample_cols(
+                        base, int(node_path[node]), d, k_cols
+                    )
+                    col_mask[ci, cols] = True
 
             best_gain = np.full(C, -np.inf)
             best_j = np.zeros(C, np.int64)
@@ -1098,7 +1164,7 @@ def build_forest_batched(
                     np.ascontiguousarray(H[cand]),
                     np.ascontiguousarray(parent_score[cand]),
                     data.nb, col_mask, lam, mcw, cfg.gamma,
-                    best_gain, best_j, best_b, best_hl,
+                    best_gain, best_j, best_b, best_hl, nthreads=nthreads,
                 )
             else:
                 _numpy_split_search(
@@ -1162,7 +1228,7 @@ def build_forest_batched(
         if nat:
             srows, lcounts = _native.partition(
                 starts[sn], starts[sn + 1], srows, Xb,
-                split_feature[sn], split_bin[sn],
+                split_feature[sn], split_bin[sn], nthreads=nthreads,
             )
         else:
             arows = srows if S == F else srows[row_split]
@@ -1175,6 +1241,10 @@ def build_forest_batched(
         counts = np.concatenate([lcounts, scounts - lcounts])
         node_tree = np.concatenate([st, st])
         node_bfs = np.concatenate([lid, rid])
+        if node_path is not None:
+            node_path = np.concatenate(
+                [2 * node_path[sn], 2 * node_path[sn] + 1]
+            )
         n_alloc += 2 * S_t
         if hess_int:
             Hl = Hl_split[sn]
@@ -1228,8 +1298,8 @@ def _build_batched(
     colsample: float,
 ) -> Tuple[TreeArrays, np.ndarray]:
     """Single-tree entry point: the batched kernel with B=1 (shares the
-    ensemble scratch via BinnedData, consumes ``rng`` in the level engine's
-    frontier order).
+    ensemble scratch via BinnedData; like every engine it consumes ``rng``
+    for exactly one base-key draw when ``colsample < 1.0``).
 
     Tiny builds delegate to the level engine: below ~50 rows the batched
     frontier bookkeeping costs more than it saves, and the two engines are

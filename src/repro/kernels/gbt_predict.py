@@ -60,6 +60,21 @@ def _gbt_kernel(x_ref, feat_ref, thr_ref, left_ref, right_ref, val_ref,
         o_ref[...] = (base_score + scale * acc_scr[...]).astype(o_ref.dtype)
 
 
+def gbt_predict_ensemble(ens, X, *, row_block: int = 256, interpret: bool = False):
+    """Score a ``PackedEnsemble`` with the one-hot-matmul kernel.
+
+    Convenience wrapper used by ``autotune.recommend``'s mega-grid path: the
+    ensemble's node tables and affine output transform map 1:1 onto the kernel
+    arguments, so callers never unpack the dataclass by hand.  ``interpret=True``
+    runs the same kernel through the Pallas interpreter off-TPU (the oracle
+    tests exercise it on CPU)."""
+    return gbt_predict(
+        X, ens.feature, ens.threshold, ens.left, ens.right, ens.value,
+        max_depth=ens.max_depth, base_score=ens.base_score, scale=ens.scale,
+        row_block=row_block, interpret=interpret,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("max_depth", "base_score", "scale", "row_block", "interpret"),

@@ -68,6 +68,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.autotune import KNOB_NAMES, ConfigSpace, OnlineAutotuner, recommend
+from ..core.ensemble_base import ceil_pow2
 from ..core.features import TARGET_NAME
 from ._cli import add_chaos_args, add_serve_args, add_tuning_args, \
     chaos_plan_from_args
@@ -468,7 +469,7 @@ class RecommendationService:
                 # (hundreds of ms) on nearly every batch under load; buckets
                 # bound the shape set to log2(max_batch).  Per-row outputs
                 # are independent, so padding never changes a real row.
-                bucket = 1 << (len(predicts) - 1).bit_length()
+                bucket = ceil_pow2(len(predicts))
                 if bucket != len(predicts):
                     X = np.concatenate(
                         [X, np.repeat(X[-1:], bucket - len(predicts), axis=0)])

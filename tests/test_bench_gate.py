@@ -43,9 +43,21 @@ def _fit_art():
                 "speedup_batched": 8.0, "identical_trees": True,
             },
         },
+        "threads": {
+            "rf_paper_n1024_b100": {
+                "n": 1024, "estimators": 100, "threads": 4, "cores": 4,
+                "native": True, "t1_s": 0.6, "tN_s": 0.2,
+                "speedup_threads": 3.0, "identical_trees": True,
+            },
+        },
         "recommend": {
             "xgboost_paper_1800": {"candidates": 1800, "best_ms": 7.0,
                                    "configs_per_s": 250000},
+            "xgboost_mega_1e5": {
+                "candidates": 100000, "best_ms": 300.0,
+                "argpartition_ms": 600.0, "speedup_mega": 2.0,
+                "configs_per_s": 333333, "topk_match": True,
+            },
         },
     }
 
@@ -478,6 +490,116 @@ def test_gate_catches_transfer_fold_slowdown(arts):
     gate = bench_gate.run_gate(fresh, committed)
     assert not gate.hard
     assert any("network_sim.fold" in m for m in gate.soft)
+
+
+# ------------------------------------------------- threaded fit + mega recommend
+
+
+def test_gate_hard_fails_when_threads_row_is_dropped(arts):
+    """The fast run silently dropping the threaded-fit row must hard-fail."""
+    committed, fresh = arts
+    art = _fit_art()
+    del art["threads"]["rf_paper_n1024_b100"]
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("threads row" in m and "silently dropped" in m
+               for m in gate.hard)
+
+
+def test_gate_hard_fails_on_non_identical_threaded_fit(arts):
+    """An injected threads-vs-single-thread divergence is a correctness
+    hard failure on either side, at any tolerance."""
+    committed, fresh = arts
+    art = _fit_art()
+    art["threads"]["rf_paper_n1024_b100"]["identical_trees"] = False
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("threads.rf_paper_n1024_b100" in m and "identical_trees" in m
+               for m in gate.hard)
+    _rewrite(fresh, "BENCH_fit.json", _fit_art())
+    _rewrite(committed, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("identical_trees is false (committed)" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_on_committed_thread_speedup_below_floor(arts):
+    """A committed multi-core threads row below 1.5x means the pool stopped
+    paying — hard failure."""
+    committed, fresh = arts
+    art = _fit_art()
+    art["threads"]["rf_paper_n1024_b100"]["speedup_threads"] = 1.1
+    _rewrite(committed, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("threads.rf_paper_n1024_b100" in m and "below the required" in m
+               for m in gate.hard)
+
+
+def test_gate_accepts_single_core_committed_threads_row(arts):
+    """A threads row recorded on one core proves bit-exactness but cannot
+    show parallel speedup — the floor must not apply there."""
+    committed, fresh = arts
+    art = _fit_art()
+    art["threads"]["rf_paper_n1024_b100"].update(
+        {"cores": 1, "speedup_threads": 0.97})
+    _rewrite(committed, "BENCH_fit.json", art)
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+
+
+def test_gate_hard_fails_on_threads_config_drift(arts):
+    committed, fresh = arts
+    art = _fit_art()
+    art["threads"]["rf_paper_n1024_b100"]["threads"] = 2
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("threads.rf_paper_n1024_b100 config drifted" in m
+               for m in gate.hard)
+
+
+def test_gate_hard_fails_when_mega_row_is_dropped(arts):
+    """The fast run silently dropping the mega-grid recommend row must
+    hard-fail."""
+    committed, fresh = arts
+    art = _fit_art()
+    del art["recommend"]["xgboost_mega_1e5"]
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("xgboost_mega_1e5" in m and "silently dropped" in m
+               for m in gate.hard)
+
+
+def test_gate_hard_fails_on_mega_topk_mismatch(arts):
+    """The chunked scorer disagreeing with the numpy oracle on the top-k is
+    a correctness hard failure, fresh or committed."""
+    committed, fresh = arts
+    art = _fit_art()
+    art["recommend"]["xgboost_mega_1e5"]["topk_match"] = False
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("topk_match is false (fresh)" in m for m in gate.hard)
+
+
+def test_gate_hard_fails_on_committed_mega_speedup_below_floor(arts):
+    committed, fresh = arts
+    art = _fit_art()
+    art["recommend"]["xgboost_mega_1e5"]["speedup_mega"] = 1.2
+    _rewrite(committed, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert any("mega-grid speedup" in m and "below the required" in m
+               for m in gate.hard)
+
+
+def test_gate_flags_fresh_mega_speedup_collapse(arts):
+    """A fresh mega-grid speedup collapse is a regression flag (runner
+    noise), not a hard failure."""
+    committed, fresh = arts
+    art = _fit_art()
+    art["recommend"]["xgboost_mega_1e5"]["speedup_mega"] = 1.05
+    _rewrite(fresh, "BENCH_fit.json", art)
+    gate = bench_gate.run_gate(fresh, committed)
+    assert not gate.hard
+    assert any("mega-grid speedup is 1.05x" in m for m in gate.soft)
 
 
 def test_gate_hard_fails_when_required_fast_row_is_dropped(arts):

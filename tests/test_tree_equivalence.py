@@ -270,19 +270,20 @@ def test_rf_all_engines_identical_bootstrap():
 
 
 def test_rf_colsample_engines_equivalent():
-    """With colsample < 1.0 the batched RF path keeps the per-tree loop, so
-    batched fits stay bit-identical to the level engine (single-tree batched
-    builds replay its RNG stream); the reference engine consumes the RNG in
-    DFS order instead (documented), so it agrees statistically, not bitwise."""
+    """With colsample < 1.0 all three engines are bit-identical: per-node
+    feature subsets are keyed on (per-tree base key, heap path), so the DFS,
+    frontier, and lockstep traversal orders draw the same subsets, and the
+    batched RF path replays the per-tree (bootstrap, base-key) stream in one
+    lockstep build — the PR 5 caveat is closed."""
     X, y = _rf_data(600, 8, seed=21)
     cfg = RFConfig(n_estimators=30, max_depth=7, colsample=0.5, seed=2)
-    m_lvl = RandomForestRegressor(cfg, engine="level").fit(X, y)
-    m_bat = RandomForestRegressor(cfg, engine="batched").fit(X, y)
-    _assert_ensembles_identical(m_bat.ensemble, m_lvl.ensemble)
     m_ref = RandomForestRegressor(cfg, engine="reference").fit(X, y)
-    base = m_ref.predict(X)
-    r2 = 1.0 - float(np.mean((m_bat.predict(X) - base) ** 2)) / float(np.var(base))
-    assert r2 > 0.9, f"colsample fit diverges from reference (r2={r2:.3f})"
+    for engine in ("level", "batched"):
+        m_e = RandomForestRegressor(cfg, engine=engine).fit(X, y)
+        _assert_ensembles_identical(m_e.ensemble, m_ref.ensemble)
+        np.testing.assert_array_equal(
+            m_e.feature_importances_, m_ref.feature_importances_
+        )
 
 
 def test_batched_single_tree_colsample_replays_level_engine():
@@ -320,6 +321,183 @@ def test_batched_numpy_fallback_matches_native(monkeypatch):
     assert not _native.available()
     m_numpy = RandomForestRegressor(cfg, engine="batched").fit(X, y)
     _assert_ensembles_identical(m_native.ensemble, m_numpy.ensemble)
+
+
+# ------------------------------------------------------------- threaded kernels
+
+
+def _fit_with_threads(monkeypatch, ctor, X, y, nt):
+    monkeypatch.setenv("REPRO_NATIVE_THREADS", str(nt))
+    return ctor().fit(X, y)
+
+
+def test_rf_paper_threads_byte_identical(monkeypatch):
+    """Determinism hammer: the paper RF config fit at REPRO_NATIVE_THREADS
+    in {1, 2, 4} is byte-identical (ownership partitioning: every node is
+    processed end-to-end by one thread, so no reduction order changes)."""
+    X, y = _data(400, 11, seed=13)
+    cfg = RFConfig(n_estimators=12, seed=4)  # paper depth/min_samples_split
+    ctor = lambda: RandomForestRegressor(cfg, engine="batched")
+    base = _fit_with_threads(monkeypatch, ctor, X, y, 1)
+    for nt in (2, 4):
+        m = _fit_with_threads(monkeypatch, ctor, X, y, nt)
+        _assert_ensembles_identical(base.ensemble, m.ensemble)
+        np.testing.assert_array_equal(
+            base.feature_importances_, m.feature_importances_
+        )
+
+
+def test_gbt_paper_threads_byte_identical(monkeypatch):
+    """Paper GBT config (subsample 0.8) at threads in {1, 2, 4}: identical."""
+    X, y = _data(400, 11, seed=23)
+    cfg = GBTConfig(n_estimators=10, seed=6)
+    ctor = lambda: GBTRegressor(cfg, engine="batched")
+    base = _fit_with_threads(monkeypatch, ctor, X, y, 1)
+    for nt in (2, 4):
+        m = _fit_with_threads(monkeypatch, ctor, X, y, nt)
+        _assert_ensembles_identical(base.ensemble, m.ensemble)
+
+
+def test_rf_colsample_threads_byte_identical(monkeypatch):
+    """colsample<1 + threads: the keyed column draws are thread-count
+    independent, so the hardest combination is still byte-identical."""
+    X, y = _rf_data(300, 8, seed=41)
+    cfg = RFConfig(n_estimators=6, max_depth=7, colsample=0.5, seed=3)
+    ctor = lambda: RandomForestRegressor(cfg, engine="batched")
+    base = _fit_with_threads(monkeypatch, ctor, X, y, 1)
+    m = _fit_with_threads(monkeypatch, ctor, X, y, 4)
+    _assert_ensembles_identical(base.ensemble, m.ensemble)
+
+
+def test_native_threads_env_read_at_fit_time(monkeypatch):
+    """REPRO_NATIVE_THREADS is re-read on every call (fit time), never
+    cached at import time, and clamps to MAX_THREADS."""
+    monkeypatch.delenv("REPRO_NATIVE_THREADS", raising=False)
+    assert _native.native_threads() == 1
+    monkeypatch.setenv("REPRO_NATIVE_THREADS", "3")
+    assert _native.native_threads() == 3
+    monkeypatch.setenv("REPRO_NATIVE_THREADS", " 8 ")
+    assert _native.native_threads() == 8
+    monkeypatch.setenv("REPRO_NATIVE_THREADS", str(10 * _native.MAX_THREADS))
+    assert _native.native_threads() == _native.MAX_THREADS
+
+
+@pytest.mark.parametrize("bad", ["0", "-2", "two", "1.5", ""])
+def test_native_threads_invalid_falls_back_with_single_warning(
+    monkeypatch, bad
+):
+    """Invalid REPRO_NATIVE_THREADS values (0, negatives, non-ints) fall
+    back to 1 thread with exactly one RuntimeWarning per distinct value —
+    mirroring the REPRO_TREE_ENGINE regression contract."""
+    monkeypatch.setattr(_native, "_warned_threads", set())
+    monkeypatch.setenv("REPRO_NATIVE_THREADS", bad)
+    with pytest.warns(RuntimeWarning, match="REPRO_NATIVE_THREADS"):
+        assert _native.native_threads() == 1
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")  # a second warning would raise
+        assert _native.native_threads() == 1
+
+
+@pytest.mark.skipif(not _native.available(), reason="native kernels unavailable")
+def test_native_kernels_threaded_match_single_thread():
+    """Direct kernel check: segment_sums / split_finder / partition produce
+    byte-identical outputs at any thread count (not just via full fits)."""
+    rng = np.random.default_rng(29)
+    n, segs = 5000, 37
+    vals = rng.normal(size=n)
+    bounds = np.sort(rng.choice(np.arange(1, n), segs - 1, replace=False))
+    starts = np.concatenate([[0], bounds]).astype(np.int64)
+    counts = np.diff(np.concatenate([starts, [n]])).astype(np.int64)
+    rows = np.arange(n, dtype=np.int64)
+    outs = []
+    for nt in (1, 2, 5):
+        out = np.empty(segs)
+        _native.segment_sums(vals, rows, starts, counts, out, nthreads=nt)
+        outs.append(out)
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+# ------------------------------------------------------------ mega-grid recommend
+
+
+def _fitted_predictor(model: str):
+    from repro.core import FEATURE_NAMES, IOPerformancePredictor
+
+    rng = np.random.default_rng(0)
+    n = 240
+    cols = {name: rng.uniform(1, 100, n) for name in FEATURE_NAMES}
+    cols["target_throughput"] = (
+        rng.uniform(10, 500, n) + 2.0 * cols[FEATURE_NAMES[0]]
+    )
+    return IOPerformancePredictor(model=model).fit(cols)
+
+
+def _topk_key(recs):
+    return [tuple(sorted((k, v) for k, v in r.items()
+                         if k != "predicted_throughput_mb_s")) for r in recs]
+
+
+@pytest.mark.parametrize("model", ["xgboost", "random_forest"])
+def test_recommend_chunked_matches_oracle_paper_grid(model):
+    """The chunked packed-ensemble scorer picks the identical top-k (and
+    reports identical values) to the numpy oracle on the paper's 1,800-config
+    grid, for both ensemble models."""
+    from repro.core import ConfigSpace, recommend
+
+    pred = _fitted_predictor(model)
+    ctx = {"throughput_mb_s": 800.0, "file_size_mb": 64.0, "iops": 5e4}
+    space = ConfigSpace()
+    r_o = recommend(pred, ctx, space, top_k=5, scorer="oracle")
+    r_c = recommend(pred, ctx, space, top_k=5, scorer="chunked")
+    assert _topk_key(r_o) == _topk_key(r_c)
+    for a, b in zip(r_o, r_c):
+        assert a["predicted_throughput_mb_s"] == pytest.approx(
+            b["predicted_throughput_mb_s"], rel=0, abs=0
+        )
+
+
+def test_recommend_pallas_kernel_matches_oracle_paper_grid():
+    """The Pallas one-hot-matmul kernel (interpret mode off-TPU) and the
+    numpy oracle pick the identical top-k on the paper 1,800-config grid."""
+    from repro.core import ConfigSpace, recommend
+
+    pred = _fitted_predictor("xgboost")
+    ctx = {"throughput_mb_s": 800.0, "file_size_mb": 64.0, "iops": 5e4}
+    space = ConfigSpace()
+    r_o = recommend(pred, ctx, space, top_k=5, scorer="oracle")
+    r_p = recommend(pred, ctx, space, top_k=5, scorer="pallas")
+    assert _topk_key(r_o) == _topk_key(r_p)
+    for a, b in zip(r_o, r_p):
+        assert a["predicted_throughput_mb_s"] == b["predicted_throughput_mb_s"]
+
+
+def test_recommend_auto_routes_and_falls_back():
+    """scorer="auto" keeps small grids and non-ensemble models on the oracle
+    path, routes mega grids through the chunked scorer, and forcing the
+    packed scorers on a linear model falls back instead of crashing."""
+    from repro.core import ConfigSpace, recommend
+    from repro.core.autotune import MEGA_GRID_MIN, score_grid
+
+    ctx = {"throughput_mb_s": 800.0, "file_size_mb": 64.0}
+    small = ConfigSpace()
+    assert small.n_candidates < MEGA_GRID_MIN
+    mega = ConfigSpace(prefetch_policy=(0, 1), lookahead_batches=(4, 8),
+                       cache_budget_mb=(32.0, 64.0))  # 1800 * 8 = 14400
+    assert mega.n_candidates >= MEGA_GRID_MIN
+    pred = _fitted_predictor("xgboost")
+    assert score_grid(pred, ctx, small)[1] == "oracle"
+    assert score_grid(pred, ctx, mega)[1] in ("chunked", "pallas")
+    r_a = recommend(pred, ctx, mega, top_k=4)
+    r_o = recommend(pred, ctx, mega, top_k=4, scorer="oracle")
+    assert _topk_key(r_a) == _topk_key(r_o)
+    lin = _fitted_predictor("linear")
+    assert score_grid(lin, ctx, mega)[1] == "oracle"
+    assert len(recommend(lin, ctx, small, top_k=3, scorer="pallas")) == 3
+    with pytest.raises(ValueError, match="unknown scorer"):
+        recommend(pred, ctx, small, scorer="warp")
 
 
 def test_segment_sums_fast_matches_loop():

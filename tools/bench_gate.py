@@ -16,6 +16,12 @@ Hard failures, independent of any tolerance:
 
 - a committed key missing from the fresh run (a benchmark silently dropped),
 - ``identical_trees: false`` anywhere (the engines diverged — correctness),
+  including the threaded-fit rows (threads=N vs threads=1 divergence),
+- ``topk_match: false`` on a mega-grid recommend row (the chunked scorer
+  and the numpy oracle disagree on the winners), or a committed mega-grid
+  speedup below 1.5x over the argpartition path,
+- a committed threaded-fit speedup below 1.5x when the row was recorded on
+  >= 2 cores with working native kernels,
 - fleet collector failures or non-finite/zero timings in the fresh run,
 - any nonzero ``corrupt_lines`` / ``quarantined`` / ``n_quarantined``
   counter anywhere in an artifact (committed or fresh): benchmark numbers
@@ -57,6 +63,20 @@ EXPECTED_FAST_FIT_KEYS = (
     "rf_paper_d10_n141",
     "rf_paper_n1024_b100",
 )
+# Threaded-fit rows the fast run must produce (BENCH_fit.json "threads"
+# section: REPRO_NATIVE_THREADS=1 vs =N on the batched engine).
+EXPECTED_FAST_THREAD_KEYS = ("rf_paper_n1024_b100",)
+# Mega-grid recommend rows the fast run must produce ("recommend" section).
+EXPECTED_FAST_MEGA_KEYS = ("xgboost_mega_1e5",)
+# Committed-artifact claims for the two PR-10 speedups.  The threaded floor
+# applies only to rows recorded with cores >= 2 and working native kernels —
+# a single-core recorder proves bit-exactness (identical_trees), while CI's
+# multi-core runners supply fresh multi-thread evidence every push.  The
+# mega-grid floor is unconditional: the chunked scorer's win over the
+# monolithic argpartition path is algorithmic (cache-resident intermediates),
+# not a core-count artifact.
+MIN_COMMITTED_THREAD_SPEEDUP = 1.5
+MIN_COMMITTED_MEGA_SPEEDUP = 1.5
 EXPECTED_FAST_FLEET_COLLECTORS = (1, 2)
 EXPECTED_FAST_LOOP_CYCLES = 2  # per track
 # Every (endpoint x mode x client-count) QPS row the serve bench must
@@ -198,7 +218,113 @@ class Gate:
                 pairs[f"recommend.{key}.best_ms"] = (
                     frow["best_ms"] / 1e3, crow["best_ms"] / 1e3
                 )
+                if "argpartition_ms" in crow and "argpartition_ms" in frow:
+                    pairs[f"recommend.{key}.argpartition_ms"] = (
+                        frow["argpartition_ms"] / 1e3,
+                        crow["argpartition_ms"] / 1e3,
+                    )
+        self._check_fit_threads(fresh, committed, pairs)
+        self._check_fit_mega(fresh, committed)
         self.compare_timings("fit", pairs)
+
+    def _check_fit_threads(
+        self, fresh: dict, committed: dict,
+        pairs: Dict[str, Tuple[float, float]],
+    ) -> None:
+        """Threaded-fit rows: dropped row / divergence / committed speedup."""
+        fthr = fresh.get("threads", {})
+        cthr = committed.get("threads", {})
+        for key in EXPECTED_FAST_THREAD_KEYS:
+            if key not in fthr:
+                self.hard_fail(
+                    f"fit: fast run is required to produce threads row {key!r} "
+                    f"but did not (threaded benchmark silently dropped?)"
+                )
+        for side, rows in (("fresh", fthr), ("committed", cthr)):
+            for key, row in rows.items():
+                if row.get("identical_trees") is False:
+                    self.hard_fail(
+                        f"fit: threads.{key} identical_trees is false ({side}) "
+                        f"— threaded fit diverged from single-threaded"
+                    )
+        if not cthr:
+            self.hard_fail(
+                "fit: committed artifact has no threads rows — the "
+                "threaded-fit claim is not recorded"
+            )
+        for key, crow in cthr.items():
+            cores = crow.get("cores", 1)
+            sp = crow.get("speedup_threads")
+            if (crow.get("native") and isinstance(cores, int) and cores >= 2
+                    and isinstance(sp, (int, float))
+                    and sp < MIN_COMMITTED_THREAD_SPEEDUP):
+                self.hard_fail(
+                    f"fit: committed threads.{key} speedup is {sp}x on "
+                    f"{cores} cores — below the required "
+                    f"{MIN_COMMITTED_THREAD_SPEEDUP}x"
+                )
+            frow = fthr.get(key)
+            if frow is None:
+                continue
+            if (frow.get("n") != crow.get("n")
+                    or frow.get("estimators") != crow.get("estimators")
+                    or frow.get("threads") != crow.get("threads")):
+                self.hard_fail(
+                    f"fit: threads.{key} config drifted "
+                    f"(fresh n={frow.get('n')} est={frow.get('estimators')} "
+                    f"threads={frow.get('threads')}, committed "
+                    f"n={crow.get('n')} est={crow.get('estimators')} "
+                    f"threads={crow.get('threads')})"
+                )
+                continue
+            for field in ("t1_s", "tN_s"):
+                if field in crow and field in frow:
+                    pairs[f"threads.{key}.{field}"] = (frow[field], crow[field])
+
+    def _check_fit_mega(self, fresh: dict, committed: dict) -> None:
+        """Mega-grid recommend rows: dropped row / top-k mismatch / speedup."""
+        frec = fresh.get("recommend", {})
+        crec = committed.get("recommend", {})
+        for key in EXPECTED_FAST_MEGA_KEYS:
+            if key not in frec:
+                self.hard_fail(
+                    f"fit: fast run is required to produce recommend row "
+                    f"{key!r} but did not (mega-grid benchmark silently "
+                    f"dropped?)"
+                )
+        mega = lambda rows: {k: r for k, r in rows.items()
+                             if "speedup_mega" in r or "topk_match" in r}
+        for side, rows in (("fresh", mega(frec)), ("committed", mega(crec))):
+            for key, row in rows.items():
+                if row.get("topk_match") is False:
+                    self.hard_fail(
+                        f"fit: recommend.{key} topk_match is false ({side}) — "
+                        f"the chunked scorer picked a different top-k than "
+                        f"the numpy oracle"
+                    )
+        cmega = mega(crec)
+        if not cmega:
+            self.hard_fail(
+                "fit: committed artifact has no mega-grid recommend row — "
+                "the chunked-scorer claim is not recorded"
+            )
+        for key, crow in cmega.items():
+            sp = crow.get("speedup_mega")
+            if not (isinstance(sp, (int, float))
+                    and sp >= MIN_COMMITTED_MEGA_SPEEDUP):
+                self.hard_fail(
+                    f"fit: committed recommend.{key} mega-grid speedup is "
+                    f"{sp!r} — below the required "
+                    f"{MIN_COMMITTED_MEGA_SPEEDUP}x over the argpartition path"
+                )
+        for key, frow in mega(frec).items():
+            sp = frow.get("speedup_mega")
+            if isinstance(sp, (int, float)) and sp < 1.2:
+                self.soft.append(
+                    f"fit: fresh recommend.{key} mega-grid speedup is {sp}x "
+                    f"(committed artifact promises "
+                    f">={MIN_COMMITTED_MEGA_SPEEDUP}x)"
+                )
 
     def check_loop(self, fresh: dict, committed: dict) -> None:
         pairs: Dict[str, Tuple[float, float]] = {}

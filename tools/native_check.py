@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Visible native-kernel health check for CI.
+
+The native tree kernels degrade silently by design: any compile/load/self-test
+failure falls back to the (bit-identical) numpy path so end users without a C
+toolchain are never broken.  CI is the one place that silence is wrong — a
+hosted runner *has* a compiler, so ``native.available() == False`` there means
+the compile broke and every native-path benchmark/test quietly stopped
+covering the C code.  This script makes that state a visible job failure:
+
+- compiler present + native kernels load  -> exit 0 (reports cache dir, threads)
+- no compiler on PATH                     -> exit 0 (numpy fallback is the
+                                             supported configuration)
+- REPRO_TREE_NATIVE=0                     -> exit 0 (explicitly disabled)
+- compiler present + kernels unavailable  -> exit 1 (the silent-fallback bug)
+
+Usage: PYTHONPATH=src python tools/native_check.py  (or ``make native-check``)
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+
+
+def main() -> int:
+    compiler = next(
+        (cc for cc in ("cc", "gcc", "clang") if shutil.which(cc)), None
+    )
+    if os.environ.get("REPRO_TREE_NATIVE", "").strip() == "0":
+        print("native-check: REPRO_TREE_NATIVE=0 — native kernels explicitly "
+              "disabled, numpy fallback in use (ok)")
+        return 0
+
+    from repro.core import _native
+
+    if _native.available():
+        so = getattr(_native, "_lib", None)
+        path = getattr(so, "_name", "?") if so is not None else "?"
+        print(f"native-check: native kernels loaded from {path}")
+        print(f"native-check: REPRO_NATIVE_THREADS resolves to "
+              f"{_native.native_threads()} (max {_native.MAX_THREADS})")
+        return 0
+    if compiler is None:
+        print("native-check: no C compiler on PATH — numpy fallback in use "
+              "(ok, but the native kernels are untested on this host)")
+        return 0
+    version = subprocess.run(
+        [compiler, "--version"], capture_output=True, text=True
+    ).stdout.splitlines()[:1]
+    print(f"native-check: FAIL — {compiler} is present "
+          f"({version[0] if version else 'version unknown'}) but "
+          f"native.available() is false: the kernel compile/load/self-test "
+          f"broke and the numpy fallback is masking it")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
